@@ -1,0 +1,50 @@
+"""Kernel-level microbench: quantized matmul paths + derived HBM metrics.
+
+Wall-clock on this CPU container is NOT the perf claim (the kernels target
+TPU MXU; see EXPERIMENTS.md Roofline) -- reported here are (a) CPU
+wall-times of the XLA-lowered integer pipeline for regression tracking and
+(b) the derived bytes-streamed metrics that set the TPU roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core.quantizer import quantize_weights
+from repro.kernels import ops
+
+
+def run(csv=print):
+    rng = np.random.default_rng(0)
+    m, k, n, g = 128, 2048, 2048, 64
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+
+    # fp32 baseline matmul
+    f_fp = jax.jit(lambda a, b: a @ b)
+    us = timed(f_fp, x, w)
+    csv(f"kernels/fp32_matmul_{m}x{k}x{n},{us:.1f},bytes_w={k * n * 4}")
+
+    for bits in (2, 4, 8):
+        qt = quantize_weights(w, bits, g)
+        f_q = jax.jit(lambda a, q: ops.qmatmul(a, q, backend="xla"))
+        us = timed(f_q, x, qt)
+        wb = int(np.asarray(qt.packed).nbytes + np.asarray(qt.scale_m).nbytes)
+        csv(
+            f"kernels/qmm_xla_{bits}w_{m}x{k}x{n},{us:.1f},"
+            f"bytes_w={wb};compression={k * n * 2 / wb:.2f}x_vs_bf16"
+        )
+
+    # pallas interpret-mode correctness path (small shape; CPU interpret is slow)
+    qt = quantize_weights(w[:256, :256], 2, g)
+    f_p = jax.jit(
+        lambda a, q: ops.qmatmul(a, q, backend="pallas", block_k=256)
+    )
+    us = timed(f_p, x[:32, :256], qt, reps=2)
+    csv(f"kernels/qmm_pallas_interp_2w_32x256x256,{us:.1f},interpret=True")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Sec. 3.3 performance model: fraction of multiplications replaced by
+8-bit accumulations, and the HBM weight-compression it buys.
+
+Validates the paper's two headline numbers on the exact ResNet-101 conv
+inventory (85% @ N=4, 98% @ N=64), the paper's own 50/50 3x3-1x1
+approximation, and extends the table to all ten assigned LM architectures
+(transformer projections: K^2 == 1, segment = group_size).
+"""
+from __future__ import annotations
+
+from benchmarks.common import arch_gemms
+from repro import configs
+from repro.core import stats
+
+
+def run(csv=print):
+    specs = stats.resnet101_specs()
+    for n in (4, 8, 16, 32, 64):
+        exact = stats.network_replaced_fraction(specs, n)
+        approx = stats.paper_approximation(n)
+        csv(f"op_ratio/resnet101_N{n},0,exact={exact:.4f};paper_approx={approx:.4f}")
+
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        gemms = arch_gemms(cfg)
+        for n in (4, 64, 128):
+            total, wq_frac, all_frac = stats.network_gemm_stats(gemms, n)
+            csv(
+                f"op_ratio/{arch}_N{n},0,"
+                f"macs_per_tok={total:.3e};replaced_wq={wq_frac:.4f};"
+                f"replaced_all={all_frac:.4f}"
+            )
+        # decode-phase HBM traffic for weights (the TPU payoff, DESIGN 2.1)
+        bf16 = stats.weight_bytes(gemms, 16, 64, scale_bits=0)
+        for bits in (2, 4, 8):
+            b = stats.weight_bytes(gemms, bits, 64)
+            csv(
+                f"op_ratio/{arch}_wbytes_{bits}w,0,"
+                f"bytes_per_tok={b:.3e};compression_vs_bf16={bf16 / b:.2f}x"
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Paper Fig. 1 / Sec. 3 analogue: PTQ accuracy vs weight bits and cluster
+size N -- the central accuracy claim, on a trainable-here proxy LM.
+
+Reproduces the paper's qualitative structure:
+  * 8a-8w ~ fp baseline,
+  * 8a-4w within a small gap (paper: within 2% top-1),
+  * 8a-2w (ternary) a larger gap (paper: within 6%),
+  * growing the cluster size N degrades ternary accuracy (the Sec.-3.3
+    performance/accuracy trade-off) -- the motivation for Sec. 4 retraining.
+Also reports the raw weight-reconstruction error on ResNet-101-shaped weight
+ensembles (direct Algorithm-1 validation without training in the loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import eval_loss_and_top1, tiny_lm, train_fp_baseline
+from repro.configs.base import QuantConfig
+from repro.core import quantizer
+from repro.models import build_model, quantize_model_params
+
+
+def run(csv=print):
+    cfg, api, params, dcfg, hist = train_fp_baseline(steps=150)
+    fp_loss, fp_top1 = eval_loss_and_top1(api, params, cfg, dcfg)
+    csv(f"quant_error/fp_baseline,0,loss={fp_loss:.4f};top1={fp_top1:.4f}")
+
+    for bits in (8, 4, 2):
+        for n in (4, 16, 64):
+            qc = QuantConfig(w_bits=bits, group_size=n, mode="ptq", backend="xla")
+            qcfg = dataclasses.replace(tiny_lm(), quant=qc)
+            qapi = build_model(qcfg)
+            qparams = quantize_model_params(params, qapi.ctx.policy)
+            loss, top1 = eval_loss_and_top1(qapi, qparams, qcfg, dcfg)
+            csv(
+                f"quant_error/8a-{bits}w-N{n},0,"
+                f"loss={loss:.4f};top1={top1:.4f};"
+                f"dloss={loss - fp_loss:+.4f};dtop1={top1 - fp_top1:+.4f}"
+            )
+
+    # direct Algorithm-1 reconstruction error on ResNet-101-shaped ensembles
+    rng = np.random.default_rng(0)
+    for name, (k, nout, f) in {
+        "res101_3x3x256": (256 * 9, 256, 9),
+        "res101_1x1x1024": (1024, 256, 1),
+    }.items():
+        w = jnp.asarray(rng.normal(size=(k, nout)).astype(np.float32))
+        for bits in (2, 4, 8):
+            for n in (4, 64):
+                g = n * f
+                if k % g:
+                    continue
+                err = float(
+                    quantizer.weight_quantization_error(w, bits, g, f)
+                ) / float(jnp.sum(w * w))
+                csv(f"quant_error/recon_{name}_{bits}w_N{n},0,rel_err={err:.4f}")
+    return {"fp_loss": fp_loss, "fp_top1": fp_top1}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,114 @@
+"""Shared benchmark helpers: tiny trainable LM + per-arch GEMM inventories."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, QuantConfig
+from repro.core.stats import GemmSpec
+from repro.models import build_model
+from repro.models.ssm import d_inner
+from repro.training import OptConfig, TrainConfig, Trainer
+from repro.training.data import DataConfig, make_batch
+
+
+def tiny_lm(quant: QuantConfig | None = None, group_size: int = 16) -> ArchConfig:
+    """Small-but-trainable dense LM for the accuracy-proxy experiments."""
+    return ArchConfig(
+        name="bench-lm", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab=512, head_dim=32, remat=False, dtype="float32",
+        quant=quant or QuantConfig(mode="fp", group_size=group_size),
+    )
+
+
+def train_fp_baseline(steps: int = 150, seed: int = 0):
+    """Returns (cfg, api, trained params, data config, final loss)."""
+    cfg = tiny_lm()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    dcfg = DataConfig(batch=16, seq=64, seed=seed, structure=0.9)
+    tcfg = TrainConfig(opt=OptConfig(lr=3e-3, warmup_steps=20, decay_steps=steps))
+    tr = Trainer(api.train_loss, params, tcfg)
+    hist = tr.train(lambda i: make_batch(cfg, dcfg, i), steps)
+    return cfg, api, tr.params, dcfg, hist
+
+
+def eval_loss_and_top1(api, params, cfg, dcfg, n_batches: int = 4, seed: int = 10_000):
+    """Eval CE + next-token top-1 on held-out synthetic batches."""
+    tot_loss, tot_hit, tot_n = 0.0, 0.0, 0
+    for i in range(n_batches):
+        batch = make_batch(cfg, dcfg, seed + i)
+        tot_loss += float(api.train_loss(params, batch))
+        logits = api.forward(params, batch)
+        pred = jnp.argmax(logits[..., : cfg.vocab], axis=-1)
+        tot_hit += float(jnp.mean(pred == batch["labels"]))
+        tot_n += 1
+    return tot_loss / tot_n, tot_hit / tot_n
+
+
+def arch_gemms(cfg: ArchConfig) -> List[GemmSpec]:
+    """Per-token GEMM inventory for one assigned architecture."""
+    d = cfg.d_model
+    hd = cfg.hd() if cfg.n_heads else 0
+    gemms: List[GemmSpec] = []
+    if cfg.n_heads:
+        gemms += [
+            GemmSpec("wq", d, cfg.n_heads * hd, cfg.n_layers),
+            GemmSpec("wk", d, cfg.n_kv_heads * hd, cfg.n_layers),
+            GemmSpec("wv", d, cfg.n_kv_heads * hd, cfg.n_layers),
+            GemmSpec("wo", cfg.n_heads * hd, d, cfg.n_layers),
+        ]
+    if cfg.n_experts:
+        active = cfg.top_k
+        gemms += [
+            GemmSpec("router", d, cfg.n_experts, cfg.n_layers, weight_quantized=False),
+            GemmSpec("moe_gate", d, cfg.d_ff, cfg.n_layers * active),
+            GemmSpec("moe_up", d, cfg.d_ff, cfg.n_layers * active),
+            GemmSpec("moe_down", cfg.d_ff, d, cfg.n_layers * active),
+        ]
+        if cfg.moe_dense_residual:
+            gemms += [
+                GemmSpec("res_gate", d, cfg.d_ff, cfg.n_layers),
+                GemmSpec("res_up", d, cfg.d_ff, cfg.n_layers),
+                GemmSpec("res_down", cfg.d_ff, d, cfg.n_layers),
+            ]
+    elif cfg.d_ff:
+        n_mlp = cfg.n_layers if cfg.family != "hybrid" else max(
+            1, cfg.n_layers // max(cfg.shared_attn_period, 1)
+        )
+        gemms += [
+            GemmSpec("gate", d, cfg.d_ff, n_mlp),
+            GemmSpec("up", d, cfg.d_ff, n_mlp),
+            GemmSpec("down", cfg.d_ff, d, n_mlp),
+        ]
+    if cfg.family in ("ssm", "hybrid"):
+        di = d_inner(cfg)
+        n_ssm = cfg.n_layers
+        gemms += [
+            GemmSpec("ssm_in", d, 2 * di, n_ssm),
+            GemmSpec("ssm_out", di, d, n_ssm),
+        ]
+        if cfg.ssm_version == 1:
+            rank = max(1, -(-d // 16))
+            gemms += [
+                GemmSpec("x_proj", di, rank + 2 * cfg.ssm_state, n_ssm),
+                GemmSpec("dt_proj", rank, di, n_ssm),
+            ]
+        else:
+            gemms += [GemmSpec("bc_proj", d, 2 * cfg.ssm_state, n_ssm)]
+    gemms.append(GemmSpec("lm_head", d, cfg.padded_vocab, 1, weight_quantized=False))
+    return gemms
+
+
+def timed(fn, *args, reps: int = 5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us

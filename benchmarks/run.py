@@ -1,0 +1,44 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
+  * bench_quant_error   -> Fig. 1 + Sec. 3 accuracy claims (PTQ sweep)
+  * bench_op_ratio      -> Sec. 3.3 performance model (85% / 98% numbers)
+  * bench_finetune      -> Fig. 2 + Sec. 4 (pre-initialized QAT recovery)
+  * bench_cluster_hier  -> Sec. 3.1 hierarchical-search ablation
+  * bench_kernels       -> kernel microbench + HBM compression (Sec. 3.3 /
+                           DESIGN 2.1 TPU adaptation)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_cluster_hier,
+        bench_finetune,
+        bench_kernels,
+        bench_op_ratio,
+        bench_quant_error,
+    )
+
+    print("name,us_per_call,derived")
+    for mod in (
+        bench_op_ratio,
+        bench_cluster_hier,
+        bench_kernels,
+        bench_quant_error,
+        bench_finetune,
+    ):
+        t0 = time.time()
+        mod.run(csv=print)
+        print(
+            f"_meta/{mod.__name__.split('.')[-1]}_wall_s,"
+            f"{(time.time() - t0) * 1e6:.0f},ok",
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""PTQ sweep driver: quantize a trained model at every (bits x cluster-size)
+point and print the accuracy/compression frontier (paper Figs. 1 + Sec. 3.3).
+
+  PYTHONPATH=src python examples/quantize_and_eval.py
+"""
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+
+from benchmarks.common import eval_loss_and_top1, tiny_lm, train_fp_baseline
+from repro.configs.base import QuantConfig
+from repro.models import build_model, quantize_model_params
+
+
+def main():
+    print("training fp baseline...")
+    cfg, api, params, dcfg, _ = train_fp_baseline(steps=150)
+    fp_loss, fp_top1 = eval_loss_and_top1(api, params, cfg, dcfg)
+    fp_bytes = sum(np.asarray(l).nbytes for l in jax.tree.leaves(params))
+    print(f"{'config':>16s} {'loss':>8s} {'top1':>7s} {'Δtop1':>7s} {'MB':>7s} {'x':>5s}")
+    print(f"{'fp32':>16s} {fp_loss:8.3f} {fp_top1:7.3f} {0.0:+7.3f} "
+          f"{fp_bytes / 1e6:7.2f} {1.0:5.1f}")
+    for bits in (8, 4, 2):
+        for n in (4, 16, 64):
+            qc = QuantConfig(w_bits=bits, group_size=n, mode="ptq", backend="xla")
+            qcfg = dataclasses.replace(tiny_lm(), quant=qc)
+            qapi = build_model(qcfg)
+            qp = quantize_model_params(params, qapi.ctx.policy)
+            loss, top1 = eval_loss_and_top1(qapi, qp, qcfg, dcfg)
+            qb = sum(np.asarray(l).nbytes for l in jax.tree.leaves(qp))
+            print(f"{f'8a-{bits}w N={n}':>16s} {loss:8.3f} {top1:7.3f} "
+                  f"{top1 - fp_top1:+7.3f} {qb / 1e6:7.2f} {fp_bytes / qb:5.1f}")
+
+
+if __name__ == "__main__":
+    main()

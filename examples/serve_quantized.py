@@ -1,0 +1,78 @@
+"""End-to-end serving driver (the paper is an inference paper): train a
+small LM, PTQ it to the full sub-8-bit integer pipeline, and serve batched
+requests through the continuous-batching engine.
+
+  PYTHONPATH=src python examples/serve_quantized.py [--bits 2] [--group 64]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import tiny_lm, train_fp_baseline
+from repro.configs.base import QuantConfig
+from repro.models import build_model, quantize_model_params
+from repro.serving import Request, SamplerConfig, ServingEngine
+
+
+def tree_bytes(tree):
+    return sum(np.asarray(l).nbytes for l in jax.tree.leaves(tree))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bits", type=int, default=2)
+    ap.add_argument("--group", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--train-steps", type=int, default=80)
+    args = ap.parse_args()
+
+    print(f"[1/4] training the fp baseline for {args.train_steps} steps...")
+    cfg, api, params, dcfg, hist = train_fp_baseline(steps=args.train_steps)
+    print(f"      final train loss {hist['loss'][-1]:.3f}")
+
+    print(f"[2/4] PTQ: {args.bits}-bit weights, cluster N={args.group}, 8-bit acts")
+    qc = QuantConfig(w_bits=args.bits, group_size=min(args.group, 64),
+                     mode="ptq", backend="xla")
+    qcfg = dataclasses.replace(tiny_lm(), quant=qc)
+    qapi = build_model(qcfg)
+    qparams = quantize_model_params(params, qapi.ctx.policy)
+    b_fp, b_q = tree_bytes(params), tree_bytes(qparams)
+    print(f"      params: {b_fp / 1e6:.2f} MB fp32 -> {b_q / 1e6:.2f} MB packed "
+          f"({b_fp / b_q:.1f}x)")
+
+    print(f"[3/4] serving {args.requests} requests on {args.slots} slots "
+          f"(continuous batching)...")
+    eng = ServingEngine(
+        qapi, qparams, n_slots=args.slots, max_len=96,
+        sampler=SamplerConfig(temperature=0.7, top_k=40),
+    )
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        plen = int(rng.integers(3, 12))
+        eng.submit(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab, plen).tolist(),
+            max_new_tokens=int(rng.integers(8, 24)),
+        ))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in done)
+    print(f"      {len(done)} requests, {toks} tokens in {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s on 1 CPU core, interpret-free XLA path)")
+
+    print("[4/4] sample outputs:")
+    for r in done[:3]:
+        print(f"      req {r.uid}: prompt={r.prompt[:6]}... -> {r.output}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Config registry: ``get_config(arch_id)`` / ``get_smoke(arch_id)``.
+
+Arch ids match the assignment table; ``--arch <id>`` in the launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import SHAPES, ArchConfig, QuantConfig, ShapeConfig, get_shape
+
+_MODULES: Dict[str, str] = {
+    "grok-1-314b": "grok_1_314b",
+    "arctic-480b": "arctic_480b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "qwen3-8b": "qwen3_8b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "gemma3-12b": "gemma3_12b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "zamba2-7b": "zamba2_7b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "whisper-base": "whisper_base",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def _load(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str, quant: QuantConfig | None = None) -> ArchConfig:
+    cfg = _load(arch).full()
+    if quant is not None:
+        cfg = dataclasses.replace(cfg, quant=quant)
+    return cfg
+
+
+def get_smoke(arch: str, quant: QuantConfig | None = None) -> ArchConfig:
+    cfg = _load(arch).smoke()
+    if quant is not None:
+        cfg = dataclasses.replace(cfg, quant=quant)
+    return cfg
+
+
+def cells():
+    """All assigned (arch x shape) cells with skip annotations."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            skip = None
+            if shape.name == "long_500k" and not cfg.supports_long_context():
+                skip = "pure full-attention arch: 500k decode is quadratic-cost; skipped per assignment"
+            out.append((arch, shape, skip))
+    return out
+
+
+__all__ = [
+    "ARCH_IDS",
+    "ArchConfig",
+    "QuantConfig",
+    "SHAPES",
+    "ShapeConfig",
+    "cells",
+    "get_config",
+    "get_shape",
+    "get_smoke",
+]

@@ -1,0 +1,124 @@
+"""Architecture + runtime configuration schema.
+
+One ``ArchConfig`` dataclass covers all ten assigned families (dense / MoE /
+VLM / hybrid-SSM / SSM / enc-dec audio).  Each configs/<id>.py module exports
+``full()`` (the exact published configuration) and ``smoke()`` (a reduced
+same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Paper knobs: weight bits, cluster size (group along reduction dim)."""
+
+    w_bits: int = 2  # 2 = ternary (Algorithm 1), 4, 8, 32 = off
+    act_bits: int = 8
+    group_size: int = 64  # paper's N*K^2 reduction segment per alpha
+    filter_size: int = 1  # Algorithm-2 unit within a cluster
+    refit_scale: bool = False  # beyond-paper L2 refit of alpha
+    mode: str = "fp"  # 'fp' | 'qat' | 'ptq'
+    backend: str = "auto"  # qmatmul backend for ptq
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | vlm | hybrid | ssm | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+
+    # attention flavour
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    mrope: bool = False  # qwen2-vl 3-D rotary
+    sliding_window: Optional[int] = None  # local-attention window
+    local_global_ratio: int = 0  # gemma3: N local layers per 1 global
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_dense_residual: bool = False  # arctic: dense MLP in parallel w/ MoE
+    capacity_factor: float = 1.25
+    moe_chunk_tokens: int = 65536  # dispatch chunk (bounds buffer memory)
+
+    # SSM (mamba1/mamba2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_version: int = 1  # 1 = falcon-mamba, 2 = zamba2
+    ssm_heads: int = 0  # mamba2 heads (d_inner // head size)
+
+    # hybrid (zamba2): one of ``n_shared`` shared attn blocks every period
+    shared_attn_period: int = 0
+    n_shared_blocks: int = 2
+
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    n_audio_frames: int = 1500  # encoder sequence (stub frontend output)
+
+    # modality frontend stub: 'vision' | 'audio' | None
+    frontend: Optional[str] = None
+    n_frontend_tokens: int = 0  # e.g. vision tokens prepended to text
+
+    # numerics / memory
+    dtype: str = "bfloat16"
+    kv_bits: int = 16  # 8 = DFP-quantized KV cache (per-token-head exponents)
+    remat: bool = True
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    vocab_pad_to: int = 256  # pad vocab so logits shard over 'model'
+
+    quant: QuantConfig = QuantConfig()
+
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return -(-self.vocab // m) * m if m else self.vocab
+
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic context scaling (decides the long_500k cell)."""
+        return self.family in ("ssm", "hybrid") or self.local_global_ratio > 0
+
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs decode (whisper is enc-dec)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell from the assignment."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)

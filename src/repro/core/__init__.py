@@ -1,0 +1,20 @@
+"""Core contribution of the paper: cluster-based dynamic-fixed-point
+quantization (ternary / 4-bit / 8-bit weights, 8-bit activations)."""
+from repro.core.dfp import (
+    DfpSpec,
+    choose_exponent,
+    dequantize,
+    fake_quantize,
+    qmax,
+    quantize,
+    quantize_tensor,
+)
+from repro.core.policy import FULL_PRECISION, LayerPrecision, PrecisionPolicy
+from repro.core.quantizer import (
+    QTensor,
+    decode_codes,
+    dequantize_weights,
+    fake_quantize_weights,
+    quantize_weights,
+)
+from repro.core.ternary import ternarize_matrix, ternary_dequantize

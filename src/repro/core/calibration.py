@@ -1,0 +1,99 @@
+"""Activation calibration: the paper's 8-bit DFP activations + BN-recompute
+analogue.
+
+The paper profiles activations to pick per-tensor shared exponents (dynamic
+fixed point), and *recomputes BatchNorm statistics* after quantization to
+compensate for the variance shift.  Modern LM blocks use RMSNorm without
+running statistics, so the analogue implemented here is:
+
+  1. ``Observer`` state records per-site max|x| (and mean square) over
+     calibration batches; ``finalize`` turns them into shared exponents.
+  2. ``recalibrate_gamma`` rescales a norm's gain by the ratio of
+     full-precision to quantized activation RMS at the same site -- the same
+     first-moment correction BN re-estimation performs.
+
+Observer state is a plain dict pytree: {site: {"max_abs": f32, "msq": f32,
+"count": f32}} so it jits, shards and checkpoints like any other state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfp
+
+ObserverState = Dict[str, Dict[str, jax.Array]]
+
+
+def init_observer() -> ObserverState:
+    return {}
+
+
+def observe(state: ObserverState, site: str, x: jax.Array) -> ObserverState:
+    """Record one batch at ``site`` (functional update)."""
+    entry = state.get(
+        site,
+        {
+            "max_abs": jnp.zeros((), jnp.float32),
+            "msq": jnp.zeros((), jnp.float32),
+            "count": jnp.zeros((), jnp.float32),
+        },
+    )
+    new = {
+        "max_abs": jnp.maximum(entry["max_abs"], jnp.max(jnp.abs(x))),
+        "msq": entry["msq"] + jnp.mean(jnp.square(x.astype(jnp.float32))),
+        "count": entry["count"] + 1.0,
+    }
+    out = dict(state)
+    out[site] = new
+    return out
+
+
+def finalize(state: ObserverState, bits: int = 8) -> Dict[str, jax.Array]:
+    """Per-site shared exponents from recorded ranges."""
+    return {
+        site: dfp.choose_exponent(entry["max_abs"], bits)
+        for site, entry in state.items()
+    }
+
+
+def quantize_act(x: jax.Array, e: jax.Array, bits: int = 8) -> jax.Array:
+    """Static (calibrated-exponent) activation quantization -> int8."""
+    return dfp.quantize(x, e, bits)
+
+
+def dynamic_quantize_act(x: jax.Array, bits: int = 8, per_row: bool = False):
+    """Per-batch dynamic quantization (no calibration pass needed).
+
+    per_row=True keeps one exponent per leading-axis row (per-token): tighter
+    ranges for long-context decode where token norms drift.
+    Returns (mantissa int8, exponent int32).
+    """
+    axis = tuple(range(1, x.ndim)) if per_row else None
+    if axis is None:
+        max_abs = jnp.max(jnp.abs(x))
+    else:
+        max_abs = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    e = dfp.choose_exponent(max_abs, bits)
+    return dfp.quantize(x, e, bits), e
+
+
+def fake_quantize_act(x: jax.Array, bits: int = 8, per_row: bool = False) -> jax.Array:
+    q, e = dynamic_quantize_act(x, bits, per_row)
+    return dfp.dequantize(q, e)
+
+
+def recalibrate_gamma(
+    gamma: jax.Array, rms_fp: jax.Array, rms_q: jax.Array, eps: float = 1e-6
+) -> jax.Array:
+    """BN-recompute analogue: rescale norm gain so the quantized activation
+    second moment matches the full-precision one at the same site."""
+    ratio = jnp.sqrt((rms_fp + eps) / (rms_q + eps))
+    return gamma * ratio
+
+
+def rms_from_observer(state: ObserverState, site: str) -> jax.Array:
+    entry = state[site]
+    return entry["msq"] / jnp.maximum(entry["count"], 1.0)

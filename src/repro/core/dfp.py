@@ -1,0 +1,90 @@
+"""Dynamic Fixed Point (DFP) representation.
+
+The paper represents every quantity in the integer pipeline as a block of
+integer mantissas sharing a single power-of-two exponent ("fractional
+length"):   x  ≈  q * 2**e,   q ∈ [-(2**(b-1)-1), 2**(b-1)-1].
+
+We keep the exponent as a plain int32 (one per tensor / per cluster axis) and
+mantissas as int8 (b<=8) regardless of nominal bit-width; sub-8-bit mantissas
+are range-limited and packed separately (see quantizer.py).
+
+All functions are pure jnp and jit/vmap-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Symmetric integer range for b-bit two's complement, excluding -2**(b-1) so
+# that negation is closed (the paper's fixed-point pipeline is symmetric).
+def qmax(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+def choose_exponent(max_abs: jax.Array, bits: int) -> jax.Array:
+    """Smallest power-of-two exponent e with max_abs <= qmax(bits) * 2**e.
+
+    e = ceil(log2(max_abs / qmax)).  max_abs == 0 maps to e = 0.
+    Returns int32 with the same shape as ``max_abs``.
+    """
+    m = jnp.asarray(max_abs, jnp.float32)
+    safe = jnp.maximum(m, jnp.finfo(jnp.float32).tiny)
+    e = jnp.ceil(jnp.log2(safe / qmax(bits))).astype(jnp.int32)
+    return jnp.where(m > 0, e, jnp.zeros_like(e))
+
+
+def quantize(x: jax.Array, e: jax.Array, bits: int) -> jax.Array:
+    """Round-to-nearest-even mantissas for exponent ``e`` (broadcasts)."""
+    scale = jnp.exp2(-e.astype(jnp.float32))
+    q = jnp.clip(jnp.round(x * scale), -qmax(bits), qmax(bits))
+    return q.astype(jnp.int8 if bits <= 8 else jnp.int32)
+
+
+def dequantize(q: jax.Array, e: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * jnp.exp2(e.astype(jnp.float32))
+
+
+def quantize_tensor(x: jax.Array, bits: int, axis: Optional[tuple] = None):
+    """Per-tensor (axis=None) or per-axis DFP quantization.
+
+    Returns (mantissa, exponent).  ``axis`` lists the *reduced* axes, i.e.
+    the exponent is shared across them and kept per remaining axes.
+    """
+    if axis is None:
+        max_abs = jnp.max(jnp.abs(x))
+    else:
+        max_abs = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    e = choose_exponent(max_abs, bits)
+    return quantize(x, e, bits), e
+
+
+def fake_quantize(x: jax.Array, bits: int, axis: Optional[tuple] = None) -> jax.Array:
+    """quantize->dequantize in one step (QAT forward, eval error metrics)."""
+    q, e = quantize_tensor(x, bits, axis)
+    return dequantize(q, e)
+
+
+@dataclasses.dataclass(frozen=True)
+class DfpSpec:
+    """Static description of a DFP tensor (used by policy / kernels)."""
+
+    bits: int = 8
+    # exponent granularity: 'tensor' | 'channel' (last axis) | 'row' (first)
+    granularity: str = "tensor"
+
+    def exponent_axes(self, ndim: int) -> Optional[tuple]:
+        if self.granularity == "tensor":
+            return None
+        if self.granularity == "channel":
+            return tuple(range(ndim - 1))
+        if self.granularity == "row":
+            return tuple(range(1, ndim))
+        raise ValueError(self.granularity)
+
+
+def quantization_error(x: jax.Array, bits: int, axis: Optional[tuple] = None) -> jax.Array:
+    """||x - dequant(quant(x))||_F^2 — the paper's loss metric."""
+    return jnp.sum((x - fake_quantize(x, bits, axis)) ** 2)

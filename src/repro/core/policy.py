@@ -1,0 +1,85 @@
+"""Per-layer precision policy (the paper's "C1 and BatchNorm layers" rules).
+
+The paper pins the first conv layer to 8-bit weights, keeps FC weights
+unquantized during fine-tuning, and quantizes activations everywhere.  The
+policy engine generalizes this: a default precision plus ordered regex
+overrides resolved against the layer's parameter path, e.g.
+
+    PrecisionPolicy.ternary(group_size=64).resolve("blocks/3/mlp/up")
+
+Built-in override sets encode the paper's rules mapped to LM blocks:
+embedding & first block 8-bit (C1 analogue), lm_head 8-bit (FC analogue),
+MoE router 8-bit (accuracy-critical control path), norms/biases fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Tuple
+
+FULL_PRECISION = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPrecision:
+    w_bits: int = 2
+    act_bits: int = 8
+    group_size: int = 64
+    filter_size: int = 1
+    refit_scale: bool = False
+
+    @property
+    def quantized(self) -> bool:
+        return self.w_bits < 16
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    default: LayerPrecision
+    # ordered (pattern, precision); first match wins
+    overrides: Tuple[Tuple[str, LayerPrecision], ...] = ()
+
+    def resolve(self, path: str) -> LayerPrecision:
+        for pattern, prec in self.overrides:
+            if re.search(pattern, path):
+                return prec
+        return self.default
+
+    @staticmethod
+    def paper_overrides(group_size: int) -> Tuple[Tuple[str, LayerPrecision], ...]:
+        eight = LayerPrecision(w_bits=8, act_bits=8, group_size=group_size)
+        fp = LayerPrecision(w_bits=FULL_PRECISION, act_bits=8)
+        return (
+            (r"(^|/)embed", eight),          # C1 analogue: input projection
+            (r"(^|/)blocks/0(/|$)", eight),  # first block stays 8-bit
+            (r"(^|/)lm_head", eight),        # FC analogue
+            (r"router|gate_proj_router", eight),  # MoE control path
+            (r"norm|scale|bias|conv1d|ssm/(A|D|dt)", fp),  # non-GEMM params
+            (r"frontend", eight),            # modality stubs (VLM/audio)
+        )
+
+    @classmethod
+    def ternary(cls, group_size: int = 64, filter_size: int = 1,
+                refit_scale: bool = False) -> "PrecisionPolicy":
+        return cls(
+            default=LayerPrecision(2, 8, group_size, filter_size, refit_scale),
+            overrides=cls.paper_overrides(group_size),
+        )
+
+    @classmethod
+    def int4(cls, group_size: int = 64) -> "PrecisionPolicy":
+        return cls(
+            default=LayerPrecision(4, 8, group_size),
+            overrides=cls.paper_overrides(group_size),
+        )
+
+    @classmethod
+    def int8(cls, group_size: int = 64) -> "PrecisionPolicy":
+        return cls(
+            default=LayerPrecision(8, 8, group_size),
+            overrides=cls.paper_overrides(group_size),
+        )
+
+    @classmethod
+    def full(cls) -> "PrecisionPolicy":
+        return cls(default=LayerPrecision(FULL_PRECISION, FULL_PRECISION))

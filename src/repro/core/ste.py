@@ -1,0 +1,68 @@
+"""Straight-through estimators for the paper's low-precision training (Sec. 4).
+
+Forward pass uses ternary/4-bit fake-quantized weights and 8-bit activations;
+gradients flow to the FP32 master copy unchanged (weights) or clipped to the
+representable range (activations).
+
+Weight STE is a ``jax.custom_vjp`` whose backward is identity: autodiff never
+traces inside Algorithm 1 (sorts / searchsorted are piecewise-constant anyway,
+and keeping them out of the AD graph also keeps the backward HLO small).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibration, dfp, quantizer
+
+
+def ste(x: jax.Array, quantized: jax.Array) -> jax.Array:
+    """Value of ``quantized``, gradient of ``x``."""
+    return x + jax.lax.stop_gradient(quantized - x)
+
+
+@functools.lru_cache(maxsize=None)
+def _weight_ste_fn(bits: int, group_size: int, filter_size: int, refit: bool):
+    @jax.custom_vjp
+    def fq(w):
+        return quantizer.fake_quantize_weights(w, bits, group_size, filter_size, refit)
+
+    def fwd(w):
+        return fq(w), None
+
+    def bwd(_, g):  # straight-through: identity gradient to the master copy
+        return (g,)
+
+    fq.defvjp(fwd, bwd)
+    return fq
+
+
+def weights_ste(
+    w: jax.Array, bits: int, group_size: int, filter_size: int = 1,
+    refit_scale: bool = False,
+) -> jax.Array:
+    if bits >= 16:  # full precision passthrough
+        return w
+    return _weight_ste_fn(bits, group_size, filter_size, refit_scale)(w)
+
+
+def ternary_weights_ste(
+    w: jax.Array, group_size: int, filter_size: int = 1, refit_scale: bool = False
+) -> jax.Array:
+    """Sec. 4 forward: Algorithm-1 ternarized weights, identity gradient."""
+    return weights_ste(w, 2, group_size, filter_size, refit_scale)
+
+
+def act_ste(x: jax.Array, bits: int = 8, per_row: bool = False) -> jax.Array:
+    """8-bit DFP activation fake-quant with *clipped* STE: gradient is zero
+    outside the representable range (the clip carries the gradient), identity
+    inside (rounding is straight-through)."""
+    if bits >= 16:
+        return x
+    max_abs = jnp.max(jnp.abs(jax.lax.stop_gradient(x)))
+    e = dfp.choose_exponent(max_abs, bits)
+    r = dfp.qmax(bits) * jnp.exp2(e.astype(jnp.float32))
+    xc = jnp.clip(x, -r, r)
+    return ste(xc, calibration.fake_quantize_act(xc, bits, per_row))

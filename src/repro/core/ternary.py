@@ -1,0 +1,160 @@
+"""Algorithms 1 & 2 of the paper: hierarchical cluster-based ternarization.
+
+Terminology (paper -> here):
+  * "filter"  : the Algorithm-2 unit. For a KxK conv it is one 2-D kernel
+    slice (F = K*K elements); for transformer projections it is a contiguous
+    sub-block of F input features of one output channel.
+  * "cluster" : N filters that accumulate into the same output feature and
+    share one scaling factor alpha. The reduction segment covered by one
+    alpha therefore has G = N*F elements -- the paper's "one 8-bit multiply
+    per N*K^2 ternary accumulations".
+
+Both algorithms are implemented *exactly* (no grid approximation): after a
+single sort, the optimal threshold over all n candidate supports is found in
+closed form with cumulative sums:
+
+    E(alpha, I) = ||W - alpha * sign(W) 1_I||_F^2
+                = sum(W^2) - 2 alpha * A(I) + |I| alpha^2 ,
+    A(I) = sum_{i in I} |W_i| .
+
+Algorithm 2 restricts I to top-t magnitudes and alpha to RMS(top-t); both are
+functions of t, so argmin over t = 1..n is exact.  Algorithm 1 evaluates the
+N cluster-level candidates alpha_t = RMS(top-t per-filter thresholds) against
+the whole cluster with support {|W| > alpha_t} via searchsorted.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _sorted_desc_stats(w_abs: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort |w| descending; return (sorted, cum_abs, cum_sq) along last axis."""
+    a = jnp.flip(jnp.sort(w_abs, axis=-1), axis=-1)
+    return a, jnp.cumsum(a, axis=-1), jnp.cumsum(a * a, axis=-1)
+
+
+def filter_threshold(w: jax.Array) -> jax.Array:
+    """Algorithm 2: optimal RMS threshold of one filter (last axis = F).
+
+    Returns alpha_{tau*} minimizing ||w - alpha * sign(w) 1_{top-t}||^2 over
+    all supports t = 1..F with alpha = sqrt(sum_{top-t} w^2 / t).
+    """
+    a, A, S = _sorted_desc_stats(jnp.abs(w))
+    t = jnp.arange(1, a.shape[-1] + 1, dtype=jnp.float32)
+    total_sq = S[..., -1:]
+    alpha_t = jnp.sqrt(jnp.maximum(S / t, 0.0))
+    err_t = total_sq - 2.0 * alpha_t * A + t * alpha_t**2
+    best = jnp.argmin(err_t, axis=-1)
+    return jnp.take_along_axis(alpha_t, best[..., None], axis=-1)[..., 0]
+
+
+def _cluster_candidate_error(
+    cand: jax.Array, asc: jax.Array, p_abs: jax.Array, p_sq: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Error of threshold/scale ``cand`` against a sorted-ascending cluster.
+
+    asc:   (M,) cluster |w| ascending;  p_abs/p_sq: zero-padded prefix sums.
+    Support is {|w| > cand}.  Returns (err, count) for each candidate.
+    """
+    m = asc.shape[-1]
+    idx = jnp.searchsorted(asc, cand, side="right")  # elements <= cand
+    cnt = (m - idx).astype(jnp.float32)
+    a_sup = p_abs[-1] - p_abs[idx]  # sum |w| over support
+    total_sq = p_sq[-1]
+    err = total_sq - 2.0 * cand * a_sup + cnt * cand**2
+    return err, cnt
+
+
+def cluster_ternarize(
+    cluster: jax.Array, refit_scale: bool = False
+) -> Tuple[jax.Array, jax.Array]:
+    """Algorithm 1 on one cluster of shape (N, F).
+
+    1. Algorithm 2 per filter -> thresholds alpha_i (N,).
+    2. Sort alpha desc; candidates alpha_t = sqrt(mean(top-t alpha^2)).
+    3. Evaluate each candidate on the whole cluster (threshold == scale),
+       pick the minimizer.
+    4. (optional, beyond-paper) refit the scale to the L2-optimal
+       mean(|w| | support) while keeping the chosen support.
+
+    Returns (codes int8 in {-1,0,1} shaped like ``cluster``, alpha f32 scalar).
+    """
+    n, f = cluster.shape
+    if f == 1:  # Algorithm 2 on a single element is exactly alpha = |w|
+        alphas = jnp.abs(cluster[:, 0])
+    else:
+        alphas = filter_threshold(cluster)  # (N,)
+    b = jnp.flip(jnp.sort(alphas))
+    t = jnp.arange(1, n + 1, dtype=jnp.float32)
+    cand = jnp.sqrt(jnp.maximum(jnp.cumsum(b * b) / t, 0.0))  # (N,)
+
+    flat = jnp.abs(cluster).reshape(-1)
+    asc = jnp.sort(flat)
+    pad = jnp.zeros((1,), jnp.float32)
+    p_abs = jnp.concatenate([pad, jnp.cumsum(asc)])
+    p_sq = jnp.concatenate([pad, jnp.cumsum(asc * asc)])
+
+    err, cnt = _cluster_candidate_error(cand, asc, p_abs, p_sq)
+    best = jnp.argmin(err)
+    alpha = cand[best]
+
+    mask = jnp.abs(cluster) > alpha
+    if refit_scale:
+        n_sup = jnp.maximum(cnt[best], 1.0)
+        a_sup = p_abs[-1] - p_abs[jnp.searchsorted(asc, alpha, side="right")]
+        alpha = jnp.where(cnt[best] > 0, a_sup / n_sup, alpha)
+    codes = jnp.where(mask, jnp.sign(cluster), 0.0).astype(jnp.int8)
+    # All-zero cluster -> alpha 0, codes 0 (handled naturally: cand == 0).
+    return codes, alpha.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_filters", "filter_size", "refit_scale"))
+def ternarize_blocks(
+    blocks: jax.Array, n_filters: int, filter_size: int, refit_scale: bool = False
+) -> Tuple[jax.Array, jax.Array]:
+    """Vectorized Algorithm 1 over many clusters.
+
+    blocks: (n_clusters, N*F) or (n_clusters, N, F).
+    Returns (codes int8 same shape, alpha f32 (n_clusters,)).
+    """
+    shaped = blocks.reshape(blocks.shape[0], n_filters, filter_size)
+    codes, alpha = jax.vmap(lambda c: cluster_ternarize(c, refit_scale))(shaped)
+    return codes.reshape(blocks.shape), alpha
+
+
+def ternarize_matrix(
+    w: jax.Array, group_size: int, filter_size: int, refit_scale: bool = False
+) -> Tuple[jax.Array, jax.Array]:
+    """Ternarize a (K, Nout) projection matrix with per-(k-group, out) scales.
+
+    The K reduction axis is partitioned into groups of ``group_size`` = N*F
+    elements; each (group, output-channel) block is one paper-cluster with
+    its own alpha.  Returns:
+      codes : int8 (K, Nout) in {-1, 0, 1}
+      alpha : f32  (K // group_size, Nout)
+    """
+    k, nout = w.shape
+    if k % group_size:
+        raise ValueError(f"K={k} not divisible by group_size={group_size}")
+    if group_size % filter_size:
+        raise ValueError(f"group={group_size} not divisible by filter={filter_size}")
+    n_filters = group_size // filter_size
+    n_groups = k // group_size
+    # (K, Nout) -> (n_groups, group, Nout) -> (n_groups, Nout, group)
+    blocks = w.reshape(n_groups, group_size, nout).transpose(0, 2, 1)
+    codes, alpha = ternarize_blocks(
+        blocks.reshape(n_groups * nout, group_size), n_filters, filter_size, refit_scale
+    )
+    codes = codes.reshape(n_groups, nout, group_size).transpose(0, 2, 1)
+    return codes.reshape(k, nout), alpha.reshape(n_groups, nout)
+
+
+def ternary_dequantize(codes: jax.Array, alpha: jax.Array, group_size: int) -> jax.Array:
+    """Inverse of ternarize_matrix: (K, Nout) f32 reconstruction."""
+    k, nout = codes.shape
+    c = codes.reshape(k // group_size, group_size, nout).astype(jnp.float32)
+    return (c * alpha[:, None, :]).reshape(k, nout)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel ships with a jit'd dispatcher (ops.py) and a pure-jnp oracle
+(ref.py); all kernels are validated bit-exactly (integer paths) or to float
+tolerance (flash attention) in interpret mode on CPU.
+"""
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.int4_matmul import int4_matmul
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.ops import qmatmul, quantize_activations
+from repro.kernels.quantize import quantize_rows
+from repro.kernels.ternary_matmul import ternary_matmul

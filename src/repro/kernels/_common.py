@@ -1,0 +1,40 @@
+"""Shared Pallas helpers: in-VMEM sub-8-bit decode + tiling math.
+
+TPU adaptation notes (see DESIGN.md Sec. 2.1): weights live in HBM packed
+2-bit (16/uint32) or 4-bit (8/uint32).  A weight tile is decoded once in
+VMEM to int8 lanes and contracted on the MXU with int32 accumulation; the
+per-cluster scale is applied to the int32 partial -- one multiply per
+cluster, exactly the paper's arithmetic budget.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+TERNARY_PER_WORD = 16
+INT4_PER_WORD = 8
+
+
+def decode2_tile(words: jnp.ndarray, bk: int) -> jnp.ndarray:
+    """(bk/16, bn) uint32 -> (bk, bn) int8 in {-1, 0, 1}."""
+    lanes = []
+    for i in range(TERNARY_PER_WORD):
+        c = (words >> (2 * i)) & jnp.uint32(3)
+        lanes.append((((c + 1) & 3).astype(jnp.int8) - 1))
+    return jnp.stack(lanes, axis=1).reshape(bk, words.shape[-1])
+
+
+def decode4_tile(words: jnp.ndarray, bk: int) -> jnp.ndarray:
+    """(bk/8, bn) uint32 -> (bk, bn) int8 in [-8, 7]."""
+    lanes = []
+    for i in range(INT4_PER_WORD):
+        c = ((words >> (4 * i)) & jnp.uint32(0xF)).astype(jnp.int8)
+        lanes.append(jnp.where(c >= 8, c - 16, c))
+    return jnp.stack(lanes, axis=1).reshape(bk, words.shape[-1])
+
+
+def pick_block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is <= want (block shape helper)."""
+    b = min(dim, want)
+    while dim % b:
+        b -= 1
+    return b

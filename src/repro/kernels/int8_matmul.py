@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: int8 x int8 matmul with per-cluster DFP scales.
+
+Used for the layers the policy pins to 8-bit (embedding/C1 analogue,
+lm_head, MoE router).  int8 MXU contraction at 2x bf16 throughput, int32
+accumulation, one scale multiply per cluster.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _COMPILER_PARAMS = pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary")
+    )
+except Exception:  # pragma: no cover
+    _COMPILER_PARAMS = None
+
+
+def _kernel(x_ref, w_ref, s_ref, out_ref, *, bk: int, group: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]
+    w8 = w_ref[...]  # already int8 mantissas
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for s in range(bk // group):
+        xs = jax.lax.slice_in_dim(x, s * group, (s + 1) * group, axis=1)
+        ws = jax.lax.slice_in_dim(w8, s * group, (s + 1) * group, axis=0)
+        part = jax.lax.dot_general(
+            xs, ws, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+        acc = acc + part.astype(jnp.float32) * s_ref[s, :].astype(jnp.float32)[None, :]
+    out_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group", "block_m", "block_n", "block_k", "interpret")
+)
+def int8_matmul(
+    x_q: jax.Array,  # int8 (M, K)
+    w_q: jax.Array,  # int8 (K, N)
+    scale_m: jax.Array,  # int8 (K/group, N)
+    *,
+    group: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x_q.shape
+    n = w_q.shape[1]
+    bm, bn = min(block_m, m), min(block_n, n)
+    bk = min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    assert bk % group == 0, (bk, group)
+
+    kern = functools.partial(_kernel, bk=bk, group=group)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=None if interpret else _COMPILER_PARAMS,
+        interpret=interpret,
+    )(x_q, w_q, scale_m)

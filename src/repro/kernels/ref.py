@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These implement the *exact* integer semantics the kernels must match:
+int8 activations x packed sub-8-bit weights, int32 accumulation per cluster
+(k-group), one scale multiply per cluster, shared power-of-two exponents.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfp
+from repro.core.quantizer import QTensor, decode_codes
+
+
+def qmatmul_ref(x_q: jax.Array, x_e: jax.Array, qt: QTensor) -> jax.Array:
+    """out[m, n] = sum_g scale[g, n] * (sum_{k in g} x_q[m, k] * w[k, n])
+                   * 2**(scale_e + x_e[m])
+
+    x_q : int8 (M, K) activation mantissas
+    x_e : int32 () or (M, 1) activation exponent(s)
+    qt  : QTensor weights (K, N)
+    Returns f32 (M, N).
+    """
+    m, k = x_q.shape
+    g = qt.group_size
+    codes = decode_codes(qt)  # (K, N) int8
+    xg = x_q.astype(jnp.int32).reshape(m, k // g, g)
+    wg = codes.astype(jnp.int32).reshape(k // g, g, qt.n)
+    # integer accumulation per cluster (the paper's "ternary accumulations")
+    part = jnp.einsum("mkg,kgn->kmn", xg, wg)  # int32 (groups, M, N)
+    # one multiply per cluster: scale mantissa applied to the int32 partial
+    scaled = part.astype(jnp.float32) * qt.scale_m.astype(jnp.float32)[:, None, :]
+    out = scaled.sum(axis=0)
+    exp = qt.scale_e.astype(jnp.float32) + jnp.asarray(x_e, jnp.float32)
+    return out * jnp.exp2(jnp.broadcast_to(exp, (m, 1)) if exp.ndim else exp)
+
+
+def qmatmul_dequant_ref(x: jax.Array, qt: QTensor) -> jax.Array:
+    """Float-side reference: fake-quantized activations x dequantized weights.
+    Matches qmatmul_ref exactly when x comes from dynamic_quantize_act."""
+    from repro.core.quantizer import dequantize_weights
+
+    return x.astype(jnp.float32) @ dequantize_weights(qt)
+
+
+def quantize_rows_ref(x: jax.Array, bits: int = 8):
+    """Per-row dynamic activation quantization oracle."""
+    max_abs = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    e = dfp.choose_exponent(max_abs, bits)
+    return dfp.quantize(x, e, bits), e

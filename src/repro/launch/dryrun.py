@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and record memory/cost/roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+Train cells lower a full train_step (fwd+bwd+AdamW w/ 8-bit DFP moments) in
+the paper's QAT mode; prefill/decode cells lower the PTQ integer-pipeline
+serve step with QTensor weights.  No arrays are allocated: params, optimizer
+state, caches and batches are ShapeDtypeStructs; the 512 placeholder host
+devices exist only so jax.make_mesh can build the 2x16x16 mesh.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import QuantConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, input_specs, make_ctx, quantize_model_params
+from repro.parallel import sharding
+from repro.roofline import analysis
+from repro.training import OptConfig, init_state, make_train_step
+from repro.training.trainer import TrainConfig
+
+
+def _shaped(tree):
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def default_microbatches(arch: str, shape: ShapeConfig) -> int:
+    """Gradient-accumulation factor for the train cells: XXL archs split the
+    mandated global batch so per-device activations fit 16 GB HBM."""
+    if shape.kind != "train":
+        return 1
+    big = {"grok-1-314b": 8, "arctic-480b": 16, "qwen1.5-110b": 4,
+           "qwen2-vl-72b": 4, "qwen3-8b": 2, "gemma3-12b": 2,
+           "phi4-mini-3.8b": 2, "zamba2-7b": 2, "falcon-mamba-7b": 2}
+    return big.get(arch, 1)
+
+
+def build_cell(
+    arch: str,
+    shape: ShapeConfig,
+    mesh,
+    quant_mode: str,
+    w_bits: int,
+    group_size: int,
+    seq_shard: bool,
+    act_dtype: str = "bfloat16",
+    microbatches: int = 1,
+    kv_bits: int = 16,
+    backend: str = "xla",
+    accum_dtype: str = "float32",
+):
+    """Returns (jitted_fn, example_args_as_specs)."""
+    qc = QuantConfig(w_bits=w_bits, group_size=group_size, mode=quant_mode, backend=backend)
+    cfg = configs.get_config(arch, qc)
+    cfg = dataclasses.replace(cfg, dtype=act_dtype, kv_bits=kv_bits)
+    api = build_model(cfg)
+    specs, kind = input_specs(cfg, shape)
+    params_shapes = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    if quant_mode == "ptq":
+        params_shapes = jax.eval_shape(
+            lambda p: quantize_model_params(p, api.ctx.policy), params_shapes
+        )
+    mode = "train" if kind == "train" else "serve"
+    p_sh = sharding.param_shardings(params_shapes, mesh, mode)
+    if seq_shard:
+        sharding.set_activation_mesh(mesh)
+    else:
+        sharding.set_activation_mesh(None)
+
+    if kind == "train":
+        ocfg = OptConfig(state_bits=8)
+        opt_shapes = jax.eval_shape(lambda p: init_state(p, ocfg), params_shapes)
+        o_sh = sharding.opt_shardings(opt_shapes, mesh, mode)
+        b_sh = sharding.batch_shardings(specs, mesh)
+        step = make_train_step(
+            api.train_loss,
+            TrainConfig(opt=ocfg, microbatches=microbatches, accum_dtype=accum_dtype),
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            donate_argnums=(0, 1),
+        )
+        args = (params_shapes, opt_shapes, specs)
+        return fn, args
+
+    if kind == "prefill":
+        cache_shapes = jax.eval_shape(lambda: api.init_cache(shape.global_batch, shape.seq_len))
+        c_sh = sharding.cache_shardings(cache_shapes, mesh)
+        b_sh = sharding.batch_shardings(specs, mesh)
+        if api.prefill is None:  # SSM/hybrid: prefill == forward (state replay)
+            fn = jax.jit(api.forward, in_shardings=(p_sh, b_sh))
+            return fn, (params_shapes, specs)
+        fn = jax.jit(api.prefill, in_shardings=(p_sh, b_sh, c_sh), donate_argnums=(2,))
+        return fn, (params_shapes, specs, cache_shapes)
+
+    # decode: one token against a seq_len cache
+    cache_shapes = jax.eval_shape(lambda: api.init_cache(shape.global_batch, shape.seq_len))
+    c_sh = sharding.cache_shardings(cache_shapes, mesh)
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_sh = sharding.batch_shardings({"t": tok}, mesh)["t"]
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    fn = jax.jit(
+        api.decode,
+        in_shardings=(p_sh, tok_sh, NamedSharding(mesh, P()), c_sh),
+        donate_argnums=(3,),
+    )
+    return fn, (params_shapes, tok, pos, cache_shapes)
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    quant_mode: Optional[str] = None,
+    w_bits: int = 2,
+    group_size: int = 64,
+    seq_shard: bool = True,
+    verbose: bool = True,
+    microbatches: Optional[int] = None,
+    kv_bits: int = 16,
+    backend: str = "xla",
+    accum_dtype: str = "float32",
+) -> Dict[str, Any]:
+    shape = configs.get_shape(shape_name)
+    cfg = configs.get_config(arch)
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return {
+            "arch": arch, "shape": shape_name, "status": "skipped",
+            "reason": "pure full-attention arch (see DESIGN.md)",
+        }
+    if quant_mode is None:
+        quant_mode = "qat" if shape.kind == "train" else "ptq"
+    if microbatches is None:
+        microbatches = default_microbatches(arch, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args = build_cell(
+                arch, shape, mesh, quant_mode, w_bits, group_size, seq_shard,
+                microbatches=microbatches, kv_bits=kv_bits, backend=backend,
+                accum_dtype=accum_dtype,
+            )
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            text = compiled.as_text()
+            roof = analysis.analyze(compiled, text)
+    finally:
+        sharding.set_activation_mesh(None)
+    n_total, _ = analysis.count_params(
+        jax.eval_shape(lambda: build_model(configs.get_config(arch)).init(jax.random.PRNGKey(0)))
+    )
+    n_chips = mesh.devices.size
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "status": "ok",
+        "quant_mode": quant_mode,
+        "microbatches": microbatches,
+        "kv_bits": kv_bits,
+        "n_params": n_total,
+        "per_device": {
+            "flops": roof.flops,
+            "bytes_accessed": roof.bytes_accessed,
+            "collective_bytes": roof.coll_bytes,
+            "collective_breakdown": roof.coll_breakdown,
+            "xla_raw": roof.xla_raw,
+        },
+        "roofline_s": {
+            "compute": roof.compute_s,
+            "memory": roof.memory_s,
+            "collective": roof.collective_s,
+            "dominant": roof.dominant,
+        },
+        "memory_analysis": {
+            "argument_size": getattr(mem, "argument_size_in_bytes", 0),
+            "output_size": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_estimate": getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0),
+        },
+        "timings_s": {"lower": t_lower, "compile": t_compile},
+        "n_chips": n_chips,
+    }
+    if verbose:
+        per = result["per_device"]
+        ma = result["memory_analysis"]
+        print(
+            f"[{arch} x {shape_name} @ {result['mesh']}] {quant_mode} OK  "
+            f"flops/dev={per['flops']:.3e} bytes/dev={per['bytes_accessed']:.3e} "
+            f"coll/dev={per['collective_bytes']:.3e} dom={result['roofline_s']['dominant']} "
+            f"args={ma['argument_size']/2**30:.2f}GiB temps={ma['temp_size']/2**30:.2f}GiB "
+            f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+            flush=True,
+        )
+        print("  memory_analysis:", mem, flush=True)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        keys = ["flops", "bytes accessed"]
+        print("  cost_analysis:", {k: cost.get(k) for k in keys}, flush=True)
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quant", default=None, choices=[None, "fp", "qat", "ptq"])
+    ap.add_argument("--w-bits", type=int, default=2)
+    ap.add_argument("--group-size", type=int, default=64)
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--kv-bits", type=int, default=16, choices=[8, 16])
+    ap.add_argument("--backend", default="xla", choices=["xla", "xla_int8"])
+    ap.add_argument("--accum-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--baseline-moe-chunk", action="store_true",
+                    help="pre-B1 flat-token MoE chunking")
+    ap.add_argument("--baseline-kv-shard", action="store_true",
+                    help="pre-C4 head-dim cache sharding")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch, shape, skip in configs.cells():
+            cells.append((arch, shape.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells.append((args.arch, args.shape))
+
+    if args.baseline_moe_chunk:
+        from repro.models import moe as _moe
+
+        _moe.FLAT_CHUNKING[0] = True
+    if args.baseline_kv_shard:
+        sharding.KV_SEQ_SHARD[0] = False
+
+    results = []
+    failures = 0
+    for arch, shape_name in cells:
+        try:
+            r = run_cell(
+                arch, shape_name, args.multi_pod, args.quant,
+                args.w_bits, args.group_size, not args.no_seq_shard,
+                microbatches=args.microbatches, kv_bits=args.kv_bits,
+                backend=args.backend, accum_dtype=args.accum_dtype,
+            )
+        except Exception as e:  # a failing cell is a bug in the system
+            failures += 1
+            r = {"arch": arch, "shape": shape_name, "status": "FAILED", "error": repr(e)[:500]}
+            print(f"[{arch} x {shape_name}] FAILED: {repr(e)[:300]}", flush=True)
+        results.append(r)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    print(f"dry-run: {ok} ok, {sk} skipped, {failures} failed / {len(results)} cells")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

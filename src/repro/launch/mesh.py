@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state -- dryrun.py must set XLA_FLAGS before the
+first jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across 2 pods.
+
+    The 'pod' axis is pure data parallelism (one cross-pod gradient
+    all-reduce per step, DCN-friendly); 'data' is in-pod batch/FSDP; 'model'
+    is tensor/expert parallelism confined to the pod's ICI domain.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over the real local devices (tests / examples)."""
+    n = jax.device_count()
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,67 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
+      --steps 20 --quant qat --w-bits 2 --group-size 16
+
+Full-config runs target the production mesh (see dryrun.py for the
+compile-only path used on this CPU container); --smoke runs the reduced
+config end-to-end on local devices with the same code path.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.configs.base import QuantConfig
+from repro.models import build_model
+from repro.training import OptConfig, TrainConfig, Trainer
+from repro.training.data import DataConfig, make_batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--quant", default="fp", choices=["fp", "qat"])
+    ap.add_argument("--w-bits", type=int, default=2)
+    ap.add_argument("--group-size", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--opt-bits", type=int, default=32, choices=[8, 32])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    qc = QuantConfig(w_bits=args.w_bits, group_size=args.group_size, mode=args.quant)
+    cfg = (configs.get_smoke if args.smoke else configs.get_config)(args.arch, qc)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M quant={args.quant} "
+          f"w_bits={args.w_bits} N={args.group_size}")
+
+    dcfg = DataConfig(batch=args.batch, seq=args.seq)
+    tcfg = TrainConfig(
+        opt=OptConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
+                      decay_steps=args.steps, state_bits=args.opt_bits),
+        microbatches=args.microbatches,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=max(5, args.steps // 4),
+    )
+    tr = Trainer(api.train_loss, params, tcfg)
+    if args.resume and args.ckpt_dir:
+        print(f"resumed at step {tr.maybe_restore()}")
+    hist = tr.train(lambda i: make_batch(cfg, dcfg, i), args.steps)
+    for i in range(0, len(hist["loss"]), max(1, len(hist["loss"]) // 10)):
+        print(f"step {hist['step'][i]:5d}  loss {hist['loss'][i]:.4f}")
+    print(f"final loss {hist['loss'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

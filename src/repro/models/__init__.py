@@ -1,0 +1,10 @@
+"""Model zoo: pure-pytree implementations of the assigned families."""
+from repro.models.layers import QuantCtx
+from repro.models.model_zoo import (
+    ModelApi,
+    build_model,
+    input_specs,
+    make_ctx,
+    make_smoke_batch,
+    quantize_model_params,
+)

@@ -1,0 +1,255 @@
+"""Grouped-query attention with the flavours the assigned archs need:
+qk-norm (qwen3), qkv-bias (qwen1.5), M-RoPE (qwen2-vl), sliding-window local
+layers (gemma3 5:1), cross-attention (whisper), KV-cache decode.
+
+Training/prefill uses an online-softmax chunked formulation (flash-attention
+scheme at the XLA level): KV is scanned in blocks with running max/sum so the
+S x S score matrix is never materialized -- this is what keeps the roofline
+memory term linear in S.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfp
+from repro.models import layers
+from repro.models.layers import QuantCtx, dense
+
+NEG_INF = -1e30
+
+
+def _kv_quantize(x: jax.Array):
+    """(B,S,Kh,hd) -> (int8 mantissas, int8 exponents (B,S,Kh,1))."""
+    max_abs = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    e = dfp.choose_exponent(max_abs, 8)
+    return dfp.quantize(x.astype(jnp.float32), e, 8), e.astype(jnp.int8)
+
+
+def init_attention(key, cfg, dtype, cross: bool = False) -> dict:
+    hd = cfg.hd()
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": layers.init_dense_layer(kq, cfg.d_model, cfg.n_heads * hd, cfg.qkv_bias, dtype),
+        "wk": layers.init_dense_layer(kk, cfg.d_model, cfg.n_kv_heads * hd, cfg.qkv_bias, dtype),
+        "wv": layers.init_dense_layer(kv, cfg.d_model, cfg.n_kv_heads * hd, cfg.qkv_bias, dtype),
+        "wo": layers.init_dense_layer(ko, cfg.n_heads * hd, cfg.d_model, False, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rmsnorm(hd, dtype)
+        p["k_norm"] = layers.init_rmsnorm(hd, dtype)
+    return p
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n, x.shape[-1] // n)
+
+
+def _mask_bias(
+    q_pos: jax.Array,  # (S,) or (B, S)
+    k_pos: jax.Array,  # (T,)
+    causal: bool,
+    window: Optional[int],
+    valid_len: Optional[jax.Array] = None,  # (B,) cache fill level
+) -> jax.Array:
+    """Additive mask (..., S, T)."""
+    qp = q_pos[..., :, None].astype(jnp.int32)
+    kp = k_pos[None, :].astype(jnp.int32)
+    ok = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= qp - kp < window
+    if valid_len is not None:
+        ok &= kp < valid_len[:, None, None]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _attend_dense(q, k, v, bias, ke=None, ve=None):
+    """q (B,S,Kh,G,hd), k/v (B,T,Kh,hd), bias broadcastable to (B,Kh,G,S,T).
+
+    Grouped-KV layout: used on the decode path where the score tensor is
+    (..., 1, T) and repeating KV would blow up cache traffic.
+
+    ke/ve: optional int8-KV-cache DFP exponents (B,T,Kh,1).  Scales are
+    folded into the score/probability tensors so the dequantized cache is
+    never materialized -- the cache streams from HBM at 1 byte/elem.
+    """
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32), k.astype(jnp.float32))
+    if ke is not None:  # fold per-(token, head) key scales into the scores
+        kscale = jnp.exp2(ke[..., 0].astype(jnp.float32))  # (B,T,Kh)
+        s = s * kscale.transpose(0, 2, 1)[:, :, None, None, :]
+    s = s * scale + bias
+    p = jax.nn.softmax(s, axis=-1)
+    if ve is not None:  # fold value scales into the probabilities
+        vscale = jnp.exp2(ve[..., 0].astype(jnp.float32))
+        p = p * vscale.transpose(0, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return out
+
+
+def _attend_dense_mha(q, k, v, bias):
+    """Full-head layout: q/k/v (B,S|T,H,hd); bias (..., S, T).  KV heads are
+    pre-repeated so the head axis shards over 'model' (Kh alone often does
+    not divide the TP width, e.g. 8 kv heads on 16-way TP)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale + bias
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+
+
+def _attend_chunked(q, k, v, q_pos, causal, window, chunk: int):
+    """Online-softmax over KV chunks (flash-attention scheme at XLA level).
+
+    q (B,S,H,hd); k/v (B,T,H,hd) (KV pre-repeated to full heads).  Only the
+    (m, l, acc) carries survive a chunk; scores/probs are recomputed in the
+    backward pass (jax.checkpoint)."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    scale = hd**-0.5
+    qf = q.astype(jnp.float32) * scale
+    n_chunks = t // chunk
+
+    def body(carry, idx):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, idx * chunk, chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, 1)
+        k_pos = idx * chunk + jnp.arange(chunk)
+        bias = _mask_bias(q_pos, k_pos, causal, window)  # (S, chunk) or (B,S,chunk)
+        bias = bias[None] if bias.ndim == 2 else bias[:, None]
+        sc = jnp.einsum("bshd,bthd->bhst", qf, ks.astype(jnp.float32))
+        sc = sc + bias  # (B,H,S,chunk)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        upd = jnp.einsum("bhst,bthd->bshd", p, vs.astype(jnp.float32))
+        acc_new = acc * corr.transpose(0, 2, 1)[..., None] + upd
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, s, h, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), jnp.arange(n_chunks)
+    )
+    denom = jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return acc / denom
+
+
+def attention(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,  # (S,) | (B,S) | (3,B,S) for mrope
+    cfg,
+    ctx: QuantCtx,
+    path: str,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_src: Optional[jax.Array] = None,  # cross-attention source (B, T, d)
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (k, v) (B, Smax, Kh, hd)
+    cache_index: Optional[jax.Array] = None,  # scalar write position
+    chunk: int = 1024,
+    rope: bool = True,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Returns (output (B,S,d), updated cache or None)."""
+    hd = cfg.hd()
+    g = cfg.n_heads // cfg.n_kv_heads
+    src = x if kv_src is None else kv_src
+
+    q = _split_heads(dense(p["wq"], x, f"{path}/wq", ctx), cfg.n_heads)
+    k = _split_heads(dense(p["wk"], src, f"{path}/wk", ctx), cfg.n_kv_heads)
+    v = _split_heads(dense(p["wv"], src, f"{path}/wv", ctx), cfg.n_kv_heads)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+
+    use_rope = rope and kv_src is None  # no rope on cross-attention
+    if use_rope:
+        if cfg.mrope:
+            q = layers.apply_mrope(q, positions, cfg.rope_theta)
+            k = layers.apply_mrope(k, positions, cfg.rope_theta)
+            q_pos = positions[0]  # temporal component orders causality
+        else:
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+            q_pos = positions
+    else:
+        q_pos = positions
+
+    new_cache = None
+    decode = cache is not None and x.shape[1] == 1
+    if cache is not None:
+        quantized_kv = len(cache) == 4
+        if quantized_kv:  # int8 DFP cache: quantize on write
+            ck, cv, cke, cve = cache
+            kw, kew = _kv_quantize(k)
+            vw, vew = _kv_quantize(v)
+            writes = [(ck, kw), (cv, vw), (cke, kew), (cve, vew)]
+        else:
+            ck, cv = cache
+            writes = [(ck, k.astype(ck.dtype)), (cv, v.astype(cv.dtype))]
+        written = []
+        if jnp.ndim(cache_index) == 0:  # aligned batch: cheap slice write
+            for buf, val in writes:
+                written.append(
+                    jax.lax.dynamic_update_slice_in_dim(
+                        buf, val.astype(buf.dtype), cache_index, 1
+                    )
+                )
+            valid = jnp.broadcast_to(cache_index + x.shape[1], (x.shape[0],))
+        else:  # per-slot positions (continuous batching): masked write, S==1
+            iota = jnp.arange(ck.shape[1])
+            m = (iota[None, :, None, None] == cache_index[:, None, None, None])
+            for buf, val in writes:
+                written.append(jnp.where(m, val.astype(buf.dtype), buf))
+            valid = cache_index + 1
+        new_cache = tuple(written)
+
+    if decode:
+        # grouped-KV layout over the whole cache: (..., 1, T) scores
+        if len(new_cache) == 4:
+            k, v, cke, cve = new_cache
+        else:
+            (k, v), cke, cve = new_cache, None, None
+        t = k.shape[1]
+        k_pos = jnp.arange(t)
+        bias = _mask_bias(q_pos, k_pos, causal, window, valid)
+        if bias.ndim == 2:
+            bias = bias[None, None, None]  # (1,1,1,S,T)
+        else:
+            bias = bias[:, None, None]  # (B,1,1,S,T)
+        qh = q.reshape(*q.shape[:2], cfg.n_kv_heads, g, hd)
+        out = _attend_dense(qh, k, v, bias, ke=cke, ve=cve)
+        out = out.reshape(*x.shape[:2], cfg.n_heads * hd).astype(x.dtype)
+        return dense(p["wo"], out, f"{path}/wo", ctx), new_cache
+
+    # training / prefill: repeat KV to full heads so the head axis shards
+    # over 'model' even when n_kv_heads does not divide the TP width.
+    from repro.parallel import sharding as _sh
+
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = _sh.constrain(q, ("batch", None, "heads", None))
+    k = _sh.constrain(k, ("batch", None, "heads", None))
+    v = _sh.constrain(v, ("batch", None, "heads", None))
+    t = k.shape[1]
+    if t > chunk and t % chunk == 0:
+        out = _attend_chunked(q, k, v, q_pos, causal, window, chunk)
+    else:
+        k_pos = jnp.arange(t)
+        if causal or window is not None:
+            bias = _mask_bias(q_pos, k_pos, causal, window)
+            bias = bias[None] if bias.ndim == 2 else bias[:, None]
+        else:
+            bias = jnp.zeros((), jnp.float32)
+        out = _attend_dense_mha(q, k, v, bias)
+
+    out = out.reshape(*x.shape[:2], cfg.n_heads * hd).astype(x.dtype)
+    return dense(p["wo"], out, f"{path}/wo", ctx), new_cache

@@ -1,0 +1,203 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, n_frames, d_model).  Encoder = non-causal
+self-attention blocks with LayerNorm + GELU MLP (whisper flavour); decoder =
+causal self-attention + cross-attention over encoder output, KV-cache decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers
+from repro.models.layers import QuantCtx, dense
+from repro.parallel import sharding
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _init_gelu_mlp(key, d, ff, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": layers.init_dense_layer(k1, d, ff, True, dtype),
+        "down": layers.init_dense_layer(k2, ff, d, True, dtype),
+    }
+
+
+def _gelu_mlp(p, x, path, ctx):
+    return dense(p["down"], jax.nn.gelu(dense(p["up"], x, f"{path}/up", ctx)), f"{path}/down", ctx)
+
+
+def _init_enc_block(key, cfg, dtype):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": layers.init_layernorm(cfg.d_model, dtype),
+        "attn": attn_lib.init_attention(ka, cfg, dtype),
+        "ln2": layers.init_layernorm(cfg.d_model, dtype),
+        "mlp": _init_gelu_mlp(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_block(key, cfg, dtype):
+    ka, kc, km = jax.random.split(key, 3)
+    return {
+        "ln1": layers.init_layernorm(cfg.d_model, dtype),
+        "self_attn": attn_lib.init_attention(ka, cfg, dtype),
+        "ln2": layers.init_layernorm(cfg.d_model, dtype),
+        "cross_attn": attn_lib.init_attention(kc, cfg, dtype, cross=True),
+        "ln3": layers.init_layernorm(cfg.d_model, dtype),
+        "mlp": _init_gelu_mlp(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec(key, cfg) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kd, kt, kp, kq, kh = jax.random.split(key, 6)
+    ekeys = jax.random.split(ke, cfg.n_enc_layers)
+    dkeys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "enc_pos": jax.random.normal(kp, (cfg.n_audio_frames, cfg.d_model), dtype) * 0.01,
+        "enc_blocks": _stack([_init_enc_block(k, cfg, dtype) for k in ekeys]),
+        "enc_norm": layers.init_layernorm(cfg.d_model, dtype),
+        "embed": layers.init_embedding(kt, cfg.padded_vocab, cfg.d_model, dtype),
+        "dec_pos": jax.random.normal(kq, (448, cfg.d_model), dtype) * 0.01,
+        "dec_blocks": _stack([_init_dec_block(k, cfg, dtype) for k in dkeys]),
+        "dec_norm": layers.init_layernorm(cfg.d_model, dtype),
+        "lm_head": layers.init_dense_layer(kh, cfg.d_model, cfg.padded_vocab, False, dtype),
+    }
+
+
+def encode(params, frames: jax.Array, cfg, ctx: QuantCtx) -> jax.Array:
+    """frames: (B, n_frames, d_model) precomputed embeddings (stub frontend)."""
+    x = frames + params["enc_pos"][None, : frames.shape[1]]
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, bp):
+        h = sharding.constrain(h, ("batch", "seq", None))
+        a, _ = attn_lib.attention(
+            bp["attn"], layers.layernorm(bp["ln1"], h), positions, cfg, ctx,
+            "enc/attn", causal=False, rope=False,
+        )
+        h = h + a
+        h = h + _gelu_mlp(bp["mlp"], layers.layernorm(bp["ln2"], h), "enc/mlp", ctx)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return layers.layernorm(params["enc_norm"], x)
+
+
+def _dec_block(bp, x, enc_out, positions, cfg, ctx, cache=None, cache_index=None):
+    a, new_cache = attn_lib.attention(
+        bp["self_attn"], layers.layernorm(bp["ln1"], x), positions, cfg, ctx,
+        "dec/self_attn", causal=True, rope=False, cache=cache, cache_index=cache_index,
+    )
+    x = x + a
+    c, _ = attn_lib.attention(
+        bp["cross_attn"], layers.layernorm(bp["ln2"], x), positions, cfg, ctx,
+        "dec/cross_attn", causal=False, rope=False, kv_src=enc_out,
+    )
+    x = x + c
+    x = x + _gelu_mlp(bp["mlp"], layers.layernorm(bp["ln3"], x), "dec/mlp", ctx)
+    return x, new_cache
+
+
+def _pos_embed(table: jax.Array, start, length: int) -> jax.Array:
+    if jnp.ndim(start) == 1:  # per-slot start -> (B, L, d)
+        idx = (start[:, None] + jnp.arange(length)) % table.shape[0]
+    else:
+        idx = (start + jnp.arange(length)) % table.shape[0]
+    return jnp.take(table, idx, axis=0)
+
+
+def hidden(params, batch, cfg, ctx: QuantCtx) -> jax.Array:
+    """Training path: batch = {frames, tokens}; returns decoder hidden states."""
+    enc_out = encode(params, batch["frames"], cfg, ctx)
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = layers.embed(params["embed"], tokens) + _pos_embed(params["dec_pos"], 0, s)[None]
+    positions = jnp.arange(s)
+
+    def body(h, bp):
+        h = sharding.constrain(h, ("batch", "seq", None))
+        h, _ = _dec_block(bp, h, enc_out, positions, cfg, ctx)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_blocks"])
+    return layers.layernorm(params["dec_norm"], x)
+
+
+def forward(params, batch, cfg, ctx: QuantCtx) -> jax.Array:
+    x = hidden(params, batch, cfg, ctx)
+    return dense(params["lm_head"], x, "lm_head", ctx)
+
+
+def loss_fn(params, batch, cfg, ctx: QuantCtx) -> jax.Array:
+    x = hidden(params, batch, cfg, ctx)
+    return layers.lm_head_loss(
+        params["lm_head"], x, batch["labels"], cfg.vocab, "lm_head", ctx
+    )
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.hd()
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "enc_out": jnp.zeros((batch, cfg.n_audio_frames, cfg.d_model), dtype),
+    }
+
+
+def prefill(params, batch, cfg, ctx: QuantCtx, cache):
+    enc_out = encode(params, batch["frames"], cfg, ctx).astype(cache["enc_out"].dtype)
+    cache = dict(cache, enc_out=enc_out)
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = layers.embed(params["embed"], tokens) + _pos_embed(params["dec_pos"], 0, s)[None]
+    positions = jnp.arange(s)
+
+    def body(h, sc):
+        h, new = _dec_block(
+            sc["p"], h, enc_out, positions, cfg, ctx, (sc["k"], sc["v"]), jnp.int32(0)
+        )
+        return h, {"k": new[0], "v": new[1]}
+
+    x, upd = jax.lax.scan(
+        body, x, {"p": params["dec_blocks"], "k": cache["k"], "v": cache["v"]}
+    )
+    cache.update(upd)
+    x = layers.layernorm(params["dec_norm"], x[:, -1:])
+    return dense(params["lm_head"], x, "lm_head", ctx), cache
+
+
+def decode_step(params, token, pos, cfg, ctx: QuantCtx, cache):
+    pe = _pos_embed(params["dec_pos"], pos, 1)
+    if pe.ndim == 2:  # scalar pos -> add batch dim
+        pe = pe[None]
+    x = layers.embed(params["embed"], token) + pe
+    if jnp.ndim(pos) == 1:
+        positions = pos[:, None].astype(jnp.int32)
+    else:
+        positions = jnp.full((token.shape[0], 1), pos, jnp.int32)
+
+    def body(h, sc):
+        h, new = _dec_block(
+            sc["p"], h, cache["enc_out"], positions, cfg, ctx, (sc["k"], sc["v"]), pos
+        )
+        return h, {"k": new[0], "v": new[1]}
+
+    x, upd = jax.lax.scan(
+        body, x, {"p": params["dec_blocks"], "k": cache["k"], "v": cache["v"]}
+    )
+    new_cache = dict(cache)
+    new_cache.update(upd)
+    x = layers.layernorm(params["dec_norm"], x)
+    return dense(params["lm_head"], x, "lm_head", ctx), new_cache

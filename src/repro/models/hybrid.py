@@ -1,0 +1,224 @@
+"""Zamba2-style hybrid: Mamba2 backbone with shared attention blocks.
+
+Layer plan for n_layers Mamba2 blocks with period P and n_shared shared
+transformer blocks: after every P-th Mamba block one of the shared blocks
+(alternating) runs with its OWN KV history but SHARED weights -- the zamba2
+parameter-sharing trick.  n_layers = n_super * P + tail.
+
+Scan structure: outer scan over superblocks (P stacked Mamba2 layers + one
+shared-attention application), then a tail scan.  Shared-block weights are
+selected inside the scan with a jnp.where tree (no 13x weight copies).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers, ssm
+from repro.models.layers import QuantCtx
+from repro.parallel import sharding
+
+
+def plan(cfg) -> Tuple[int, int, int]:
+    p = cfg.shared_attn_period or 6
+    n_super = cfg.n_layers // p
+    tail = cfg.n_layers - n_super * p
+    return n_super, p, tail
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _init_mamba_block(key, cfg, dtype):
+    return {
+        "norm": layers.init_rmsnorm(cfg.d_model, dtype),
+        "mamba": ssm.init_mamba(key, cfg, dtype),
+    }
+
+
+def _init_shared_block(key, cfg, dtype):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": layers.init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn_lib.init_attention(ka, cfg, dtype),
+        "ln2": layers.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": layers.init_mlp(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_hybrid(key, cfg) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    n_super, p, tail = plan(cfg)
+    ke, km, kt, ks, kh = jax.random.split(key, 5)
+    mkeys = jax.random.split(km, max(n_super * p, 1))
+    tkeys = jax.random.split(kt, max(tail, 1))
+    skeys = jax.random.split(ks, cfg.n_shared_blocks)
+    params = {
+        "embed": layers.init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype),
+        "mamba_stack": _stack(
+            [_init_mamba_block(k, cfg, dtype) for k in mkeys[: n_super * p]]
+        ),
+        "shared": _stack([_init_shared_block(k, cfg, dtype) for k in skeys]),
+        "final_norm": layers.init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": layers.init_dense_layer(kh, cfg.d_model, cfg.padded_vocab, False, dtype),
+    }
+    if tail:
+        params["tail_stack"] = _stack([_init_mamba_block(k, cfg, dtype) for k in tkeys])
+    return params
+
+
+def _select_shared(shared, idx):
+    """Alternate between the n_shared stacked blocks without copying."""
+    n = jax.tree.leaves(shared)[0].shape[0]
+    sel = idx % n
+    return jax.tree.map(lambda leaf: leaf[sel], shared)
+
+
+def _mamba_block(bp, x, cfg, ctx):
+    h = layers.rmsnorm(bp["norm"], x, cfg.norm_eps)
+    return x + ssm.mamba2_seq(bp["mamba"], h, cfg, ctx, "mamba")
+
+
+def _shared_block(sp, x, positions, cfg, ctx, cache=None, cache_index=None):
+    h = layers.rmsnorm(sp["ln1"], x, cfg.norm_eps)
+    a, new_cache = attn_lib.attention(
+        sp["attn"], h, positions, cfg, ctx, "shared/attn",
+        causal=True, cache=cache, cache_index=cache_index,
+    )
+    x = x + a
+    h = layers.rmsnorm(sp["ln2"], x, cfg.norm_eps)
+    x = x + layers.mlp(sp["mlp"], h, "shared/mlp", ctx)
+    return x, new_cache
+
+
+def hidden(params, tokens, cfg, ctx: QuantCtx, positions=None) -> jax.Array:
+    n_super, p, tail = plan(cfg)
+    x = layers.embed(params["embed"], tokens)
+    s = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(s)
+
+    def reshaped(stack, n, per):
+        return jax.tree.map(lambda l: l.reshape(n, per, *l.shape[1:]), stack)
+
+    def super_body(carry, scanned):
+        x = sharding.constrain(carry, ("batch", "seq", None))
+        mp, idx = scanned["m"], scanned["i"]
+
+        def inner(h, bp):
+            return _mamba_block(bp, h, cfg, ctx), None
+
+        inner_fn = jax.checkpoint(inner) if cfg.remat else inner
+        x, _ = jax.lax.scan(inner_fn, x, mp)
+        sp = _select_shared(params["shared"], idx)
+        x, _ = _shared_block(sp, x, positions, cfg, ctx)
+        return x, None
+
+    if n_super:
+        scanned = {
+            "m": reshaped(params["mamba_stack"], n_super, p),
+            "i": jnp.arange(n_super),
+        }
+        x, _ = jax.lax.scan(super_body, x, scanned)
+
+    if tail:
+        def tail_body(h, bp):
+            h = sharding.constrain(h, ("batch", "seq", None))
+            return _mamba_block(bp, h, cfg, ctx), None
+
+        tail_fn = jax.checkpoint(tail_body) if cfg.remat else tail_body
+        x, _ = jax.lax.scan(tail_fn, x, params["tail_stack"])
+
+    return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, tokens, cfg, ctx: QuantCtx, positions=None) -> jax.Array:
+    x = hidden(params, tokens, cfg, ctx, positions)
+    return layers.dense(params["lm_head"], x, "lm_head", ctx)
+
+
+def loss_fn(params, batch, cfg, ctx: QuantCtx) -> jax.Array:
+    x = hidden(params, batch["tokens"], cfg, ctx)
+    return layers.lm_head_loss(
+        params["lm_head"], x, batch["labels"], cfg.vocab, "lm_head", ctx
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode path: per-layer SSM states + per-superblock KV caches.
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    n_super, p, tail = plan(cfg)
+    hd = cfg.hd()
+    sstate = ssm.init_ssm_state(cfg, batch)
+    def stacked(n):
+        return jax.tree.map(lambda l: jnp.zeros((n, *l.shape), l.dtype), sstate)
+    cache = {
+        "ssm": stacked(n_super * p),
+        "k": jnp.zeros((n_super, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n_super, batch, max_len, cfg.n_kv_heads, hd), dtype),
+    }
+    if tail:
+        cache["ssm_tail"] = stacked(tail)
+    return cache
+
+
+def decode_step(params, token, pos, cfg, ctx: QuantCtx, cache):
+    n_super, p, tail = plan(cfg)
+    x = layers.embed(params["embed"], token)
+    if jnp.ndim(pos) == 1:
+        positions = pos[:, None].astype(jnp.int32)
+    else:
+        positions = jnp.full((token.shape[0], 1), pos, jnp.int32)
+
+    def reshaped(stack, n, per):
+        return jax.tree.map(lambda l: l.reshape(n, per, *l.shape[1:]), stack)
+
+    def super_body(carry, scanned):
+        x = carry
+        mp, states, ck, cv, idx = (
+            scanned["m"], scanned["s"], scanned["k"], scanned["v"], scanned["i"],
+        )
+
+        def inner(h, sc):
+            bp, st = sc
+            hin = layers.rmsnorm(bp["norm"], h, cfg.norm_eps)
+            out, new_st = ssm.mamba2_step(bp["mamba"], hin, st, cfg, ctx, "mamba")
+            return h + out, new_st
+
+        x, new_states = jax.lax.scan(inner, x, (mp, states))
+        sp = _select_shared(params["shared"], idx)
+        x, new_kv = _shared_block(sp, x, positions, cfg, ctx, (ck, cv), pos)
+        return x, {"s": new_states, "k": new_kv[0], "v": new_kv[1]}
+
+    if n_super:
+        scanned = {
+            "m": reshaped(params["mamba_stack"], n_super, p),
+            "s": reshaped(cache["ssm"], n_super, p),
+            "k": cache["k"],
+            "v": cache["v"],
+            "i": jnp.arange(n_super),
+        }
+        x, upd = jax.lax.scan(super_body, x, scanned)
+        cache = dict(cache)
+        cache["ssm"] = jax.tree.map(
+            lambda l: l.reshape(n_super * p, *l.shape[2:]), upd["s"]
+        )
+        cache["k"], cache["v"] = upd["k"], upd["v"]
+
+    if tail:
+        def tail_body(h, sc):
+            bp, st = sc
+            hin = layers.rmsnorm(bp["norm"], h, cfg.norm_eps)
+            out, new_st = ssm.mamba2_step(bp["mamba"], hin, st, cfg, ctx, "mamba")
+            return h + out, new_st
+
+        x, new_tail = jax.lax.scan(tail_body, x, (params["tail_stack"], cache["ssm_tail"]))
+        cache["ssm_tail"] = new_tail
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return layers.dense(params["lm_head"], x, "lm_head", ctx), cache

@@ -1,0 +1,239 @@
+"""Unified model API: family dispatch, input specs, PTQ conversion.
+
+``build_model(cfg)`` returns a ``ModelApi`` whose members all have fixed
+signatures so the trainer / server / dry-run treat every family uniformly:
+
+  init(key) -> params
+  train_loss(params, batch) -> scalar
+  forward(params, batch) -> logits
+  init_cache(batch, max_len) -> cache            (decode state)
+  prefill(params, batch, cache) -> (logits, cache)
+  decode(params, token, pos, cache) -> (logits, cache)
+  input_specs(shape_cfg) -> (batch/spec pytree, kind)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import calibration
+from repro.core.policy import PrecisionPolicy
+from repro.core.quantizer import quantize_weights
+from repro.models import encdec, hybrid, ssm_lm, transformer, vlm
+from repro.models.layers import QuantCtx
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ArchConfig
+    ctx: QuantCtx
+    init: Callable
+    train_loss: Callable
+    forward: Callable
+    init_cache: Callable
+    prefill: Optional[Callable]
+    decode: Callable
+
+
+def make_ctx(cfg: ArchConfig) -> QuantCtx:
+    q = cfg.quant
+    if q.mode == "fp":
+        return QuantCtx.fp()
+    if q.w_bits == 2:
+        pol = PrecisionPolicy.ternary(q.group_size, q.filter_size, q.refit_scale)
+    elif q.w_bits == 4:
+        pol = PrecisionPolicy.int4(q.group_size)
+    else:
+        pol = PrecisionPolicy.int8(q.group_size)
+    return QuantCtx(q.mode, pol, q.backend)
+
+
+def build_model(cfg: ArchConfig, ctx: Optional[QuantCtx] = None) -> ModelApi:
+    ctx = ctx or make_ctx(cfg)
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return ModelApi(
+            cfg, ctx,
+            init=lambda key: transformer.init_lm(key, cfg),
+            train_loss=lambda p, b: transformer.loss_fn(p, b, cfg, ctx),
+            forward=lambda p, b: transformer.forward(p, b["tokens"], cfg, ctx),
+            init_cache=lambda b, m: transformer.init_cache(cfg, b, m),
+            prefill=lambda p, b, c: transformer.prefill(p, b["tokens"], cfg, ctx, c),
+            decode=lambda p, t, pos, c: transformer.decode_step(p, t, pos, cfg, ctx, c),
+        )
+    if fam == "vlm":
+        return ModelApi(
+            cfg, ctx,
+            init=lambda key: transformer.init_lm(key, cfg),
+            train_loss=lambda p, b: vlm.loss_fn(p, b, cfg, ctx),
+            forward=lambda p, b: vlm.forward(p, b, cfg, ctx),
+            init_cache=lambda b, m: transformer.init_cache(cfg, b, m),
+            prefill=lambda p, b, c: vlm.prefill(p, b, cfg, ctx, c),
+            decode=lambda p, t, pos, c: transformer.decode_step(p, t, pos, cfg, ctx, c),
+        )
+    if fam == "hybrid":
+        return ModelApi(
+            cfg, ctx,
+            init=lambda key: hybrid.init_hybrid(key, cfg),
+            train_loss=lambda p, b: hybrid.loss_fn(p, b, cfg, ctx),
+            forward=lambda p, b: hybrid.forward(p, b["tokens"], cfg, ctx),
+            init_cache=lambda b, m: hybrid.init_cache(cfg, b, m),
+            prefill=None,  # hybrid prefill == forward + state replay (engine-level)
+            decode=lambda p, t, pos, c: hybrid.decode_step(p, t, pos, cfg, ctx, c),
+        )
+    if fam == "ssm":
+        return ModelApi(
+            cfg, ctx,
+            init=lambda key: ssm_lm.init_ssm_lm(key, cfg),
+            train_loss=lambda p, b: ssm_lm.loss_fn(p, b, cfg, ctx),
+            forward=lambda p, b: ssm_lm.forward(p, b["tokens"], cfg, ctx),
+            init_cache=lambda b, m: ssm_lm.init_cache(cfg, b, m),
+            prefill=None,
+            decode=lambda p, t, pos, c: ssm_lm.decode_step(p, t, pos, cfg, ctx, c),
+        )
+    if fam == "encdec":
+        return ModelApi(
+            cfg, ctx,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            train_loss=lambda p, b: encdec.loss_fn(p, b, cfg, ctx),
+            forward=lambda p, b: encdec.forward(p, b, cfg, ctx),
+            init_cache=lambda b, m: encdec.init_cache(cfg, b, m),
+            prefill=lambda p, b, c: encdec.prefill(p, b, cfg, ctx, c),
+            decode=lambda p, t, pos, c: encdec.decode_step(p, t, pos, cfg, ctx, c),
+        )
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Input specs: one cell = (arch x shape); used by smoke tests (concrete) and
+# the dry-run (ShapeDtypeStruct, no allocation).
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[Dict[str, Any], str]:
+    """Returns ({name: ShapeDtypeStruct}, kind). Token count semantics:
+    train/prefill feed (B, S); decode feeds one token with an S-long cache."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return (
+                {
+                    "frames": jax.ShapeDtypeStruct((b, cfg.n_audio_frames, cfg.d_model), f),
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32),
+                },
+                "train",
+            )
+        if cfg.family == "vlm":
+            nv = cfg.n_frontend_tokens
+            return (
+                {
+                    "tokens": jax.ShapeDtypeStruct((b, s - nv), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s - nv), i32),
+                    "vision_embeds": jax.ShapeDtypeStruct((b, nv, cfg.d_model), f),
+                    "positions": jax.ShapeDtypeStruct((3, b, s), i32),
+                },
+                "train",
+            )
+        return (
+            {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            },
+            "train",
+        )
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return (
+                {
+                    "frames": jax.ShapeDtypeStruct((b, cfg.n_audio_frames, cfg.d_model), f),
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                },
+                "prefill",
+            )
+        if cfg.family == "vlm":
+            nv = cfg.n_frontend_tokens
+            return (
+                {
+                    "tokens": jax.ShapeDtypeStruct((b, s - nv), i32),
+                    "vision_embeds": jax.ShapeDtypeStruct((b, nv, cfg.d_model), f),
+                    "positions": jax.ShapeDtypeStruct((3, b, s), i32),
+                },
+                "prefill",
+            )
+        return ({"tokens": jax.ShapeDtypeStruct((b, s), i32)}, "prefill")
+    # decode: one new token against an S-long cache
+    return ({"token": jax.ShapeDtypeStruct((b, 1), i32)}, "decode")
+
+
+def make_smoke_batch(key, cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """Concrete small training batch for CPU smoke tests."""
+    kt, kv = jax.random.split(key)
+    f = jnp.dtype(cfg.dtype)
+    out: Dict[str, Any] = {
+        "tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab, jnp.int32),
+        "labels": jax.random.randint(kv, (batch, seq), 0, cfg.vocab, jnp.int32),
+    }
+    if cfg.family == "encdec":
+        out["frames"] = (
+            jax.random.normal(kv, (batch, cfg.n_audio_frames, cfg.d_model)) * 0.1
+        ).astype(f)
+    if cfg.family == "vlm":
+        nv = cfg.n_frontend_tokens
+        out["vision_embeds"] = (
+            jax.random.normal(kv, (batch, nv, cfg.d_model)) * 0.1
+        ).astype(f)
+        out["positions"] = vlm.build_mrope_positions(batch, nv, seq)
+        out["labels"] = out["labels"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PTQ: convert trained params to QTensor weights per the precision policy.
+# ---------------------------------------------------------------------------
+def quantize_model_params(params, policy: PrecisionPolicy):
+    """Walk the param tree; replace projection 'w' leaves with QTensors.
+
+    Stacked leading axes (layers and/or experts) are vmapped over.  The
+    embedding table (a gather, not a GEMM) is snapped to the 8-bit DFP grid
+    in place (values quantized, storage dtype unchanged).
+    """
+
+    def quant_w(w, prec):
+        def q2(m):
+            return quantize_weights(
+                m, prec.w_bits, prec.group_size, prec.filter_size, prec.refit_scale
+            )
+
+        fn = q2
+        for _ in range(w.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(w.astype(jnp.float32))
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            out = {}
+            for key, val in node.items():
+                sub = f"{path}/{key}" if path else key
+                if key == "w" and hasattr(val, "ndim") and val.ndim >= 2:
+                    prec = policy.resolve(path)
+                    if prec.quantized and prec.w_bits < 16:
+                        kdim = val.shape[-2]
+                        if kdim % prec.group_size == 0 and kdim % 16 == 0:
+                            out[key] = quant_w(val, prec)
+                            continue
+                    out[key] = val
+                elif key == "table" and hasattr(val, "ndim"):
+                    out[key] = calibration.fake_quantize_act(
+                        val.astype(jnp.float32), 8, per_row=True
+                    ).astype(val.dtype)
+                else:
+                    out[key] = walk(val, sub)
+            return out
+        return node
+
+    return walk(params, "")

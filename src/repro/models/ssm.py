@@ -1,0 +1,258 @@
+"""Selective state-space blocks: Mamba1 (falcon-mamba) and Mamba2 (zamba2).
+
+Sequence processing uses a chunked scan: lax.scan over chunks carrying only
+the recurrent state, with the chunk body checkpointed -- O(S/chunk) state
+checkpoints instead of O(S), which is what lets the 500k-token cell fit.
+
+The paper's quantization applies to the in/out/x/dt projections (~87% of SSM
+params); the scan itself is elementwise (no MAC budget to trade), so A, D,
+conv and dt biases stay in higher precision per the policy
+(DESIGN.md Sec. "Arch-applicability").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import QuantCtx, dense
+
+
+def _dt_rank(cfg) -> int:
+    return max(1, -(-cfg.d_model // 16))
+
+
+def _fit_chunk(s: int, want: int) -> int:
+    """Largest divisor of s that is <= want (scan chunk length)."""
+    c = min(s, want)
+    while s % c:
+        c -= 1
+    return c
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mamba(key, cfg, dtype) -> Dict[str, Any]:
+    di, ds, rank = d_inner(cfg), cfg.ssm_state, _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {
+        "in_proj": layers.init_dense_layer(ks[0], cfg.d_model, 2 * di, False, dtype),
+        "out_proj": layers.init_dense_layer(ks[1], di, cfg.d_model, False, dtype),
+        "conv_w": jax.random.normal(ks[2], (cfg.ssm_conv, di), dtype) * 0.1,
+        "conv_b": jnp.zeros((di,), dtype),
+        "D": jnp.ones((di,), jnp.float32),
+    }
+    if cfg.ssm_version == 1:
+        p["x_proj"] = layers.init_dense_layer(ks[3], di, rank + 2 * ds, False, dtype)
+        p["dt_proj"] = layers.init_dense_layer(ks[4], rank, di, True, dtype)
+        p["A_log"] = jnp.log(
+            jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+        )
+    else:  # mamba2: scalar A per head, B/C projected from the block input
+        nh = cfg.ssm_heads or di // 64
+        p["bc_proj"] = layers.init_dense_layer(ks[3], cfg.d_model, 2 * ds, False, dtype)
+        p["dt_bias"] = jnp.zeros((nh,), jnp.float32)
+        p["A_log"] = jnp.zeros((nh,), jnp.float32)
+        p["norm"] = layers.init_rmsnorm(di, dtype)
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # small static K (4): unrolled taps
+        out = out + xp[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 selective scan (chunked)
+# ---------------------------------------------------------------------------
+def _m1_chunk(h0, xs):
+    """h: (B, di, ds); xs per-step tensors stacked over chunk axis."""
+
+    def step(h, inp):
+        dt, bmat, cmat, xv, a = inp  # dt (B,di), b/c (B,ds), xv (B,di), a (di,ds)
+        da = jnp.exp(dt[..., None] * a)  # (B, di, ds)
+        h = da * h + (dt * xv)[..., None] * bmat[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, cmat)
+        return h, y
+
+    return jax.lax.scan(step, h0, xs)
+
+
+def mamba1_seq(p, x: jax.Array, cfg, ctx: QuantCtx, path: str, chunk: int = 64):
+    """Full-sequence Mamba1. x (B,S,d) -> (B,S,d)."""
+    b, s, d = x.shape
+    di, ds, rank = d_inner(cfg), cfg.ssm_state, _dt_rank(cfg)
+    xz = dense(p["in_proj"], x, f"{path}/in_proj", ctx)
+    xv, z = jnp.split(xz, 2, axis=-1)
+    xv = jax.nn.silu(_causal_conv(xv, p["conv_w"], p["conv_b"]))
+
+    dbc = dense(p["x_proj"], xv, f"{path}/x_proj", ctx)
+    dt_in, bmat, cmat = jnp.split(dbc, [rank, rank + ds], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt_in, f"{path}/dt_proj", ctx))
+    a = -jnp.exp(p["A_log"])  # (di, ds)
+
+    dtf = dt.astype(jnp.float32)
+    xvf = xv.astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+
+    chunk = _fit_chunk(s, chunk)
+    n_chunks = s // chunk
+
+    def outer(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, 1)
+        xs = (
+            jnp.moveaxis(sl(dtf), 1, 0),
+            jnp.moveaxis(sl(bf), 1, 0),
+            jnp.moveaxis(sl(cf), 1, 0),
+            jnp.moveaxis(sl(xvf), 1, 0),
+            jnp.broadcast_to(a, (chunk, *a.shape)),
+        )
+        h, ys = jax.checkpoint(_m1_chunk)(h, xs)
+        return h, jnp.moveaxis(ys, 0, 1)  # (B, chunk, di)
+
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(outer, h0, jnp.arange(n_chunks))
+    # ys: (n_chunks, B, chunk, di) -> (B, S, di)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di)
+    y = (y + xvf * p["D"]) * jax.nn.silu(z.astype(jnp.float32))
+    return dense(p["out_proj"], y.astype(x.dtype), f"{path}/out_proj", ctx)
+
+
+def mamba1_step(p, x: jax.Array, state, cfg, ctx: QuantCtx, path: str):
+    """Single-token decode. x (B,1,d); state = {'h': (B,di,ds), 'conv': (B,K-1,di)}."""
+    b = x.shape[0]
+    di, ds, rank = d_inner(cfg), cfg.ssm_state, _dt_rank(cfg)
+    xz = dense(p["in_proj"], x[:, 0], f"{path}/in_proj", ctx)
+    xv, z = jnp.split(xz, 2, axis=-1)
+
+    conv_buf = jnp.concatenate([state["conv"], xv[:, None, :]], axis=1)  # (B,K,di)
+    w = p["conv_w"]
+    xc = jnp.einsum("bkd,kd->bd", conv_buf.astype(jnp.float32), w.astype(jnp.float32))
+    xv = jax.nn.silu(xc + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    new_conv = conv_buf[:, 1:]
+
+    dbc = dense(p["x_proj"], xv, f"{path}/x_proj", ctx)
+    dt_in, bmat, cmat = jnp.split(dbc, [rank, rank + ds], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt_in, f"{path}/dt_proj", ctx)).astype(
+        jnp.float32
+    )
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt[..., None] * a)
+    h = da * state["h"] + (dt * xv.astype(jnp.float32))[..., None] * bmat.astype(
+        jnp.float32
+    )[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, cmat.astype(jnp.float32))
+    y = (y + xv.astype(jnp.float32) * p["D"]) * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(p["out_proj"], y[:, None].astype(x.dtype), f"{path}/out_proj", ctx)
+    return out, {"h": h, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD: scalar decay per head)
+# ---------------------------------------------------------------------------
+def _m2_heads(cfg) -> Tuple[int, int]:
+    nh = cfg.ssm_heads or d_inner(cfg) // 64
+    return nh, d_inner(cfg) // nh
+
+
+def _m2_chunk(h0, xs):
+    def step(h, inp):
+        # da (B,H); dtx (B,H,hd) = dt*x; b/c (B,ds).  The (hd x ds) outer
+        # product h-update is formed per step -- NEVER materialized over S.
+        da, dtx, b, c = inp
+        h = da[..., None, None] * h + dtx[..., None] * b[:, None, None, :]
+        y = jnp.einsum("bhds,bs->bhd", h, c)
+        return h, y
+
+    return jax.lax.scan(step, h0, xs)
+
+
+def mamba2_seq(p, x: jax.Array, cfg, ctx: QuantCtx, path: str, chunk: int = 64):
+    b, s, d = x.shape
+    di, ds = d_inner(cfg), cfg.ssm_state
+    nh, hd = _m2_heads(cfg)
+    xz = dense(p["in_proj"], x, f"{path}/in_proj", ctx)
+    xv, z = jnp.split(xz, 2, axis=-1)
+    xv = jax.nn.silu(_causal_conv(xv, p["conv_w"], p["conv_b"]))
+    bc = dense(p["bc_proj"], x, f"{path}/bc_proj", ctx)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)  # (B,S,ds) each
+
+    a = -jnp.exp(p["A_log"])  # (H,)
+    # dt derived from x magnitude per head (simplified SSD discretization)
+    xh = xv.reshape(b, s, nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.mean(xh, axis=-1) + p["dt_bias"][None, None, :]
+    )  # (B,S,H)
+    da = jnp.exp(dt * a[None, None, :])  # (B,S,H)
+    dtx = dt[..., None] * xh  # (B,S,H,hd)
+
+    chunk = _fit_chunk(s, chunk)
+    n_chunks = s // chunk
+
+    def outer(h, idx):
+        sl = lambda t, ax=1: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, ax)
+        xs = (
+            jnp.moveaxis(sl(da), 1, 0),
+            jnp.moveaxis(sl(dtx), 1, 0),
+            jnp.moveaxis(sl(bmat.astype(jnp.float32)), 1, 0),
+            jnp.moveaxis(sl(cmat.astype(jnp.float32)), 1, 0),
+        )
+        h, ys = jax.checkpoint(_m2_chunk)(h, xs)
+        return h, ys
+
+    h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    _, ys = jax.lax.scan(outer, h0, jnp.arange(n_chunks))
+    # ys: (n_chunks, chunk, B, H, hd) -> (B, S, di)
+    y = jnp.moveaxis(ys.reshape(n_chunks * chunk, b, nh, hd), 0, 1).reshape(b, s, di)
+    y = y + xv.astype(jnp.float32) * p["D"]
+    y = layers.rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return dense(p["out_proj"], y, f"{path}/out_proj", ctx)
+
+
+def mamba2_step(p, x: jax.Array, state, cfg, ctx: QuantCtx, path: str):
+    b = x.shape[0]
+    di, ds = d_inner(cfg), cfg.ssm_state
+    nh, hd = _m2_heads(cfg)
+    xz = dense(p["in_proj"], x[:, 0], f"{path}/in_proj", ctx)
+    xv, z = jnp.split(xz, 2, axis=-1)
+    conv_buf = jnp.concatenate([state["conv"], xv[:, None, :]], axis=1)
+    xc = jnp.einsum(
+        "bkd,kd->bd", conv_buf.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
+    )
+    xv = jax.nn.silu(xc + p["conv_b"].astype(jnp.float32))
+    bc = dense(p["bc_proj"], x[:, 0], f"{path}/bc_proj", ctx)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    a = -jnp.exp(p["A_log"])
+    xh = xv.reshape(b, nh, hd)
+    dt = jax.nn.softplus(jnp.mean(xh, axis=-1) + p["dt_bias"][None, :])  # (B,H)
+    da = jnp.exp(dt * a[None, :])[..., None, None]
+    dbx = (dt[..., None] * xh)[..., None] * bmat.astype(jnp.float32)[:, None, None, :]
+    h = da * state["h"] + dbx
+    y = jnp.einsum("bhds,bs->bhd", h, cmat.astype(jnp.float32)).reshape(b, di)
+    y = y + xv * p["D"]
+    y = layers.rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = dense(p["out_proj"], y[:, None], f"{path}/out_proj", ctx)
+    return out, {"h": h, "conv": conv_buf[:, 1:]}
+
+
+def init_ssm_state(cfg, batch: int) -> Dict[str, jax.Array]:
+    di, ds = d_inner(cfg), cfg.ssm_state
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, di), jnp.float32)
+    if cfg.ssm_version == 1:
+        return {"h": jnp.zeros((batch, di, ds), jnp.float32), "conv": conv}
+    nh, hd = _m2_heads(cfg)
+    return {"h": jnp.zeros((batch, nh, hd, ds), jnp.float32), "conv": conv}

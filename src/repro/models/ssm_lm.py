@@ -1,0 +1,80 @@
+"""Attention-free Mamba1 LM (falcon-mamba-7b family)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, ssm
+from repro.models.layers import QuantCtx
+from repro.parallel import sharding
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _init_block(key, cfg, dtype):
+    return {
+        "norm": layers.init_rmsnorm(cfg.d_model, dtype),
+        "mamba": ssm.init_mamba(key, cfg, dtype),
+    }
+
+
+def init_ssm_lm(key, cfg) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kb, kh = jax.random.split(key, 3)
+    bkeys = jax.random.split(kb, cfg.n_layers)
+    return {
+        "embed": layers.init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": _stack([_init_block(k, cfg, dtype) for k in bkeys]),
+        "final_norm": layers.init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": layers.init_dense_layer(kh, cfg.d_model, cfg.padded_vocab, False, dtype),
+    }
+
+
+def hidden(params, tokens, cfg, ctx: QuantCtx) -> jax.Array:
+    x = layers.embed(params["embed"], tokens)
+
+    def body(h, bp):
+        h = sharding.constrain(h, ("batch", "seq", None))
+        hin = layers.rmsnorm(bp["norm"], h, cfg.norm_eps)
+        return h + ssm.mamba1_seq(bp["mamba"], hin, cfg, ctx, "mamba"), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+    return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, tokens, cfg, ctx: QuantCtx, positions=None) -> jax.Array:
+    x = hidden(params, tokens, cfg, ctx)
+    return layers.dense(params["lm_head"], x, "lm_head", ctx)
+
+
+def loss_fn(params, batch, cfg, ctx: QuantCtx) -> jax.Array:
+    x = hidden(params, batch["tokens"], cfg, ctx)
+    return layers.lm_head_loss(
+        params["lm_head"], x, batch["labels"], cfg.vocab, "lm_head", ctx
+    )
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    del max_len, dtype  # SSM state is O(1) in context length
+    st = ssm.init_ssm_state(cfg, batch)
+    return {"ssm": jax.tree.map(lambda l: jnp.zeros((cfg.n_layers, *l.shape), l.dtype), st)}
+
+
+def decode_step(params, token, pos, cfg, ctx: QuantCtx, cache):
+    del pos  # recurrent state carries position implicitly
+    x = layers.embed(params["embed"], token)
+
+    def body(h, sc):
+        bp, st = sc
+        hin = layers.rmsnorm(bp["norm"], h, cfg.norm_eps)
+        out, new_st = ssm.mamba1_step(bp["mamba"], hin, st, cfg, ctx, "mamba")
+        return h + out, new_st
+
+    x, new_states = jax.lax.scan(body, x, (params["blocks"], cache["ssm"]))
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return layers.dense(params["lm_head"], x, "lm_head", ctx), {"ssm": new_states}

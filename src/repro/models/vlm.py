@@ -1,0 +1,63 @@
+"""Qwen2-VL-style VLM: the LM backbone with M-RoPE; vision frontend is a
+STUB per the assignment -- inputs carry precomputed patch embeddings that are
+prepended to the text sequence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.layers import QuantCtx
+
+
+def build_mrope_positions(batch: int, n_vis: int, n_text: int, grid: int = 0):
+    """(3, B, S) position ids: vision tokens get (t=0, h, w) grid coords,
+    text tokens advance the temporal component."""
+    if grid <= 0:
+        grid = max(1, int(n_vis**0.5))
+    s = n_vis + n_text
+    t = jnp.concatenate([jnp.zeros((n_vis,), jnp.int32), 1 + jnp.arange(n_text)])
+    idx = jnp.arange(n_vis)
+    h = jnp.concatenate([idx // grid, 1 + jnp.arange(n_text)])
+    w = jnp.concatenate([idx % grid, 1 + jnp.arange(n_text)])
+    pos = jnp.stack([t, h, w]).astype(jnp.int32)  # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, s))
+
+
+def forward(params, batch, cfg, ctx: QuantCtx):
+    return transformer.forward(
+        params,
+        batch["tokens"],
+        cfg,
+        ctx,
+        positions=batch["positions"],
+        extra_embeds=batch["vision_embeds"],
+    )
+
+
+def loss_fn(params, batch, cfg, ctx: QuantCtx):
+    return transformer.loss_fn(
+        params,
+        {
+            "tokens": batch["tokens"],
+            "labels": batch["labels"],
+            "positions": batch["positions"],
+            "extra_embeds": batch["vision_embeds"],
+        },
+        cfg,
+        ctx,
+    )
+
+
+def prefill(params, batch, cfg, ctx: QuantCtx, cache):
+    x = transformer.layers.embed(params["embed"], batch["tokens"])
+    v = batch["vision_embeds"].astype(x.dtype)
+    x = jnp.concatenate([v, x], axis=1)
+    positions = batch["positions"]
+    win = transformer.window_schedule(cfg, cache["k"].shape[2])
+    x, cache = transformer._cache_scan(
+        params, x, positions, cfg, ctx, cache, jnp.int32(0), win
+    )
+    x = transformer.layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return transformer.layers.dense(params["lm_head"], x, "lm_head", ctx), cache

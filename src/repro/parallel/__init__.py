@@ -1,0 +1,7 @@
+"""Distribution: sharding rules and collective helpers."""
+from repro.parallel.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    param_spec,
+)

@@ -1,0 +1,275 @@
+"""Sharding rules: path-pattern -> PartitionSpec over the production mesh.
+
+Two regimes:
+
+  * mode="train": 2-D FSDP x TP sharding.  Projection weights shard the
+    contraction dim over 'data' (ZeRO-3 style, all-gathered per layer inside
+    the layer scan, which XLA overlaps with the previous layer's compute)
+    and the output dim over 'model' (Megatron pairing: qkv/up N-sharded,
+    wo/down K-sharded so no resharding between the paired GEMMs).
+    Optimizer state inherits the same specs.
+
+  * mode="serve": pure TP over 'model'; weights replicated over 'data'
+    (each data row serves independent requests => zero weight collectives
+    per decode step, the right trade for a bandwidth-bound phase).  QTensor
+    fields (packed mantissas + scale tables) shard exactly like the dense
+    weight they replace; cluster scale tables never straddle shards because
+    group_size divides the per-shard K.
+
+Every axis assignment is divisibility-checked against the mesh, falling back
+to replication (e.g. 8 KV heads on a 16-wide model axis -> replicated, as
+Megatron does).  The MoE expert axis shards over 'model' when divisible
+(expert parallelism), else experts stay replicated and the per-expert FFN
+dims shard instead.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# projection name -> (contraction-dim role, output-dim role)
+_N_SHARDED = ("wq", "wk", "wv", "up", "gate", "in_proj", "bc_proj", "dt_proj", "lm_head")
+_K_SHARDED = ("wo", "down", "out_proj", "x_proj")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "name"):
+            parts.append(str(e.name))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _fit(mesh: Mesh, dim: int, axis: Optional[str]) -> Optional[str]:
+    """axis if it exists and divides dim, else None (replicate)."""
+    if axis is None or axis not in mesh.shape:
+        return None
+    return axis if dim % mesh.shape[axis] == 0 else None
+
+
+def _proj_spec(path: str, shape, mesh: Mesh, mode: str) -> P:
+    """Spec for a projection leaf ('w', 'packed' or 'scale_m'): the last two
+    dims are (K-like, N); leading dims are layer/expert stacks."""
+    k_dim, n_dim = shape[-2], shape[-1]
+    name_hit = lambda names: any(re.search(rf"(^|/){n}(/|$)", path) for n in names)
+    if name_hit(_K_SHARDED):
+        tp_on_k = True
+    elif name_hit(_N_SHARDED):
+        tp_on_k = False
+    else:
+        tp_on_k = False
+
+    if mode == "serve":
+        fsdp = None
+    else:
+        fsdp = "data"
+
+    if tp_on_k:
+        k_ax = _fit(mesh, k_dim, "model")
+        n_ax = _fit(mesh, n_dim, fsdp)
+    else:
+        k_ax = _fit(mesh, k_dim, fsdp)
+        n_ax = _fit(mesh, n_dim, "model")
+
+    lead: list = [None] * (len(shape) - 2)
+    # expert stacks: shard the expert axis over 'model' when divisible (EP)
+    if "experts" in path and len(shape) >= 3:
+        e_dim = shape[-3]
+        ep = _fit(mesh, e_dim, "model")
+        if ep is not None:
+            lead[-1] = ep
+            # model axis consumed by EP -> drop TP on the inner dims
+            if k_ax == "model":
+                k_ax = None
+            if n_ax == "model":
+                n_ax = None
+    return P(*lead, k_ax, n_ax)
+
+
+def _vector_spec(path: str, shape, mesh: Mesh) -> P:
+    """1-D-ish params (norm scales, biases, conv, A_log...): replicate."""
+    return P(*([None] * len(shape)))
+
+
+def param_spec(path: str, leaf, mesh: Mesh, mode: str) -> P:
+    shape = leaf.shape
+    if re.search(r"(^|/)(table)$", path):  # embedding (V, d): vocab over model
+        v_ax = _fit(mesh, shape[0], "model")
+        d_ax = _fit(mesh, shape[1], "data") if mode == "train" else None
+        return P(v_ax, d_ax)
+    if re.search(r"(^|/)(enc_pos|dec_pos)$", path):
+        return P(None, None)
+    if path.endswith("/w") or path.endswith("/packed") or path.endswith("/scale_m"):
+        if len(shape) >= 2:
+            return _proj_spec(path, shape, mesh, mode)
+    if path.endswith("/scale_e") or leaf.ndim == 0:
+        return P()
+    return _vector_spec(path, shape, mesh)
+
+
+def param_shardings(params_shapes: Any, mesh: Mesh, mode: str = "train"):
+    """Pytree of NamedSharding matching ``params_shapes`` (from eval_shape)."""
+
+    def spec(path, leaf):
+        return NamedSharding(mesh, param_spec(_path_str(path), leaf, mesh, mode))
+
+    return jax.tree_util.tree_map_with_path(spec, params_shapes)
+
+
+def opt_shardings(opt_shapes: Any, mesh: Mesh, mode: str = "train"):
+    """Optimizer-state shardings: moments inherit the owning param's spec
+    (ZeRO: m/v sharded exactly like the weight); per-row exponents drop the
+    last axis; the step counter is replicated."""
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        if p == "step":
+            return NamedSharding(mesh, P())
+        # paths look like m/<param path>/q | m/<param path>/e | m/<param path>
+        parts = p.split("/")
+        core = "/".join(parts[1:])
+        if core.endswith("/q"):
+            base = param_spec(core[:-2], leaf, mesh, mode)
+            return NamedSharding(mesh, base)
+        if core.endswith("/e"):
+            # exponent: same leading spec, last axis (size 1) replicated
+            fake = jax.ShapeDtypeStruct(leaf.shape[:-1] + (1,), leaf.dtype)
+            base = param_spec(core[:-2], fake, mesh, mode)
+            return NamedSharding(mesh, P(*(list(base)[: leaf.ndim - 1] + [None])))
+        return NamedSharding(mesh, param_spec(core, leaf, mesh, mode))
+
+    return jax.tree_util.tree_map_with_path(spec, opt_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (perf lever; see EXPERIMENTS.md Sec. Perf)
+# ---------------------------------------------------------------------------
+# Model code is mesh-agnostic; launchers install the ambient mesh here and
+# `constrain` becomes a with_sharding_constraint with divisibility checks.
+# Logical axes: "batch" -> (pod, data);  "seq"/"feat"/"expert" -> model.
+_ACT_MESH: list = [None]
+
+# Perf iteration C4 toggle (see EXPERIMENTS.md): flash-decoding-style
+# sequence sharding for GQA caches whose head count does not divide TP.
+KV_SEQ_SHARD: list = [True]
+
+
+def set_activation_mesh(mesh: Optional[Mesh]) -> None:
+    _ACT_MESH[0] = mesh
+
+
+def constrain(x, logical_axes) -> Any:
+    """Apply a sharding constraint if an activation mesh is installed.
+
+    logical_axes: tuple like ("batch", "seq", None); axes that do not divide
+    the corresponding dim fall back to replicated.
+    """
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return x
+    names = []
+    for dim, ax in zip(x.shape, logical_axes):
+        if ax == "batch":
+            cand = batch_axes(mesh)
+            if cand is not None:
+                total = 1
+                for a in cand:
+                    total *= mesh.shape[a]
+                cand = cand if dim % total == 0 else None
+            names.append(cand)
+        elif ax in ("seq", "feat", "expert", "heads"):
+            names.append(_fit(mesh, dim, "model"))
+        else:
+            names.append(None)
+    names += [None] * (x.ndim - len(names))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*names)))
+
+
+# ---------------------------------------------------------------------------
+# Data / cache shardings
+# ---------------------------------------------------------------------------
+def batch_axes(mesh: Mesh):
+    """Logical batch axis = all data-parallel mesh axes."""
+    names = [n for n in ("pod", "data") if n in mesh.shape]
+    return tuple(names) if names else None
+
+
+def batch_shardings(batch_shapes: Any, mesh: Mesh):
+    """Shard the leading (batch) axis of every input over pod+data."""
+    baxes = batch_axes(mesh)
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        shape = leaf.shape
+        if p.endswith("positions") and len(shape) == 3:  # (3, B, S)
+            return NamedSharding(mesh, P(None, baxes, None))
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        b_dim = shape[0]
+        ax = baxes
+        if ax is not None:
+            total = 1
+            for a in ax:
+                total *= mesh.shape[a]
+            if b_dim % total != 0:
+                ax = None
+        return NamedSharding(mesh, P(ax, *([None] * (len(shape) - 1))))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shapes)
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh):
+    """KV caches (L, B, S, Kh, hd) and SSM states (L, B, ...): batch over
+    pod+data, kv-heads over model when divisible."""
+    baxes = batch_axes(mesh)
+
+    def divisible(dim):
+        if baxes is None:
+            return False
+        total = 1
+        for a in baxes:
+            total *= mesh.shape[a]
+        return dim % total == 0
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        p = _path_str(path)
+        if p.endswith("enc_out") and len(shape) == 3:  # (B, T, d)
+            return NamedSharding(mesh, P(baxes if divisible(shape[0]) else None, None, None))
+        if len(shape) == 5:  # (L, B, S, Kh, hd)
+            bax = baxes if divisible(shape[1]) else None
+            # batch=1 long-context: shard the sequence over the data axes
+            sax = None if bax else (baxes if divisible(shape[2]) else None)
+            kh = _fit(mesh, shape[3], "model")
+            # GQA caches whose kv-head count does not divide the TP width:
+            # shard the SEQUENCE over 'model' (flash-decoding style: scores
+            # and PV partials reduce across shards; the cache itself never
+            # moves).  Sharding hd instead makes the partitioner all-gather
+            # the converted f32 cache -- 1 GiB/step on qwen1.5 x decode_32k
+            # (Perf iteration C4).
+            s_model = None
+            if KV_SEQ_SHARD[0] and kh is None and sax is None:
+                s_model = _fit(mesh, shape[2], "model")
+            hd = None if (kh or s_model) else _fit(mesh, shape[4], "model")
+            return NamedSharding(mesh, P(None, bax, s_model or sax, kh, hd))
+        if len(shape) >= 2:
+            # stacked ssm states (L, B, ...): feature axis over model if possible
+            bax = baxes if divisible(shape[1]) else None
+            rest = [None] * (len(shape) - 2)
+            if len(shape) >= 3:
+                rest[0] = _fit(mesh, shape[2], "model")
+            return NamedSharding(mesh, P(None, bax, *rest))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)

@@ -1,0 +1,2 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.analysis import Roofline, analyze, collective_bytes

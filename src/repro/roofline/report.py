@@ -1,0 +1,105 @@
+"""Render the EXPERIMENTS.md roofline tables from dry-run JSON sweeps."""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from repro import configs
+from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_BF16_FLOPS
+
+
+def _model_flops(row: Dict) -> float:
+    """6*N*D for train (fwd+bwd), 2*N_active*D for one serve step."""
+    cfg = configs.get_config(row["arch"])
+    shape = configs.get_shape(row["shape"])
+    n = row["n_params"]
+    if cfg.n_experts:  # active params: experts scaled by top_k/E
+        api_n = n  # total; approximate expert share via ffn fraction
+        expert_frac = (
+            3 * cfg.d_ff * cfg.d_model * cfg.n_experts * cfg.n_layers
+        ) / max(n, 1)
+        n = n * (1 - expert_frac) + n * expert_frac * cfg.top_k / cfg.n_experts
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def load(path: str) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(rows: List[Dict]) -> str:
+    out = [
+        "| arch | shape | mesh | mode | compute ms | memory ms | collective ms "
+        "| dominant | roofline frac | MODEL/HLO flops | args GiB | temps GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | - | - | skipped | - | - | - |"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | - | - | FAILED | - | - | - |"
+            )
+            continue
+        roof = r["roofline_s"]
+        per = r["per_device"]
+        ma = r["memory_analysis"]
+        total = roof["compute"] + roof["memory"] + roof["collective"]
+        frac = max(roof["compute"], roof["memory"], roof["collective"]) / total if total else 0
+        chips = r["n_chips"]
+        mf = _model_flops(r) / chips
+        useful = mf / per["flops"] if per["flops"] else 0.0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['quant_mode']} "
+            f"| {roof['compute'] * 1e3:.2f} | {roof['memory'] * 1e3:.2f} "
+            f"| {roof['collective'] * 1e3:.2f} | {roof['dominant']} | {frac:.2f} "
+            f"| {useful:.2f} | {ma['argument_size'] / 2**30:.2f} "
+            f"| {ma['temp_size'] / 2**30:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def summarize(rows: List[Dict]) -> Dict[str, List[str]]:
+    """Classify cells for the hillclimb pick (worst frac / most collective)."""
+    ok = [r for r in rows if r["status"] == "ok"]
+
+    def frac(r):
+        roof = r["roofline_s"]
+        tot = roof["compute"] + roof["memory"] + roof["collective"]
+        return max(roof.values(), key=lambda v: v if isinstance(v, float) else 0) / tot if tot else 0
+
+    coll_bound = sorted(
+        ok,
+        key=lambda r: -(
+            r["roofline_s"]["collective"]
+            / max(r["roofline_s"]["compute"] + r["roofline_s"]["memory"] + r["roofline_s"]["collective"], 1e-12)
+        ),
+    )
+    worst_frac = sorted(ok, key=lambda r: _useful(r))
+    return {
+        "most_collective_bound": [f"{r['arch']}x{r['shape']}" for r in coll_bound[:5]],
+        "worst_useful_flops": [f"{r['arch']}x{r['shape']}" for r in worst_frac[:5]],
+    }
+
+
+def _useful(r) -> float:
+    per = r["per_device"]
+    return (_model_flops(r) / r["n_chips"]) / per["flops"] if per["flops"] else 0.0
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = load(sys.argv[1])
+    print(table(rows))
+    print()
+    print(json.dumps(summarize(rows), indent=1))

@@ -1,0 +1,3 @@
+"""Serving substrate: continuous-batching engine, samplers, KV caches."""
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.sampler import SamplerConfig, sample

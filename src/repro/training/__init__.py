@@ -1,0 +1,3 @@
+"""Training substrate: optimizer, trainer, checkpointing, data pipeline."""
+from repro.training.optimizer import OptConfig, apply_updates, init_state
+from repro.training.trainer import TrainConfig, Trainer, make_train_step

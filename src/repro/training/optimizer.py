@@ -1,0 +1,134 @@
+"""AdamW from scratch, with optional 8-bit dynamic-fixed-point moments.
+
+``state_bits=8`` stores the first/second moments as int8 mantissas with
+per-row shared exponents -- the paper's own DFP machinery applied to
+optimizer state (a ZeRO-style 4x memory cut for m and v; this is what lets
+the 314B-param training cell fit 16 GB/chip on the dry-run mesh).
+
+The second moment is quantized in the SQRT domain: int8 mantissas of
+sqrt(v), not v.  With a direct-v encoding, an element whose v rounds to 0
+while its m does not explodes the update (m / (sqrt(0)+eps)); in sqrt
+domain both mantissas are proportional to |g|, so whenever sqrt(v) rounds
+to zero the matching m does too and the update stays bounded.
+
+QTensor (PTQ) leaves and integer leaves are not trainable and are skipped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_bits: int = 32  # 32 or 8 (DFP moments)
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    t = jnp.clip((s - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.minimum(warm, 1.0) * jnp.where(s < cfg.warmup_steps, 1.0, cos)
+
+
+def _trainable(leaf) -> bool:
+    return hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating)
+
+
+def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-row 8-bit DFP (exponent shared over the last axis)."""
+    axis = (x.ndim - 1,) if x.ndim else None
+    return dfp.quantize_tensor(x.astype(jnp.float32), 8, axis)
+
+
+def _dq8(q: jax.Array, e: jax.Array) -> jax.Array:
+    return dfp.dequantize(q, e)
+
+
+def _q8_sqrt(v: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Second moment: quantize sqrt(v) (see module docstring)."""
+    return _q8(jnp.sqrt(jnp.maximum(v, 0.0)))
+
+
+def _dq8_sqrt(q: jax.Array, e: jax.Array) -> jax.Array:
+    u = _dq8(q, e)
+    return u * u
+
+
+def init_state(params: Any, cfg: OptConfig) -> Dict[str, Any]:
+    def zero_moment(leaf):
+        if not _trainable(leaf):
+            return None
+        z = jnp.zeros(leaf.shape, jnp.float32)
+        if cfg.state_bits == 8:
+            q, e = _q8(z)
+            return {"q": q, "e": e}
+        return z
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zero_moment, params),
+        "v": jax.tree.map(zero_moment, params),  # sqrt-domain when 8-bit
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [l for l in jax.tree.leaves(tree) if _trainable(l)]
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def apply_updates(
+    params: Any, grads: Any, state: Dict[str, Any], cfg: OptConfig
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    is_entry = lambda n: isinstance(n, dict) and set(n) == {"q", "e"}
+
+    def upd(p, g, m, v):
+        if not _trainable(p) or g is None:
+            return p, m, v
+        g = g.astype(jnp.float32) * clip
+        mf = _dq8(m["q"], m["e"]) if cfg.state_bits == 8 else m
+        vf = _dq8_sqrt(v["q"], v["e"]) if cfg.state_bits == 8 else v
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * jnp.square(g)
+        mh = mf / b1c
+        vh = vf / b2c
+        pf = p.astype(jnp.float32)
+        new_p = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * pf)
+        if cfg.state_bits == 8:
+            mq, me = _q8(mf)
+            vq, ve = _q8_sqrt(vf)
+            return new_p.astype(p.dtype), {"q": mq, "e": me}, {"q": vq, "e": ve}
+        return new_p.astype(p.dtype), mf, vf
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.flatten(state["m"], is_leaf=lambda n: n is None or is_entry(n))[0]
+    flat_v = jax.tree.flatten(state["v"], is_leaf=lambda n: n is None or is_entry(n))[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, {"step": step, "m": new_m, "v": new_v}, metrics

@@ -1,0 +1,65 @@
+"""Calibration observers, BN-recompute analogue, and precision policy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import calibration, dfp
+from repro.core.policy import FULL_PRECISION, PrecisionPolicy
+
+
+def test_observer_tracks_max_and_msq():
+    st = calibration.init_observer()
+    st = calibration.observe(st, "act0", jnp.asarray([1.0, -3.0]))
+    st = calibration.observe(st, "act0", jnp.asarray([2.0, 0.5]))
+    assert float(st["act0"]["max_abs"]) == 3.0
+    assert float(st["act0"]["count"]) == 2.0
+    exps = calibration.finalize(st)
+    # static exponent covers the observed range
+    assert 3.0 <= dfp.qmax(8) * 2.0 ** float(exps["act0"])
+
+
+def test_static_vs_dynamic_quantization_agree_on_seen_range():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    st = calibration.observe(calibration.init_observer(), "s", x)
+    e = calibration.finalize(st)["s"]
+    q_static = calibration.quantize_act(x, e)
+    rec = dfp.dequantize(q_static, e)
+    step = 2.0 ** float(e)
+    assert float(jnp.max(jnp.abs(x - rec))) <= step / 2 + 1e-6
+
+
+def test_recalibrate_gamma_restores_rms():
+    """The BN-recompute analogue: rescaled gain matches fp second moments."""
+    gamma = jnp.ones((8,))
+    g2 = calibration.recalibrate_gamma(gamma, rms_fp=jnp.asarray(4.0), rms_q=jnp.asarray(1.0))
+    assert float(g2[0]) == pytest.approx(2.0, rel=1e-3)
+
+
+def test_policy_paper_rules():
+    pol = PrecisionPolicy.ternary(group_size=64)
+    assert pol.resolve("blocks/attn/wq/w").w_bits == 2  # default ternary
+    assert pol.resolve("embed/table").w_bits == 8  # C1 analogue
+    assert pol.resolve("lm_head/w").w_bits == 8  # FC analogue
+    assert pol.resolve("blocks/moe/router/w").w_bits == 8  # control path
+    assert pol.resolve("blocks/ln1/norm").w_bits == FULL_PRECISION
+    assert pol.resolve("mamba/conv1d").w_bits == FULL_PRECISION
+    # all activations 8-bit everywhere (paper Sec. 4)
+    assert pol.resolve("blocks/mlp/up/w").act_bits == 8
+
+
+def test_policy_first_match_wins():
+    pol = PrecisionPolicy.int4(group_size=32)
+    assert pol.resolve("blocks/mlp/gate/w").w_bits == 4
+    assert pol.resolve("frontend/patch/w").w_bits == 8
+
+
+def test_per_row_dynamic_quant_tightens_ranges():
+    """Per-token exponents beat a per-tensor exponent on skewed rows."""
+    x = jnp.asarray([[0.01] * 32, [100.0] * 32], jnp.float32)
+    per_tensor = calibration.fake_quantize_act(x, 8, per_row=False)
+    per_row = calibration.fake_quantize_act(x, 8, per_row=True)
+    err_t = float(jnp.sum((x - per_tensor) ** 2))
+    err_r = float(jnp.sum((x - per_row) ** 2))
+    assert err_r <= err_t

@@ -1,0 +1,52 @@
+"""Smoke the multi-pod dry-run machinery end-to-end (subprocess: it must set
+XLA_FLAGS before jax initializes, which cannot happen inside this process)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=420):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO,
+    )
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_single_pod():
+    with tempfile.NamedTemporaryFile(suffix=".json") as f:
+        r = _run(["--arch", "whisper-base", "--shape", "decode_32k", "--json", f.name])
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        rows = json.load(open(f.name))
+        assert rows[0]["status"] == "ok"
+        assert rows[0]["mesh"] == "16x16"
+        assert rows[0]["per_device"]["flops"] > 0
+        assert rows[0]["roofline_s"]["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_multi_pod():
+    with tempfile.NamedTemporaryFile(suffix=".json") as f:
+        r = _run(
+            ["--arch", "gemma3-12b", "--shape", "long_500k", "--multi-pod",
+             "--json", f.name]
+        )
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        rows = json.load(open(f.name))
+        assert rows[0]["status"] == "ok"
+        assert rows[0]["mesh"] == "2x16x16"
+
+
+def test_dryrun_skip_rule():
+    """Pure full-attention archs skip long_500k without touching jax."""
+    r = _run(["--arch", "qwen3-8b", "--shape", "long_500k"], timeout=120)
+    assert r.returncode == 0
+    assert "skipped" in r.stdout

@@ -1,0 +1,100 @@
+"""Pallas kernels (interpret mode) vs the pure-jnp oracle: shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizer import quantize_weights
+from repro.kernels import ops, ref
+from repro.kernels.int4_matmul import int4_matmul
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.quantize import quantize_rows
+from repro.kernels.ternary_matmul import ternary_matmul
+
+KERNELS = {2: ternary_matmul, 4: int4_matmul, 8: int8_matmul}
+
+
+def _setup(m, k, n, g, bits, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    qt = quantize_weights(jnp.asarray(rng.normal(size=(k, n)), jnp.float32), bits, g)
+    xq, xe = ref.quantize_rows_ref(x, 8)
+    return x, xq, xe, qt
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize(
+    "m,k,n,g,bk",
+    [
+        (8, 64, 32, 16, 32),
+        (16, 256, 128, 64, 128),
+        (4, 128, 16, 32, 128),  # bk == k
+        (32, 512, 64, 64, 256),
+    ],
+)
+def test_qmm_kernels_exact_vs_ref(bits, m, k, n, g, bk):
+    x, xq, xe, qt = _setup(m, k, n, g, bits)
+    want_int = ref.qmatmul_ref(xq, xe, qt)
+    kern = KERNELS[bits]
+    raw = kern(
+        xq, qt.packed, qt.scale_m, group=g,
+        block_m=min(8, m), block_n=min(128, n), block_k=bk, interpret=True,
+    )
+    got = raw * jnp.exp2(qt.scale_e.astype(jnp.float32) + xe.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_int), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_ops_qmatmul_backends_agree(bits):
+    x, xq, xe, qt = _setup(16, 256, 64, 64, bits, seed=3)
+    want = ref.qmatmul_ref(xq, xe, qt)
+    got_pallas = ops.qmatmul(x, qt, backend="pallas", block_k=128)
+    np.testing.assert_allclose(np.asarray(got_pallas), np.asarray(want), rtol=1e-6)
+    got_xla = ops.qmatmul(x, qt, backend="xla")
+    # bf16 dequant path: same math, bf16 rounding
+    denom = np.abs(np.asarray(want)).max() + 1e-9
+    assert np.abs(np.asarray(got_xla) - np.asarray(want)).max() / denom < 2e-2
+
+
+def test_qmatmul_batched_leading_dims():
+    x, _, _, qt = _setup(12, 128, 32, 32, 2, seed=5)
+    xb = x.reshape(3, 4, 128)
+    out = ops.qmatmul(xb, qt, backend="pallas", block_k=128)
+    flat = ops.qmatmul(x, qt, backend="pallas", block_k=128)
+    np.testing.assert_allclose(np.asarray(out.reshape(12, 32)), np.asarray(flat))
+
+
+def test_qmatmul_row_padding():
+    """Ragged serving batches: M not a multiple of the tile."""
+    x, _, _, qt = _setup(7, 64, 16, 16, 2, seed=6)
+    got = ops.qmatmul(x, qt, backend="pallas", block_k=64)
+    want = ops.qmatmul(x, qt, backend="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,d", [(8, 64), (32, 512), (256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_rows_kernel(m, d, dtype):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(m, d)) * 10, dtype)
+    q, e = quantize_rows(x, interpret=True, block_m=min(64, m))
+    qr, er = ref.quantize_rows_ref(x, 8)
+    assert (np.asarray(q) == np.asarray(qr)).all()
+    assert (np.asarray(e) == np.asarray(er)).all()
+
+
+def test_quantize_rows_zero_row():
+    x = jnp.zeros((8, 32))
+    q, e = quantize_rows(x, interpret=True)
+    assert (np.asarray(q) == 0).all()
+
+
+def test_integer_pipeline_is_integer():
+    """The kernel's accumulation is exactly int32: outputs on the scale grid."""
+    x, xq, xe, qt = _setup(4, 64, 8, 16, 2, seed=7)
+    raw = ternary_matmul(
+        xq, qt.packed, qt.scale_m, group=16, block_m=4, block_n=8,
+        block_k=64, interpret=True,
+    )
+    # raw = sum_g int32_partial * int8_scale -> every value is an integer
+    assert np.allclose(np.asarray(raw), np.round(np.asarray(raw)))

@@ -1,0 +1,145 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+shape + finiteness assertions (assignment requirement), plus QAT and PTQ
+variants for a representative subset.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.base import QuantConfig
+from repro.models import (
+    build_model,
+    make_ctx,
+    make_smoke_batch,
+    quantize_model_params,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    api = build_model(cfg)
+    params = api.init(KEY)
+    batch = make_smoke_batch(jax.random.PRNGKey(1), cfg, batch=2, seq=16)
+
+    logits = api.forward(params, batch)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.padded_vocab
+    assert bool(jnp.isfinite(logits).all())
+
+    loss, grads = jax.value_and_grad(api.train_loss)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    gn = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), grads, 0.0
+    )
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = configs.get_smoke(arch)
+    api = build_model(cfg)
+    params = api.init(KEY)
+    cache = api.init_cache(2, 32)
+    logits, new_cache = api.decode(params, jnp.ones((2, 1), jnp.int32), jnp.int32(0), cache)
+    assert logits.shape == (2, 1, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "grok-1-314b", "zamba2-7b"])
+def test_smoke_qat_step(arch):
+    cfg = configs.get_smoke(arch, QuantConfig(w_bits=2, group_size=16, mode="qat"))
+    api = build_model(cfg)
+    params = api.init(KEY)
+    batch = make_smoke_batch(jax.random.PRNGKey(1), cfg, batch=2, seq=16)
+    loss, grads = jax.value_and_grad(api.train_loss)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    # STE: gradient reaches the fp32 master weights of quantized layers
+    gw = grads["blocks"]["attn"]["wq"]["w"] if arch != "zamba2-7b" else (
+        grads["mamba_stack"]["mamba"]["in_proj"]["w"]
+    )
+    assert float(jnp.sum(jnp.abs(gw))) > 0
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_smoke_ptq_bits(bits):
+    cfg = configs.get_smoke(
+        "qwen3-8b", QuantConfig(w_bits=bits, group_size=16, mode="ptq", backend="xla")
+    )
+    api = build_model(cfg)
+    params = api.init(KEY)
+    qparams = quantize_model_params(params, api.ctx.policy)
+    batch = make_smoke_batch(jax.random.PRNGKey(1), cfg, batch=2, seq=16)
+    logits = api.forward(qparams, batch)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_ptq_error_decreases_with_bits():
+    """PTQ logits should approach the fp logits as bits grow (paper Fig. 1)."""
+    cfg = configs.get_smoke("phi4-mini-3.8b")
+    api = build_model(cfg)
+    params = api.init(KEY)
+    batch = make_smoke_batch(jax.random.PRNGKey(1), cfg, batch=2, seq=16)
+    ref = api.forward(params, batch).astype(jnp.float32)
+
+    errs = {}
+    for bits in (2, 4, 8):
+        qcfg = configs.get_smoke(
+            "phi4-mini-3.8b",
+            QuantConfig(w_bits=bits, group_size=16, mode="ptq", backend="xla"),
+        )
+        qapi = build_model(qcfg)
+        qparams = quantize_model_params(params, qapi.ctx.policy)
+        out = qapi.forward(qparams, batch).astype(jnp.float32)
+        errs[bits] = float(jnp.mean((out - ref) ** 2))
+    assert errs[8] < errs[4] < errs[2]
+
+
+def test_gemma3_local_global_schedule():
+    from repro.models.transformer import window_schedule
+
+    cfg = configs.get_smoke("gemma3-12b")
+    win = window_schedule(cfg, 64)
+    assert win.shape == (cfg.n_layers,)
+    # 5 local : 1 global (global = seq_len + 1 sentinel)
+    assert int(win[5]) == 65 and all(int(win[i]) == 8 for i in range(5))
+
+
+def test_full_configs_match_assignment():
+    """The exact published numbers from the assignment table."""
+    c = configs.get_config("grok-1-314b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (64, 6144, 48, 8)
+    assert (c.d_ff, c.vocab, c.n_experts, c.top_k) == (32768, 131072, 8, 2)
+    c = configs.get_config("arctic-480b")
+    assert (c.n_layers, c.d_model, c.n_experts) == (35, 7168, 128)
+    assert c.moe_dense_residual
+    c = configs.get_config("qwen1.5-110b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (80, 8192, 49152, 152064)
+    assert c.qkv_bias
+    c = configs.get_config("qwen3-8b")
+    assert c.qk_norm and (c.n_layers, c.d_model) == (36, 4096)
+    c = configs.get_config("gemma3-12b")
+    assert c.local_global_ratio == 5 and c.vocab == 262144
+    c = configs.get_config("qwen2-vl-72b")
+    assert c.mrope and c.frontend == "vision"
+    c = configs.get_config("zamba2-7b")
+    assert (c.n_layers, c.ssm_state, c.ssm_version) == (81, 64, 2)
+    c = configs.get_config("falcon-mamba-7b")
+    assert (c.n_layers, c.ssm_state, c.ssm_version) == (64, 16, 1)
+    assert c.is_attention_free()
+    c = configs.get_config("whisper-base")
+    assert (c.n_enc_layers, c.n_layers, c.d_model, c.vocab) == (6, 6, 512, 51865)
+    c = configs.get_config("phi4-mini-3.8b")
+    assert (c.n_layers, c.d_model, c.vocab) == (32, 3072, 200064)
+
+
+def test_long_context_skip_list():
+    """long_500k runs only for sub-quadratic archs (assignment rule)."""
+    runs = {a for a in configs.ARCH_IDS if configs.get_config(a).supports_long_context()}
+    assert runs == {"gemma3-12b", "zamba2-7b", "falcon-mamba-7b"}

@@ -1,0 +1,129 @@
+"""Hypothesis property tests for the quantization core."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings
+
+from repro.core import dfp, quantizer, ternary
+
+F32 = hnp.arrays(
+    np.float32,
+    st.tuples(st.integers(2, 6).map(lambda x: x * 16), st.integers(1, 8)),
+    elements=st.floats(-100, 100, width=32),
+)
+
+
+@given(F32, st.sampled_from([4, 8]))
+@settings(max_examples=30, deadline=None)
+def test_dfp_error_bound(x, bits):
+    """|x - dq(q(x))| <= 2**(e-1) elementwise (round-to-nearest), when not clipped."""
+    q, e = dfp.quantize_tensor(jnp.asarray(x), bits)
+    rec = np.asarray(dfp.dequantize(q, e))
+    step = 2.0 ** float(e)
+    assert np.all(np.abs(x - rec) <= step / 2 + 1e-6)
+
+
+@given(F32)
+@settings(max_examples=30, deadline=None)
+def test_dfp_idempotent(x):
+    """Quantizing an already-quantized tensor is exact."""
+    y = np.asarray(dfp.fake_quantize(jnp.asarray(x), 8))
+    z = np.asarray(dfp.fake_quantize(jnp.asarray(y), 8))
+    assert np.allclose(y, z)
+
+
+@given(
+    hnp.arrays(
+        np.float32, (64, 4),
+        elements=st.floats(-10, 10, width=32), unique=True,
+    ),
+    st.floats(0.1, 8.0),
+)
+@settings(max_examples=25, deadline=None)
+def test_ternary_scale_equivariance(w, c):
+    """W -> cW  =>  reconstruction error scales by c^2 (the true invariant --
+    the argmin itself may flip between near-tied optima under fp scaling)."""
+
+    def recon_err(mat, codes, alpha):
+        rec = ternary.ternary_dequantize(codes, alpha, 32)
+        return float(jnp.sum((mat - rec) ** 2))
+
+    w1 = jnp.asarray(w)
+    w2 = w1 * c
+    k1, a1 = ternary.ternarize_matrix(w1, 32, 8)
+    k2, a2 = ternary.ternarize_matrix(w2, 32, 8)
+    # unique elements => no |w| == alpha exact ties (the paper's strict
+    # threshold is discontinuous there, e.g. for constant matrices)
+    e1 = recon_err(w1, k1, a1)
+    e2 = recon_err(w2, k2, a2)
+    tol = max(0.02 * e1 * c * c, 1e-3 * float(jnp.sum(w2 * w2)) + 1e-6)
+    assert abs(e2 - e1 * c * c) <= tol
+
+
+@given(hnp.arrays(np.int8, (64, 8), elements=st.integers(-1, 1)))
+@settings(max_examples=25, deadline=None)
+def test_pack2_roundtrip(codes):
+    packed = quantizer.pack2(jnp.asarray(codes))
+    assert packed.shape == (4, 8)
+    assert (np.asarray(quantizer.unpack2(packed, 64)) == codes).all()
+
+
+@given(hnp.arrays(np.int8, (32, 4), elements=st.integers(-7, 7)))
+@settings(max_examples=25, deadline=None)
+def test_pack4_roundtrip(q):
+    packed = quantizer.pack4(jnp.asarray(q))
+    assert packed.shape == (4, 4)
+    assert (np.asarray(quantizer.unpack4(packed, 32)) == q).all()
+
+
+@given(
+    hnp.arrays(
+        np.float32, (128, 2),
+        elements=st.floats(-5, 5, width=32), unique=True,
+    ),
+    st.sampled_from([2, 4, 8]),
+)
+@settings(max_examples=20, deadline=None)
+def test_monotone_error_in_bits(w, bits):
+    """More bits never increases quantization error (same grouping), up to
+    the 8-bit scale-table quantization wobble (paper Alg. 1 step 9)."""
+    errs = {
+        b: float(quantizer.weight_quantization_error(jnp.asarray(w), b, 32, 8))
+        for b in (2, 4, 8)
+    }
+    tol = 1e-4 + 1e-4 * float(np.sum(w.astype(np.float64) ** 2))
+    assert errs[8] <= errs[4] + tol
+    assert errs[4] <= errs[2] + tol
+
+
+@given(hnp.arrays(np.float32, (64, 2), elements=st.floats(-5, 5, width=32)))
+@settings(max_examples=20, deadline=None)
+def test_cluster_independence(w):
+    """Perturbing one cluster leaves other clusters' scales unchanged."""
+    g = 32
+    _, a1 = ternary.ternarize_matrix(jnp.asarray(w), g, 8)
+    w2 = np.array(w)
+    w2[:g, 0] *= 3.7  # only cluster (0, 0)
+    _, a2 = ternary.ternarize_matrix(jnp.asarray(w2), g, 8)
+    a1n, a2n = np.asarray(a1), np.asarray(a2)
+    mask = np.ones_like(a1n, bool)
+    mask[0, 0] = False
+    assert np.allclose(a1n[mask], a2n[mask])
+
+
+@given(
+    hnp.arrays(np.float32, (64, 3), elements=st.floats(-50, 50, width=32)),
+    st.sampled_from([2, 4, 8]),
+)
+@settings(max_examples=20, deadline=None)
+def test_qtensor_roundtrip_structure(w, bits):
+    qt = quantizer.quantize_weights(jnp.asarray(w), bits, 16, 4)
+    rec = quantizer.dequantize_weights(qt)
+    assert rec.shape == w.shape
+    assert qt.scale_m.dtype == jnp.int8
+    # scale table quantized to 8-bit: dequantized scales on the DFP grid
+    scales = np.asarray(quantizer.dequantize_scales(qt.scale_m, qt.scale_e))
+    step = 2.0 ** float(qt.scale_e)
+    assert np.allclose(scales / step, np.round(scales / step), atol=1e-4)

@@ -1,0 +1,110 @@
+"""Unit tests for the loop-expanded HLO cost model."""
+import pytest
+
+from repro.roofline.hlo_cost import HloCostModel, loop_expanded_cost
+
+HLO = """
+HloModule test
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %w = f32[128,128]{1,0} constant({...})
+  %y = f32[8,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,128]{1,0} all-reduce(%y), to_apply=%sum
+  ROOT %t = (s32[], f32[8,128]) tuple(%ni, %ar)
+}
+
+%cond (pc: (s32[], f32[8,128])) -> pred[] {
+  %pc = (s32[], f32[8,128]) parameter(0)
+  %ic = s32[] get-tuple-element(%pc), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%ic, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,128]) tuple(%z, %a)
+  %loop = (s32[], f32[8,128]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_while_trip_count_expansion():
+    c = loop_expanded_cost(HLO)
+    # dot: 2 * 8*128 * 128 flops, x10 trips
+    assert c.flops == pytest.approx(10 * 2 * 8 * 128 * 128, rel=0.01)
+    # all-reduce bytes: 8*128*4 x10
+    assert c.coll["all-reduce"] == pytest.approx(10 * 8 * 128 * 4)
+
+
+def test_fused_slice_counts_region():
+    hlo = """
+HloModule t
+
+%fused (fp0: f32[64,128,128], fp1: s32[]) -> f32[128,128] {
+  %fp0 = f32[64,128,128]{2,1,0} parameter(0)
+  %fp1 = s32[] parameter(1)
+  %z = s32[] constant(0)
+  ROOT %ds = f32[128,128]{1,0} dynamic-slice(%fp0, %fp1, %z, %z), dynamic_slice_sizes={1,128,128}
+}
+
+ENTRY %main (w: f32[64,128,128], i: s32[]) -> f32[128,128] {
+  %w = f32[64,128,128]{2,1,0} parameter(0)
+  %i = s32[] parameter(1)
+  ROOT %f = f32[128,128]{1,0} fusion(%w, %i), kind=kLoop, calls=%fused
+}
+"""
+    c = loop_expanded_cost(hlo)
+    # operand read at REGION size (one 128x128 slice), not the 64-layer stack
+    assert c.bytes < 3 * 128 * 128 * 4 + 64
+
+
+def test_standalone_slice_region():
+    hlo = """
+HloModule t
+
+ENTRY %main (w: f32[64,1024]) -> f32[1,1024] {
+  %w = f32[64,1024]{1,0} parameter(0)
+  %z = s32[] constant(3)
+  %z0 = s32[] constant(0)
+  ROOT %s = f32[1,1024]{1,0} dynamic-slice(%w, %z, %z0), dynamic_slice_sizes={1,1024}
+}
+"""
+    c = loop_expanded_cost(hlo)
+    assert c.bytes == pytest.approx(2 * 1024 * 4)
+
+
+def test_conditional_takes_max_branch():
+    hlo = """
+HloModule t
+
+%big (q: f32[256,256]) -> f32[256,256] {
+  %q = f32[256,256]{1,0} parameter(0)
+  ROOT %m = f32[256,256]{1,0} multiply(%q, %q)
+}
+
+%small (r: f32[256,256]) -> f32[256,256] {
+  %r = f32[256,256]{1,0} parameter(0)
+  ROOT %n = f32[256,256]{1,0} copy(%r)
+}
+
+ENTRY %main (p: pred[], x: f32[256,256]) -> f32[256,256] {
+  %p = pred[] parameter(0)
+  %x = f32[256,256]{1,0} parameter(1)
+  ROOT %c = f32[256,256]{1,0} conditional(%p, %x, %x), branch_computations={%big, %small}
+}
+"""
+    c = loop_expanded_cost(hlo)
+    assert c.flops >= 256 * 256  # the multiply branch
+
+
+def test_entry_detection():
+    model = HloCostModel(HLO)
+    assert model.entry == "main"
+    assert "body" in model.comps and "cond" in model.comps

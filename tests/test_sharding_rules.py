@@ -1,0 +1,99 @@
+"""Sharding-rule unit tests on an abstract 16x16 mesh (no real devices)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.core import stats
+from repro.parallel import sharding
+from repro.roofline import analysis
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+class _Leaf:
+    def __init__(self, shape):
+        self.shape = shape
+        self.ndim = len(shape)
+        self.dtype = jnp.float32
+
+
+def test_projection_rules_train():
+    # N-sharded projection: K over data (FSDP), N over model (TP)
+    assert sharding.param_spec("blocks/attn/wq/w", _Leaf((4096, 4096)), MESH, "train") == P("data", "model")
+    # K-sharded pair member
+    assert sharding.param_spec("blocks/attn/wo/w", _Leaf((4096, 4096)), MESH, "train") == P("model", "data")
+    assert sharding.param_spec("blocks/mlp/down/w", _Leaf((12288, 4096)), MESH, "train") == P("model", "data")
+
+
+def test_projection_rules_serve_replicates_data():
+    assert sharding.param_spec("blocks/attn/wq/w", _Leaf((4096, 4096)), MESH, "serve") == P(None, "model")
+    assert sharding.param_spec("blocks/mlp/down/w", _Leaf((12288, 4096)), MESH, "serve") == P("model", None)
+
+
+def test_divisibility_fallback():
+    # 100 not divisible by 16 -> replicated on that axis
+    assert sharding.param_spec("blocks/attn/wq/w", _Leaf((100, 4096)), MESH, "train") == P(None, "model")
+    assert sharding.param_spec("blocks/attn/wq/w", _Leaf((4096, 100)), MESH, "train") == P("data", None)
+
+
+def test_expert_parallelism_when_divisible():
+    # 128 experts over model=16 => EP; inner dims lose the model axis
+    spec = sharding.param_spec("blocks/moe/experts/gate/w", _Leaf((35, 128, 7168, 4864)), MESH, "train")
+    assert spec == P(None, "model", "data", None)
+    # 8 experts cannot shard over 16 => TP within experts instead
+    spec = sharding.param_spec("blocks/moe/experts/gate/w", _Leaf((64, 8, 6144, 32768)), MESH, "train")
+    assert spec == P(None, None, "data", "model")
+
+
+def test_embedding_and_scalars():
+    assert sharding.param_spec("embed/table", _Leaf((131072, 6144)), MESH, "train") == P("model", "data")
+    assert sharding.param_spec("embed/table", _Leaf((131072, 6144)), MESH, "serve") == P("model", None)
+    assert sharding.param_spec("blocks/ln1/scale", _Leaf((6144,)), MESH, "train") == P(None)
+
+
+def test_qtensor_fields_shard_like_dense():
+    assert sharding.param_spec("blocks/attn/wq/packed", _Leaf((64, 256, 4096)), MESH, "serve") == P(None, None, "model")
+    assert sharding.param_spec("blocks/attn/wq/scale_m", _Leaf((64, 64, 4096)), MESH, "serve") == P(None, None, "model")
+
+
+def test_paper_op_ratio_claims():
+    """Sec. 3.3: ~85% multiplies replaced at N=4, ~98% at N=64."""
+    approx4 = stats.paper_approximation(4)
+    approx64 = stats.paper_approximation(64)
+    assert 0.83 <= approx4 <= 0.90
+    assert approx64 >= 0.98
+    specs = stats.resnet101_specs()
+    exact4 = stats.network_replaced_fraction(specs, 4)
+    exact64 = stats.network_replaced_fraction(specs, 64)
+    assert 0.80 <= exact4 <= 0.95
+    assert exact64 >= 0.98
+
+
+def test_gemm_ratio_and_weight_bytes():
+    gemms = [stats.GemmSpec("qkv", 4096, 6144), stats.GemmSpec("attn", 4096, 4096, weight_quantized=False)]
+    total, wq_frac, all_frac = stats.network_gemm_stats(gemms, 64)
+    assert wq_frac == pytest.approx(1 - 1 / 64)
+    assert all_frac < wq_frac
+    b2 = stats.weight_bytes(gemms, 2, 64)
+    b16 = 4096 * 6144 * 2
+    assert b2 < b16 / 6  # >6x HBM compression vs bf16 incl. scale overhead
+
+
+def test_collective_parse():
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = f32[256]{0} all-reduce(%y), to_apply=%sum
+  %t = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(%a, %b)
+  %rs = bf16[4,4]{1,0} reduce-scatter(%z), dimensions={0}
+  %cp = u32[10]{0} collective-permute(%w)
+  %not_a_collective = f32[999]{0} add(%p, %q)
+"""
+    got = analysis.collective_bytes(hlo)
+    assert got["all-gather"] == 16 * 1024 * 2
+    assert got["all-reduce"] == 256 * 4
+    assert got["all-to-all"] == 2 * 64 * 4
+    assert got["reduce-scatter"] == 16 * 2
+    assert got["collective-permute"] == 40

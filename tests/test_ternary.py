@@ -1,0 +1,98 @@
+"""Algorithms 1 & 2 against a brute-force NumPy oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ternary
+
+
+def brute_filter_threshold(w: np.ndarray) -> float:
+    """Exhaustive Algorithm 2."""
+    a = np.flip(np.sort(np.abs(w)))
+    best_err, best_a = np.inf, 0.0
+    for t in range(1, len(w) + 1):
+        al = float(np.sqrt(np.sum(a[:t] ** 2) / t))
+        idx = np.argsort(-np.abs(w))[:t]
+        wq = np.zeros_like(w)
+        wq[idx] = np.sign(w[idx]) * al
+        err = float(np.sum((w - wq) ** 2))
+        if err < best_err:
+            best_err, best_a = err, al
+    return best_a
+
+
+def brute_cluster(cluster: np.ndarray) -> float:
+    """Exhaustive Algorithm 1 (threshold == scale semantics)."""
+    alphas = np.array([brute_filter_threshold(w) for w in cluster])
+    b = np.flip(np.sort(alphas))
+    best_err, best_a = np.inf, 0.0
+    for t in range(1, len(alphas) + 1):
+        al = float(np.sqrt(np.sum(b[:t] ** 2) / t))
+        wq = np.where(np.abs(cluster) > al, np.sign(cluster) * al, 0.0)
+        err = float(np.sum((cluster - wq) ** 2))
+        if err < best_err:
+            best_err, best_a = err, al
+    return best_a
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("f", [4, 9, 16])
+def test_algorithm2_matches_bruteforce(seed, f):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(f,)).astype(np.float32)
+    got = float(ternary.filter_threshold(jnp.asarray(w)))
+    want = brute_filter_threshold(w)
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n,f", [(4, 4), (8, 9), (2, 16)])
+def test_algorithm1_matches_bruteforce(seed, n, f):
+    rng = np.random.default_rng(seed)
+    cl = rng.normal(size=(n, f)).astype(np.float32)
+    codes, alpha = ternary.cluster_ternarize(jnp.asarray(cl))
+    assert float(alpha) == pytest.approx(brute_cluster(cl), rel=1e-5)
+    # codes consistent with the threshold rule
+    mask = np.abs(cl) > float(alpha)
+    assert (np.asarray(codes) == (np.sign(cl) * mask).astype(np.int8)).all()
+
+
+def test_ternarize_matrix_shapes_and_values():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(128, 24)).astype(np.float32))
+    codes, alpha = ternary.ternarize_matrix(w, group_size=32, filter_size=8)
+    assert codes.shape == (128, 24) and alpha.shape == (4, 24)
+    assert set(np.unique(np.asarray(codes))) <= {-1, 0, 1}
+    assert (np.asarray(alpha) >= 0).all()
+
+
+def test_reconstruction_beats_naive_scale():
+    """Hierarchical search should beat a naive mean-|w| ternary scale."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(256, 16)).astype(np.float32) ** 3)  # heavy tails
+    codes, alpha = ternary.ternarize_matrix(w, group_size=64, filter_size=8)
+    rec = ternary.ternary_dequantize(codes, alpha, 64)
+    err = float(jnp.sum((w - rec) ** 2))
+    naive_alpha = float(jnp.mean(jnp.abs(w)))
+    naive = jnp.sign(w) * naive_alpha
+    naive_err = float(jnp.sum((w - naive) ** 2))
+    assert err < naive_err
+
+
+def test_all_zero_cluster():
+    cl = jnp.zeros((4, 8))
+    codes, alpha = ternary.cluster_ternarize(cl)
+    assert float(alpha) == 0.0
+    assert (np.asarray(codes) == 0).all()
+
+
+def test_refit_scale_never_worse():
+    rng = np.random.default_rng(2)
+    cl = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+
+    def err(codes, alpha):
+        return float(jnp.sum((cl - codes.astype(jnp.float32) * alpha) ** 2))
+
+    c1, a1 = ternary.cluster_ternarize(cl, refit_scale=False)
+    c2, a2 = ternary.cluster_ternarize(cl, refit_scale=True)
+    assert err(c2, a2) <= err(c1, a1) + 1e-6

@@ -1,0 +1,198 @@
+"""Optimizer, data pipeline, checkpoint and trainer-resume tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import QuantConfig
+from repro.models import build_model
+from repro.training import OptConfig, TrainConfig, Trainer, init_state, make_train_step
+from repro.training import checkpoint as ck
+from repro.training import optimizer as opt_lib
+from repro.training.data import DataConfig, make_batch, shard_for_rank
+
+
+# -- optimizer ---------------------------------------------------------------
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    cfg = OptConfig(lr=0.3, warmup_steps=0, decay_steps=10_000, weight_decay=0.0)
+    state = init_state(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt_lib.apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_8bit_state_matches_fp32_convergence():
+    """DFP-compressed moments reach the same optimization quality (per-step
+    requantization noise makes exact trajectory tracking the wrong target;
+    the invariant is: no blow-up, same convergence)."""
+    rng = np.random.default_rng(0)
+    w0 = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    final = {}
+    for bits in (32, 8):
+        params = {"w": w0}
+        cfg = OptConfig(lr=0.05, warmup_steps=0, weight_decay=0.0, state_bits=bits)
+        state = init_state(params, cfg)
+        for i in range(50):
+            grads = {"w": 2 * params["w"] + 0.01 * jnp.sin(i + jnp.arange(64.0))}
+            params, state, _ = opt_lib.apply_updates(params, grads, state, cfg)
+        final[bits] = np.asarray(params["w"])
+    l32 = float(np.sum(final[32] ** 2))
+    l8 = float(np.sum(final[8] ** 2))
+    init_loss = float(np.sum(np.asarray(w0) ** 2))
+    assert l32 < 0.05 * init_loss  # fp32 converged
+    assert l8 < 0.10 * init_loss  # 8-bit converged comparably
+    assert np.abs(final[8]).max() < 2 * np.abs(final[32]).max() + 1e-3  # no blow-up
+
+
+def test_8bit_v_sqrt_domain_no_explosion():
+    """Regression: wide dynamic-range rows must not explode when v rounds
+    to zero (the sqrt-domain encoding keeps m and sqrt(v) proportional)."""
+    w = jnp.asarray([10.0] + [1e-3] * 63, jnp.float32)
+    params = {"w": w}
+    cfg = OptConfig(lr=0.01, warmup_steps=0, weight_decay=0.0, state_bits=8)
+    state = init_state(params, cfg)
+    for _ in range(20):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt_lib.apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 20.0  # bounded updates
+
+
+def test_grad_clip_metric():
+    params = {"w": jnp.ones((4,))}
+    cfg = OptConfig(grad_clip=1.0, warmup_steps=0)
+    state = init_state(params, cfg)
+    _, _, metrics = opt_lib.apply_updates(params, {"w": jnp.full((4,), 100.0)}, state, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+# -- data pipeline -----------------------------------------------------------
+def test_data_deterministic_and_resumable():
+    cfg = configs.get_smoke("qwen3-8b")
+    d = DataConfig(batch=4, seq=32, seed=7)
+    b1 = make_batch(cfg, d, step=13)
+    b2 = make_batch(cfg, d, step=13)
+    assert (np.asarray(b1["tokens"]) == np.asarray(b2["tokens"])).all()
+    b3 = make_batch(cfg, d, step=14)
+    assert not (np.asarray(b1["tokens"]) == np.asarray(b3["tokens"])).all()
+    # labels are next-token shifted
+    assert b1["tokens"].shape == (4, 32) and b1["labels"].shape == (4, 32)
+
+
+def test_data_rank_sharding_partitions():
+    cfg = configs.get_smoke("qwen3-8b")
+    b = make_batch(cfg, DataConfig(batch=8, seq=16), 0)
+    shards = [shard_for_rank(b, r, 4) for r in range(4)]
+    rebuilt = np.concatenate([np.asarray(s["tokens"]) for s in shards])
+    assert (rebuilt == np.asarray(b["tokens"])).all()
+
+
+def test_data_has_learnable_structure():
+    """Induced sequential structure => bigram MI is non-trivial."""
+    cfg = configs.get_smoke("qwen3-8b")
+    b = make_batch(cfg, DataConfig(batch=32, seq=64, structure=0.9), 0)
+    toks = np.asarray(b["tokens"])
+    nxt = np.asarray(b["labels"])
+    pred = (toks * 31 + 7) % cfg.vocab
+    assert (pred == nxt).mean() > 0.5  # structure dominates
+
+
+# -- checkpoint --------------------------------------------------------------
+def _tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "n": {"b": jnp.ones((4,), jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        t = _tree()
+        ck.save(d, 5, t)
+        step, got = ck.restore_latest(d, jax.eval_shape(lambda: t))
+        assert step == 5
+        assert (np.asarray(got["a"]) == np.asarray(t["a"])).all()
+        assert got["n"]["b"].dtype == jnp.int32
+
+
+def test_checkpoint_corruption_falls_back():
+    with tempfile.TemporaryDirectory() as d:
+        t = _tree()
+        ck.save(d, 1, t)
+        ck.save(d, 2, jax.tree.map(lambda x: x * 2, t))
+        # corrupt the newest checkpoint
+        newest = os.path.join(d, "step_000000002")
+        victim = [f for f in os.listdir(newest) if f.endswith(".npy")][0]
+        with open(os.path.join(newest, victim), "wb") as f:
+            f.write(b"garbage")
+        step, got = ck.restore_latest(d, jax.eval_shape(lambda: t))
+        assert step == 1  # fell back to the intact checkpoint
+        assert (np.asarray(got["a"]) == np.asarray(t["a"])).all()
+
+
+def test_checkpoint_retention():
+    with tempfile.TemporaryDirectory() as d:
+        for s in range(6):
+            ck.save(d, s, _tree())
+        ck.retain(d, keep=2)
+        assert ck.list_steps(d) == [4, 5]
+
+
+def test_resume_equivalence():
+    """Train 6 steps straight == train 3, crash, resume, train 3."""
+    cfg = configs.get_smoke("phi4-mini-3.8b")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    d = DataConfig(batch=2, seq=16)
+    batch_fn = lambda i: make_batch(cfg, d, i)
+
+    def fresh_tcfg(ckdir):
+        return TrainConfig(
+            opt=OptConfig(lr=1e-4, warmup_steps=0), ckpt_dir=ckdir, ckpt_every=3
+        )
+
+    with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+        t_straight = Trainer(api.train_loss, params, fresh_tcfg(d1))
+        h1 = t_straight.train(batch_fn, 6)
+
+        t_a = Trainer(api.train_loss, params, fresh_tcfg(d2))
+        t_a.train(batch_fn, 3)  # checkpoint lands at step 3
+        t_b = Trainer(api.train_loss, params, fresh_tcfg(d2))  # "new node"
+        assert t_b.maybe_restore() == 3
+        h2 = t_b.train(batch_fn, 3)
+        np.testing.assert_allclose(h1["loss"][3:], h2["loss"], rtol=1e-4)
+
+
+def test_microbatch_equivalence():
+    """Accumulated microbatch gradient == full-batch gradient.
+
+    (Compared at the gradient level: the first Adam step normalizes by
+    |g| + eps, which amplifies fp-roundoff on near-zero gradient entries.)"""
+    cfg = configs.get_smoke("phi4-mini-3.8b")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, DataConfig(batch=4, seq=16), 0)
+
+    full_loss, full_grads = jax.value_and_grad(api.train_loss)(params, batch)
+
+    halves = [jax.tree.map(lambda x: x[i * 2 : (i + 1) * 2], batch) for i in (0, 1)]
+    accum = None
+    losses = []
+    for h in halves:
+        l, g = jax.value_and_grad(api.train_loss)(params, h)
+        losses.append(float(l))
+        accum = g if accum is None else jax.tree.map(jnp.add, accum, g)
+    accum = jax.tree.map(lambda x: x / 2, accum)
+
+    assert float(full_loss) == pytest.approx(sum(losses) / 2, rel=1e-5)
+    scale = max(float(jnp.max(jnp.abs(l))) for l in jax.tree.leaves(full_grads))
+    for a, b in zip(jax.tree.leaves(full_grads), jax.tree.leaves(accum)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=1e-5 * max(scale, 1.0), rtol=1e-3,
+        )
