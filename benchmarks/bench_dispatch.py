@@ -1,0 +1,94 @@
+"""Dispatch-overhead microbench for the repro.quant redesign.
+
+Two hot-path dispatch mechanisms changed in the unified API:
+
+  * qmatmul backend dispatch: registered strategy lookup vs the legacy
+    in-line string-compare ladder (reconstructed here, calling the same
+    strategy functions, so the measured delta is dispatch only).
+  * per-site precision resolution: compiled QuantPlan table lookup vs the
+    legacy per-call ``PrecisionPolicy.resolve`` regex scan.
+
+Eager-mode microbenchmarks on tiny shapes: the matmul itself is small so
+Python-side dispatch is a visible fraction of the call.  (Inside jit both
+costs are trace-time only; serving's eager decode tick pays them per call.)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from repro.quant import backends, quantize_weights
+from repro.quant.backends import get_backend, resolve_backend
+
+
+def _legacy_ladder(name: str):
+    """The pre-registry dispatch shape: one string compare per backend."""
+    if name == "auto":
+        name = "xla"
+    if name == "xla":
+        return backends._xla_backend
+    if name == "xla_int8":
+        return backends._xla_int8_backend
+    if name == "ref":
+        return backends._ref_backend
+    if name == "pallas":
+        return backends._pallas_backend
+    raise ValueError(name)
+
+
+def _time_loop(fn, reps: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(csv=print):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    qt = quantize_weights(
+        jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32)), 8, 16
+    )
+
+    # resolution-only overhead (no numerics in the loop)
+    reps = 20_000
+    us = _time_loop(lambda: get_backend(resolve_backend("xla_int8")), reps)
+    csv(f"dispatch/backend_registry_lookup,{us:.3f},reps={reps}")
+    us = _time_loop(lambda: _legacy_ladder("xla_int8"), reps)
+    csv(f"dispatch/backend_string_ladder,{us:.3f},reps={reps}")
+
+    pol = PrecisionPolicy.ternary(64)
+    params = {"blocks": {"attn": {"wq": {"w": x}}, "mlp": {"up": {"w": x}}},
+              "lm_head": {"w": x}}
+    plan = pol.compile(params)
+    path = "blocks/mlp/up"
+    us = _time_loop(lambda: plan.resolve(path), reps)
+    csv(f"dispatch/plan_table_resolve,{us:.3f},reps={reps}")
+    us = _time_loop(lambda: pol.resolve(path), reps)
+    csv(f"dispatch/policy_regex_resolve,{us:.3f},reps={reps}")
+
+    # end-to-end eager qmatmul (dispatch + numerics) through both mechanisms
+    def qmm_registry():
+        out = backends.qmatmul(x, qt, backend="xla_int8")
+        jax.block_until_ready(out)
+
+    def qmm_ladder():
+        xm = x.reshape(-1, x.shape[-1])
+        xq, xe = backends._quantize_acts(xm, 8, None)
+        out = _legacy_ladder("xla_int8")(xq, xe, qt)
+        jax.block_until_ready(out)
+
+    qmm_registry(), qmm_ladder()  # warm caches
+    reps = 50
+    us = _time_loop(qmm_registry, reps)
+    csv(f"dispatch/qmatmul_eager_registry,{us:.1f},reps={reps}")
+    us = _time_loop(qmm_ladder, reps)
+    csv(f"dispatch/qmatmul_eager_ladder,{us:.1f},reps={reps}")
+
+
+if __name__ == "__main__":
+    run()

@@ -13,7 +13,7 @@ import jax
 
 from benchmarks.common import eval_loss_and_top1, tiny_lm, train_fp_baseline
 from repro.configs.base import QuantConfig
-from repro.models import build_model, quantize_model_params
+from repro.models import build_model, quantize_and_plan
 from repro.training import OptConfig, TrainConfig, Trainer
 from repro.training.data import DataConfig, make_batch
 
@@ -26,8 +26,7 @@ def run(csv=print, qat_steps: int = 120):
     n = 64  # the cluster size the paper says NEEDS retraining
     qc = QuantConfig(w_bits=2, group_size=n, mode="ptq", backend="xla")
     qcfg = dataclasses.replace(tiny_lm(), quant=qc)
-    qapi = build_model(qcfg)
-    qparams = quantize_model_params(params, qapi.ctx.policy)
+    qparams, _plan, qapi = quantize_and_plan(build_model(qcfg), params)
     ptq_loss, ptq_top1 = eval_loss_and_top1(qapi, qparams, qcfg, dcfg)
     csv(f"finetune/ptq_2w_N{n},0,loss={ptq_loss:.4f};top1={ptq_top1:.4f}")
 
@@ -44,7 +43,7 @@ def run(csv=print, qat_steps: int = 120):
         csv(f"finetune/qat_curve_step{i},0,loss={hist['loss'][i]:.4f}")
 
     # evaluate the fine-tuned model under the SAME ternary PTQ
-    ft_q = quantize_model_params(tr.params, qapi.ctx.policy)
+    ft_q, _plan, _ = quantize_and_plan(qapi, tr.params)
     qat_loss, qat_top1 = eval_loss_and_top1(qapi, ft_q, qcfg, dcfg)
     csv(
         f"finetune/qat_final_2w_N{n},0,"

@@ -21,7 +21,7 @@ import numpy as np
 from benchmarks.common import eval_loss_and_top1, tiny_lm, train_fp_baseline
 from repro.configs.base import QuantConfig
 from repro.core import quantizer
-from repro.models import build_model, quantize_model_params
+from repro.models import build_model, quantize_and_plan
 
 
 def run(csv=print):
@@ -33,8 +33,7 @@ def run(csv=print):
         for n in (4, 16, 64):
             qc = QuantConfig(w_bits=bits, group_size=n, mode="ptq", backend="xla")
             qcfg = dataclasses.replace(tiny_lm(), quant=qc)
-            qapi = build_model(qcfg)
-            qparams = quantize_model_params(params, qapi.ctx.policy)
+            qparams, _plan, qapi = quantize_and_plan(build_model(qcfg), params)
             loss, top1 = eval_loss_and_top1(qapi, qparams, qcfg, dcfg)
             csv(
                 f"quant_error/8a-{bits}w-N{n},0,"

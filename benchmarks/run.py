@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
   * bench_cluster_hier  -> Sec. 3.1 hierarchical-search ablation
   * bench_kernels       -> kernel microbench + HBM compression (Sec. 3.3 /
                            DESIGN 2.1 TPU adaptation)
+  * bench_dispatch      -> repro.quant dispatch overhead (registry vs the
+                           legacy string ladder; plan table vs regex resolve)
 """
 from __future__ import annotations
 
@@ -17,6 +19,7 @@ import time
 def main() -> None:
     from benchmarks import (
         bench_cluster_hier,
+        bench_dispatch,
         bench_finetune,
         bench_kernels,
         bench_op_ratio,
@@ -26,6 +29,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     for mod in (
         bench_op_ratio,
+        bench_dispatch,
         bench_cluster_hier,
         bench_kernels,
         bench_quant_error,

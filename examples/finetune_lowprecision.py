@@ -14,7 +14,7 @@ import tempfile
 
 from benchmarks.common import eval_loss_and_top1, tiny_lm, train_fp_baseline
 from repro.configs.base import QuantConfig
-from repro.models import build_model, quantize_model_params
+from repro.models import build_model, quantize_and_plan
 from repro.training import OptConfig, TrainConfig, Trainer
 from repro.training.data import make_batch
 
@@ -32,8 +32,7 @@ def main():
 
     qc = QuantConfig(w_bits=2, group_size=args.group, mode="ptq", backend="xla")
     qcfg = dataclasses.replace(tiny_lm(), quant=qc)
-    qapi = build_model(qcfg)
-    ptq = quantize_model_params(params, qapi.ctx.policy)
+    ptq, _plan, qapi = quantize_and_plan(build_model(qcfg), params)
     ptq_loss, ptq_top1 = eval_loss_and_top1(qapi, ptq, qcfg, dcfg)
     print(f"      PTQ 2w N={args.group}: loss {ptq_loss:.3f}, top1 {ptq_top1:.3f} "
           f"(the large-N drop the paper says needs retraining)")
@@ -43,7 +42,9 @@ def main():
     qat_cfg = dataclasses.replace(
         tiny_lm(), quant=QuantConfig(w_bits=2, group_size=args.group, mode="qat")
     )
-    qat_api = build_model(qat_cfg)
+    # compile the QAT policy against the param tree once: the trainer's STE
+    # forward resolves per-site precision through the static plan table
+    qat_api = build_model(qat_cfg).compiled(params)
     with tempfile.TemporaryDirectory() as ckdir:
         tcfg = TrainConfig(
             opt=OptConfig(lr=1e-4, warmup_steps=0, weight_decay=0.0,
@@ -56,8 +57,8 @@ def main():
               f"(checkpoints under {ckdir})")
 
         print("[3/3] re-quantize the fine-tuned master weights and evaluate...")
-        ftq = quantize_model_params(tr.params, qapi.ctx.policy)
-        qat_loss, qat_top1 = eval_loss_and_top1(qapi, ftq, qcfg, dcfg)
+        ftq, _plan, ftq_api = quantize_and_plan(qapi, tr.params)
+        qat_loss, qat_top1 = eval_loss_and_top1(ftq_api, ftq, qcfg, dcfg)
     print(f"      after fine-tune: loss {qat_loss:.3f}, top1 {qat_top1:.3f}")
     print(f"      recovery: {ptq_loss - qat_loss:+.3f} loss "
           f"({ptq_top1:.3f} -> {qat_top1:.3f} top1; paper recovered to "

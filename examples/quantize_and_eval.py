@@ -14,7 +14,7 @@ import numpy as np
 
 from benchmarks.common import eval_loss_and_top1, tiny_lm, train_fp_baseline
 from repro.configs.base import QuantConfig
-from repro.models import build_model, quantize_model_params
+from repro.models import build_model, quantize_and_plan
 
 
 def main():
@@ -29,8 +29,7 @@ def main():
         for n in (4, 16, 64):
             qc = QuantConfig(w_bits=bits, group_size=n, mode="ptq", backend="xla")
             qcfg = dataclasses.replace(tiny_lm(), quant=qc)
-            qapi = build_model(qcfg)
-            qp = quantize_model_params(params, qapi.ctx.policy)
+            qp, _plan, qapi = quantize_and_plan(build_model(qcfg), params)
             loss, top1 = eval_loss_and_top1(qapi, qp, qcfg, dcfg)
             qb = sum(np.asarray(l).nbytes for l in jax.tree.leaves(qp))
             print(f"{f'8a-{bits}w N={n}':>16s} {loss:8.3f} {top1:7.3f} "

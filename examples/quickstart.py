@@ -7,12 +7,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import stats
-from repro.core.quantizer import (
+from repro.quant import (
     dequantize_weights,
+    format_names,
+    qmatmul,
     quantize_weights,
     weight_quantization_error,
 )
-from repro.kernels import ops
 
 
 def main():
@@ -21,6 +22,7 @@ def main():
     x = jnp.asarray(rng.normal(size=(8, 1024)).astype(np.float32))
 
     print("=== Algorithm 1: cluster-based ternarization (N=64) ===")
+    print(f"registered formats: {', '.join(format_names())}")
     qt = quantize_weights(w, bits=2, group_size=64)
     print(f"packed weights : {qt.packed.shape} {qt.packed.dtype} "
           f"({np.asarray(qt.packed).nbytes} bytes vs {w.size * 2} bf16 bytes)")
@@ -31,7 +33,7 @@ def main():
     print(f"rel recon error: {rel:.4f}   sparsity: {sparsity:.2%}")
 
     print("\n=== full integer matmul (int8 acts x ternary weights) ===")
-    y_q = ops.qmatmul(x, qt, backend="pallas", block_k=256)
+    y_q = qmatmul(x, qt, backend="pallas", block_k=256)
     y_fp = x @ w
     cos = float(
         jnp.sum(y_q * y_fp)

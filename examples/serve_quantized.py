@@ -17,8 +17,9 @@ import numpy as np
 
 from benchmarks.common import tiny_lm, train_fp_baseline
 from repro.configs.base import QuantConfig
-from repro.models import build_model, quantize_model_params
+from repro.models import build_model, quantize_and_plan
 from repro.serving import Request, SamplerConfig, ServingEngine
+from repro.training.data import make_batch
 
 
 def tree_bytes(tree):
@@ -38,15 +39,19 @@ def main():
     cfg, api, params, dcfg, hist = train_fp_baseline(steps=args.train_steps)
     print(f"      final train loss {hist['loss'][-1]:.3f}")
 
-    print(f"[2/4] PTQ: {args.bits}-bit weights, cluster N={args.group}, 8-bit acts")
+    print(f"[2/4] PTQ: {args.bits}-bit weights, cluster N={args.group}, 8-bit acts "
+          f"(static exponents profiled on 4 calibration batches)")
     qc = QuantConfig(w_bits=args.bits, group_size=min(args.group, 64),
                      mode="ptq", backend="xla")
     qcfg = dataclasses.replace(tiny_lm(), quant=qc)
-    qapi = build_model(qcfg)
-    qparams = quantize_model_params(params, qapi.ctx.policy)
+    calib = [make_batch(cfg, dcfg, 10_000 + i) for i in range(4)]
+    qparams, plan, qapi = quantize_and_plan(
+        build_model(qcfg), params, calib_batches=calib
+    )
     b_fp, b_q = tree_bytes(params), tree_bytes(qparams)
     print(f"      params: {b_fp / 1e6:.2f} MB fp32 -> {b_q / 1e6:.2f} MB packed "
-          f"({b_fp / b_q:.1f}x)")
+          f"({b_fp / b_q:.1f}x); plan: {len(plan.site_paths)} sites, "
+          f"{len(plan.act_exponents)} calibrated")
 
     print(f"[3/4] serving {args.requests} requests on {args.slots} slots "
           f"(continuous batching)...")

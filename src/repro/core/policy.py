@@ -10,6 +10,11 @@ overrides resolved against the layer's parameter path, e.g.
 Built-in override sets encode the paper's rules mapped to LM blocks:
 embedding & first block 8-bit (C1 analogue), lm_head 8-bit (FC analogue),
 MoE router 8-bit (accuracy-critical control path), norms/biases fp32.
+
+Per-call ``resolve`` is the *rule* semantics; hot paths should compile the
+policy once against a parameter tree with ``PrecisionPolicy.compile`` (see
+repro.quant.plan.QuantPlan), which resolves every projection site into a
+static table and carries calibrated activation exponents.
 """
 from __future__ import annotations
 
@@ -27,6 +32,12 @@ class LayerPrecision:
     group_size: int = 64
     filter_size: int = 1
     refit_scale: bool = False
+    # allow this site to use a calibrated static activation exponent when the
+    # plan carries one (False pins the site to dynamic per-row exponents)
+    static_act: bool = True
+    # registered weight-format name (repro.quant.register_format); None uses
+    # the default format for w_bits
+    fmt: Optional[str] = None
 
     @property
     def quantized(self) -> bool:
@@ -44,6 +55,16 @@ class PrecisionPolicy:
             if re.search(pattern, path):
                 return prec
         return self.default
+
+    def compile(self, params, *, mode: str = "ptq", backend: str = "auto"):
+        """Resolve every projection site of ``params`` once -> QuantPlan.
+
+        ``params`` may hold concrete arrays or ShapeDtypeStructs (only tree
+        structure and ndim are read).  See repro.quant.plan.compile_policy.
+        """
+        from repro.quant.plan import compile_policy
+
+        return compile_policy(self, params, mode=mode, backend=backend)
 
     @staticmethod
     def paper_overrides(group_size: int) -> Tuple[Tuple[str, LayerPrecision], ...]:

@@ -1,4 +1,4 @@
-"""Unified cluster quantizer: QTensor representation, packing, 2t/4/8-bit.
+"""QTensor container + bit-packing primitives (base layer of repro.quant).
 
 A quantized projection weight is stored as a ``QTensor``:
 
@@ -15,16 +15,27 @@ Layouts are chosen for the TPU kernels: ``packed`` is laid out along the
 reduction axis K first -- a (tile_k x tile_n) weight tile is a contiguous
 (tile_k/16 x tile_n) window of uint32 words, an 8x HBM-traffic reduction vs
 bf16 (the TPU-native realization of the paper's 16x compute/power claim).
+
+*How* values are encoded for a given bit-width is owned by the format
+registry (``repro.quant.formats``); the bits-generic entry points
+(``quantize_weights``, ``decode_codes``, ``dequantize_weights``,
+``fake_quantize_weights``, ``weight_quantization_error``) live there and are
+re-exported here lazily for compatibility.
+
+Migration note (old -> new):
+
+    from repro.core.quantizer import quantize_weights, QTensor
+        -> from repro.quant import quantize_weights, QTensor
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import dfp, ternary
+from repro.core import dfp
 
 TERNARY_PER_WORD = 16  # 2-bit codes per uint32
 INT4_PER_WORD = 8
@@ -42,6 +53,8 @@ class QTensor:
     shape: Tuple[int, int] = dataclasses.field(
         metadata=dict(static=True), default=(0, 0)
     )
+    # registered format name; "" means "look up by bits" (built-in formats)
+    fmt: str = dataclasses.field(metadata=dict(static=True), default="")
 
     @property
     def k(self) -> int:
@@ -59,7 +72,7 @@ class QTensor:
 jax.tree_util.register_dataclass(
     QTensor,
     data_fields=["packed", "scale_m", "scale_e"],
-    meta_fields=["bits", "group_size", "shape"],
+    meta_fields=["bits", "group_size", "shape", "fmt"],
 )
 
 
@@ -89,9 +102,19 @@ def unpack2(packed: jax.Array, k: int) -> jax.Array:
 
 
 def pack4(q: jax.Array) -> jax.Array:
-    """(K, N) int8 in [-7, 7] -> (K/8, N) uint32 (4-bit two's complement)."""
+    """(K, N) int8 in the symmetric range [-7, 7] -> (K/8, N) uint32.
+
+    The DFP pipeline is symmetric (``dfp.qmax(4)`` == 7): -8 is excluded so
+    negation is closed, and the int4 format clips mantissas to +/-7 before
+    packing.  The range contract is asserted on concrete inputs; under
+    tracing the caller is trusted (the built-in encoders always clip first).
+    """
     k, n = q.shape
     assert k % INT4_PER_WORD == 0, k
+    if not isinstance(q, jax.core.Tracer):
+        assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= dfp.qmax(4), (
+            "pack4 expects symmetric int4 mantissas in [-7, 7]"
+        )
     c = (q.astype(jnp.int32) & 0xF).astype(jnp.uint32)
     c = c.reshape(k // INT4_PER_WORD, INT4_PER_WORD, n)
     word = jnp.zeros((k // INT4_PER_WORD, n), jnp.uint32)
@@ -101,7 +124,12 @@ def pack4(q: jax.Array) -> jax.Array:
 
 
 def unpack4(packed: jax.Array, k: int) -> jax.Array:
-    """Inverse of pack4 -> (K, N) int8 in [-8, 7]."""
+    """Inverse of pack4 -> (K, N) int8 in the symmetric range [-7, 7].
+
+    (The 4-bit two's-complement code 0b1000 would decode to -8, but pack4's
+    range contract means it is never produced; the sign-extension below is
+    kept total so arbitrary words still decode without wrapping.)
+    """
     lanes = []
     for i in range(INT4_PER_WORD):
         c = ((packed >> (4 * i)) & jnp.uint32(0xF)).astype(jnp.int8)
@@ -125,69 +153,22 @@ def dequantize_scales(scale_m: jax.Array, scale_e: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Weight quantization entry points.
+# Lazy re-exports of the format-registry-driven entry points (repro.quant).
+# Resolved on first attribute access so this base module never imports the
+# registry (which imports the kernels) at module scope.
 # ---------------------------------------------------------------------------
-def quantize_weights(
-    w: jax.Array,
-    bits: int,
-    group_size: int,
-    filter_size: int = 1,
-    refit_scale: bool = False,
-) -> QTensor:
-    """Quantize a (K, N) projection with the paper's cluster scheme.
-
-    bits=2 runs Algorithms 1&2 (hierarchical ternarization); bits in {4, 8}
-    use per-cluster dynamic-fixed-point mantissas with max-abs scaling.  In
-    every case the scale table itself is re-quantized to 8-bit DFP so the
-    whole pipeline stays sub-8-bit.
-    """
-    k, n = w.shape
-    w = w.astype(jnp.float32)
-    if bits == 2:
-        codes, alpha = ternary.ternarize_matrix(w, group_size, filter_size, refit_scale)
-        scale_m, scale_e = quantize_scales(alpha)
-        return QTensor(pack2(codes), scale_m, scale_e, 2, group_size, (k, n))
-    if bits in (4, 8):
-        blocks = w.reshape(k // group_size, group_size, n)
-        max_abs = jnp.max(jnp.abs(blocks), axis=1)  # (groups, N)
-        alpha = max_abs / dfp.qmax(bits)
-        scale_m, scale_e = quantize_scales(alpha)
-        scale = dequantize_scales(scale_m, scale_e)[:, None, :]
-        safe = jnp.where(scale > 0, scale, 1.0)
-        q = jnp.clip(jnp.round(blocks / safe), -dfp.qmax(bits), dfp.qmax(bits))
-        q = q.astype(jnp.int8).reshape(k, n)
-        packed = pack4(q) if bits == 4 else q
-        return QTensor(packed, scale_m, scale_e, bits, group_size, (k, n))
-    raise ValueError(f"unsupported weight bits: {bits}")
+_FORMAT_API = (
+    "quantize_weights",
+    "decode_codes",
+    "dequantize_weights",
+    "fake_quantize_weights",
+    "weight_quantization_error",
+)
 
 
-def decode_codes(qt: QTensor) -> jax.Array:
-    """Integer mantissas (K, N) int8 of a QTensor."""
-    if qt.bits == 2:
-        return unpack2(qt.packed, qt.k)
-    if qt.bits == 4:
-        return unpack4(qt.packed, qt.k)
-    return qt.packed  # int8 raw
+def __getattr__(name: str):
+    if name in _FORMAT_API:
+        from repro.quant import formats
 
-
-def dequantize_weights(qt: QTensor) -> jax.Array:
-    """f32 (K, N) reconstruction."""
-    codes = decode_codes(qt).astype(jnp.float32)
-    scale = dequantize_scales(qt.scale_m, qt.scale_e)  # (groups, N)
-    c = codes.reshape(qt.n_groups, qt.group_size, qt.n)
-    return (c * scale[:, None, :]).reshape(qt.k, qt.n)
-
-
-def fake_quantize_weights(
-    w: jax.Array, bits: int, group_size: int, filter_size: int = 1,
-    refit_scale: bool = False,
-) -> jax.Array:
-    """quantize -> dequantize (QAT forward / error measurement)."""
-    return dequantize_weights(
-        quantize_weights(w, bits, group_size, filter_size, refit_scale)
-    )
-
-
-def weight_quantization_error(w, bits, group_size, filter_size=1) -> jax.Array:
-    wq = fake_quantize_weights(w, bits, group_size, filter_size)
-    return jnp.sum((w - wq) ** 2)
+        return getattr(formats, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

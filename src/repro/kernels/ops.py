@@ -1,148 +1,21 @@
-"""Public quantized-op API: backend dispatch over Pallas / XLA paths.
+"""Compatibility shim: quantized-op dispatch now lives in ``repro.quant``.
 
-``qmatmul(x, qt)`` is the single entry point models use for PTQ inference:
+``qmatmul`` routes through the backend registry
+(``repro.quant.backends``): ``pallas`` / ``xla`` / ``xla_int8`` / ``ref``
+are registered strategies sharing one activation-quantization prologue, and
+the Pallas path picks its kernel from the format registry -- there is no
+backend string ladder or per-bits if-chain here anymore.  New backends plug
+in via ``repro.quant.register_backend``.
 
-  * backend="pallas"   : the real integer pipeline (TPU target; runs in
-                         interpret mode on CPU so tests validate the exact
-                         kernel semantics).
-  * backend="xla"      : dequantize-weights -> bf16 dot.  Mathematically
-                         identical up to f32 rounding; this is what the
-                         distributed (pjit) graph lowers for the dry-run,
-                         where collectives/sharding are the object of study.
-  * backend="auto"     : pallas-interpret off-TPU for small shapes, xla
-                         otherwise.
+Migration note (old -> new):
 
-Activations are dynamically quantized per row (one DFP exponent per token),
-matching calibration.dynamic_quantize_act / the fused Pallas quantize kernel.
+    from repro.kernels.ops import qmatmul, quantize_activations
+        -> from repro.quant import qmatmul, quantize_activations
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import calibration, dfp
-from repro.core.quantizer import QTensor, dequantize_weights
-from repro.kernels import ref
-from repro.kernels.int4_matmul import int4_matmul
-from repro.kernels.int8_matmul import int8_matmul
-from repro.kernels.quantize import quantize_rows
-from repro.kernels.ternary_matmul import ternary_matmul
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def quantize_activations(
-    x: jax.Array, bits: int = 8, use_pallas: Optional[bool] = None
-):
-    """Per-row dynamic DFP quantization; pallas kernel or jnp fallback."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas or not _on_tpu():
-        # interpret-mode pallas on CPU is exact but slow; only use it when
-        # explicitly requested. Default CPU path: the jnp oracle.
-        if use_pallas:
-            return quantize_rows(x, bits=bits, interpret=not _on_tpu())
-    return ref.quantize_rows_ref(x, bits)
-
-
-def qmatmul(
-    x: jax.Array,
-    qt: QTensor,
-    *,
-    backend: str = "auto",
-    act_bits: int = 8,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 512,
-) -> jax.Array:
-    """x [..., K] (float) x QTensor (K, N) -> [..., N] f32.
-
-    Full integer pipeline: per-row 8-bit DFP activations, sub-8-bit weights,
-    int32 cluster accumulation, one scale multiply per cluster.
-    """
-    lead = x.shape[:-1]
-    k = x.shape[-1]
-    xm = x.reshape(-1, k)
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "xla"
-
-    if backend == "xla":
-        # float-side equivalent: fake-quantized activations x dequant weights
-        # (f32 dot output; a bf16-output variant was tried as Perf iteration
-        # B3 and had NO effect on collective bytes -- the TP reductions in
-        # the MoE cells come from the combine scatter-add, see moe.py B4)
-        xq, xe = ref.quantize_rows_ref(xm, act_bits)
-        xf = dfp.dequantize(xq, xe).astype(jnp.bfloat16)
-        w = dequantize_weights(qt).astype(jnp.bfloat16)
-        out = jax.lax.dot_general(
-            xf, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        return out.reshape(*lead, qt.n)
-
-    if backend == "xla_int8":
-        # integer pipeline without Pallas: per-group batched int8 dots with
-        # int32 accumulation; weights materialize as int8 codes (1 B/elem)
-        # instead of a scaled bf16 copy (2 B/elem) -- halves the decode-phase
-        # weight stream and uses the 2x int8 MXU path on TPU.
-        from repro.core.quantizer import decode_codes
-
-        xq, xe = ref.quantize_rows_ref(xm, act_bits)
-        g = qt.group_size
-        m = xq.shape[0]
-        kg = qt.k // g
-        xg = jnp.moveaxis(xq.reshape(m, kg, g), 1, 0)  # (Kg, M, G) int8
-        wg = decode_codes(qt).reshape(kg, g, qt.n)  # (Kg, G, N) int8
-        part = jax.lax.dot_general(
-            xg, wg, (((2,), (1,)), ((0,), (0,))),
-            preferred_element_type=jnp.int32,
-        )  # (Kg, M, N) int32
-        scaled = part.astype(jnp.float32) * qt.scale_m.astype(jnp.float32)[:, None, :]
-        out = scaled.sum(axis=0)
-        exp = qt.scale_e.astype(jnp.float32) + xe.astype(jnp.float32)
-        out = out * jnp.exp2(exp)
-        return out.reshape(*lead, qt.n)
-
-    if backend == "ref":
-        xq, xe = ref.quantize_rows_ref(xm, act_bits)
-        return ref.qmatmul_ref(xq, xe, qt).reshape(*lead, qt.n)
-
-    if backend == "pallas":
-        interpret = not _on_tpu()
-        xq, xe = ref.quantize_rows_ref(xm, act_bits)
-        m = xq.shape[0]
-        # pad rows to a tile multiple (serving batches are ragged)
-        bm = min(block_m, max(8, m))
-        pad = (-m) % bm
-        if pad:
-            xq = jnp.pad(xq, ((0, pad), (0, 0)))
-        kwargs = dict(
-            group=qt.group_size,
-            block_m=bm,
-            block_n=block_n,
-            block_k=block_k,
-            interpret=interpret,
-        )
-        if qt.bits == 2:
-            out = ternary_matmul(xq, qt.packed, qt.scale_m, **kwargs)
-        elif qt.bits == 4:
-            out = int4_matmul(xq, qt.packed, qt.scale_m, **kwargs)
-        elif qt.bits == 8:
-            out = int8_matmul(xq, qt.packed, qt.scale_m, **kwargs)
-        else:
-            raise ValueError(f"bits={qt.bits}")
-        out = out[:m] if pad else out
-        exp = qt.scale_e.astype(jnp.float32) + xe.astype(jnp.float32)
-        out = out * jnp.exp2(exp)
-        return out.reshape(*lead, qt.n)
-
-    raise ValueError(f"unknown backend {backend!r}")
-
-
-@functools.partial(jax.jit, static_argnames=("backend", "act_bits"))
-def qmatmul_jit(x, qt, backend="auto", act_bits=8):
-    return qmatmul(x, qt, backend=backend, act_bits=act_bits)
+from repro.quant.backends import (  # noqa: F401
+    qmatmul,
+    qmatmul_jit,
+    quantize_activations,
+)

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dfp
-from repro.core.quantizer import QTensor, decode_codes
+from repro.core.quantizer import QTensor
 
 
 def qmatmul_ref(x_q: jax.Array, x_e: jax.Array, qt: QTensor) -> jax.Array:
@@ -22,6 +22,8 @@ def qmatmul_ref(x_q: jax.Array, x_e: jax.Array, qt: QTensor) -> jax.Array:
     qt  : QTensor weights (K, N)
     Returns f32 (M, N).
     """
+    from repro.quant.formats import decode_codes  # lazy: avoids import cycle
+
     m, k = x_q.shape
     g = qt.group_size
     codes = decode_codes(qt)  # (K, N) int8
@@ -39,7 +41,7 @@ def qmatmul_ref(x_q: jax.Array, x_e: jax.Array, qt: QTensor) -> jax.Array:
 def qmatmul_dequant_ref(x: jax.Array, qt: QTensor) -> jax.Array:
     """Float-side reference: fake-quantized activations x dequantized weights.
     Matches qmatmul_ref exactly when x comes from dynamic_quantize_act."""
-    from repro.core.quantizer import dequantize_weights
+    from repro.quant.formats import dequantize_weights
 
     return x.astype(jnp.float32) @ dequantize_weights(qt)
 

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from repro import configs
 from repro.configs.base import QuantConfig, ShapeConfig
 from repro.launch.mesh import make_production_mesh
-from repro.models import build_model, input_specs, make_ctx, quantize_model_params
+from repro.models import build_model, input_specs
+from repro.quant import quantize_params
 from repro.parallel import sharding
 from repro.roofline import analysis
 from repro.training import OptConfig, init_state, make_train_step
@@ -70,9 +71,17 @@ def build_cell(
     api = build_model(cfg)
     specs, kind = input_specs(cfg, shape)
     params_shapes = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    if api.ctx.policy is not None:
+        # compile the policy once against the (abstract) param tree; every
+        # consumer below -- including the lowered QAT/PTQ graphs -- resolves
+        # precision through the static plan table
+        plan = api.ctx.policy.compile(
+            params_shapes, mode=quant_mode, backend=backend
+        )
+        api = api.with_plan(plan)
     if quant_mode == "ptq":
         params_shapes = jax.eval_shape(
-            lambda p: quantize_model_params(p, api.ctx.policy), params_shapes
+            lambda p: quantize_params(p, api.ctx.plan), params_shapes
         )
     mode = "train" if kind == "train" else "serve"
     p_sh = sharding.param_shardings(params_shapes, mesh, mode)

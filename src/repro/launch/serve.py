@@ -1,7 +1,12 @@
 """Production serving launcher (PTQ integer pipeline + continuous batching).
 
+Params are quantized through the unified ``repro.quant`` API: the precision
+policy compiles into a serializable ``QuantPlan``, optional calibration
+batches profile static per-site activation exponents (paper's profiled DFP
+mode), and the engine serves from the plan-bound model view.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
-      --bits 2 --group-size 16 --requests 8
+      --bits 2 --group-size 16 --requests 8 [--calibrate 4] [--plan-json p.json]
 """
 from __future__ import annotations
 
@@ -13,7 +18,7 @@ import numpy as np
 
 from repro import configs
 from repro.configs.base import QuantConfig
-from repro.models import build_model, quantize_model_params
+from repro.models import build_model, make_smoke_batch, quantize_and_plan
 from repro.serving import Request, SamplerConfig, ServingEngine
 
 
@@ -27,6 +32,10 @@ def main():
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--calibrate", type=int, default=0, metavar="N",
+                    help="profile N batches for static activation exponents")
+    ap.add_argument("--plan-json", default=None,
+                    help="write the compiled QuantPlan to this path")
     args = ap.parse_args()
 
     qc = QuantConfig(w_bits=args.bits, group_size=args.group_size,
@@ -34,11 +43,22 @@ def main():
     cfg = (configs.get_smoke if args.smoke else configs.get_config)(args.arch, qc)
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
-    qparams = quantize_model_params(params, api.ctx.policy)
+    calib = None
+    if args.calibrate:
+        calib = [
+            make_smoke_batch(jax.random.PRNGKey(100 + i), cfg, batch=2, seq=16)
+            for i in range(args.calibrate)
+        ]
+    qparams, plan, api = quantize_and_plan(api, params, calib_batches=calib)
     fp_b = sum(np.asarray(l).nbytes for l in jax.tree.leaves(params))
     q_b = sum(np.asarray(l).nbytes for l in jax.tree.leaves(qparams))
     print(f"arch={cfg.name} weights {fp_b / 1e6:.1f} MB -> {q_b / 1e6:.1f} MB "
-          f"({fp_b / q_b:.1f}x)")
+          f"({fp_b / q_b:.1f}x)  plan: {len(plan.site_paths)} sites, "
+          f"{len(plan.act_exponents)} calibrated")
+    if args.plan_json:
+        with open(args.plan_json, "w") as f:
+            f.write(plan.to_json())
+        print(f"wrote QuantPlan to {args.plan_json}")
 
     eng = ServingEngine(api, qparams, n_slots=args.slots, max_len=args.max_len,
                         sampler=SamplerConfig(temperature=args.temperature))

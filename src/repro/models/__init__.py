@@ -6,5 +6,6 @@ from repro.models.model_zoo import (
     input_specs,
     make_ctx,
     make_smoke_batch,
+    quantize_and_plan,
     quantize_model_params,
 )

@@ -1,33 +1,26 @@
 """Building-block layers (pure pytree params, no framework dependency).
 
 Every projection goes through ``dense()`` which consults the quantization
-context: full precision, QAT fake-quant (STE, Sec. 4 of the paper), or PTQ
-with real QTensor weights through the kernels' qmatmul.
+context (``repro.quant.QuantCtx``, a thin view over a compiled ``QuantPlan``
+or a raw ``PrecisionPolicy``): full precision, QAT fake-quant (STE, Sec. 4
+of the paper), or PTQ with real QTensor weights through the registry-driven
+qmatmul.  With a compiled plan, per-site precision is a dict lookup (no
+per-call regex), PTQ activations use the plan's calibrated static exponents
+where profiled, and a ctx carrying an ``observer`` records activation
+ranges for calibration.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import ste
-from repro.core.policy import PrecisionPolicy
-from repro.core.quantizer import QTensor
-from repro.kernels import ops
-
-
-@dataclasses.dataclass(frozen=True)
-class QuantCtx:
-    mode: str = "fp"  # 'fp' | 'qat' | 'ptq'
-    policy: Optional[PrecisionPolicy] = None
-    backend: str = "auto"  # ptq matmul backend
-
-    @staticmethod
-    def fp() -> "QuantCtx":
-        return QuantCtx("fp", None)
-
+from repro.quant.api import observe_site
+from repro.quant.backends import qmatmul
+from repro.quant.plan import QuantCtx  # noqa: F401  (canonical re-export)
+from repro.quant.qtensor import QTensor
 
 Params = Dict[str, Any]
 
@@ -43,14 +36,19 @@ def _init_dense(key, d_in: int, d_out: int, bias: bool, dtype) -> Params:
 def dense(p: Params, x: jax.Array, path: str, ctx: QuantCtx) -> jax.Array:
     """Quantization-aware projection x @ W (+ b)."""
     w = p["w"]
+    if ctx.observer is not None:  # calibration pass: record this site's range
+        observe_site(ctx.observer, path, x)
     if isinstance(w, QTensor):  # PTQ path: full integer pipeline
-        prec = ctx.policy.resolve(path) if ctx.policy else None
+        prec = ctx.resolve(path)
         act_bits = prec.act_bits if prec else 8
-        y = ops.qmatmul(x, w, backend=ctx.backend, act_bits=act_bits)
+        y = qmatmul(
+            x, w, backend=ctx.backend, act_bits=act_bits,
+            act_exponent=ctx.act_exponent(path),
+        )
         y = y.astype(x.dtype)
-    elif ctx.mode == "qat" and ctx.policy is not None:
-        prec = ctx.policy.resolve(path)
-        if prec.quantized:
+    elif ctx.mode == "qat" and (ctx.plan is not None or ctx.policy is not None):
+        prec = ctx.resolve(path)
+        if prec is not None and prec.quantized:
             wq = ste.weights_ste(
                 w.astype(jnp.float32),
                 prec.w_bits,

@@ -20,11 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core import calibration
 from repro.core.policy import PrecisionPolicy
-from repro.core.quantizer import quantize_weights
 from repro.models import encdec, hybrid, ssm_lm, transformer, vlm
-from repro.models.layers import QuantCtx
+from repro.quant import api as quant_api
+from repro.quant.plan import QuantCtx, QuantPlan
 
 
 @dataclasses.dataclass
@@ -38,22 +37,32 @@ class ModelApi:
     prefill: Optional[Callable]
     decode: Callable
 
+    def with_ctx(self, ctx: QuantCtx) -> "ModelApi":
+        """Rebind every member to a new quantization context."""
+        return build_model(self.cfg, ctx)
+
+    def with_plan(self, plan: QuantPlan) -> "ModelApi":
+        """View of this model driven by a compiled QuantPlan."""
+        return self.with_ctx(QuantCtx.for_plan(plan))
+
+    def compiled(self, params) -> "ModelApi":
+        """Compile this api's policy against ``params`` (kills per-call regex
+        resolution in dense(); a no-op view for fp contexts)."""
+        if self.ctx.policy is None:
+            return self
+        plan = self.ctx.policy.compile(
+            params, mode=self.ctx.mode, backend=self.ctx.backend
+        )
+        return self.with_plan(plan)
+
 
 def make_ctx(cfg: ArchConfig) -> QuantCtx:
-    q = cfg.quant
-    if q.mode == "fp":
-        return QuantCtx.fp()
-    if q.w_bits == 2:
-        pol = PrecisionPolicy.ternary(q.group_size, q.filter_size, q.refit_scale)
-    elif q.w_bits == 4:
-        pol = PrecisionPolicy.int4(q.group_size)
-    else:
-        pol = PrecisionPolicy.int8(q.group_size)
-    return QuantCtx(q.mode, pol, q.backend)
+    """Deprecated alias: use ``repro.quant.QuantCtx.from_config(cfg.quant)``."""
+    return QuantCtx.from_config(cfg.quant)
 
 
 def build_model(cfg: ArchConfig, ctx: Optional[QuantCtx] = None) -> ModelApi:
-    ctx = ctx or make_ctx(cfg)
+    ctx = ctx or QuantCtx.from_config(cfg.quant)
     fam = cfg.family
     if fam in ("dense", "moe"):
         return ModelApi(
@@ -193,47 +202,36 @@ def make_smoke_batch(key, cfg: ArchConfig, batch: int, seq: int) -> Dict[str, An
 
 
 # ---------------------------------------------------------------------------
-# PTQ: convert trained params to QTensor weights per the precision policy.
+# PTQ: convert trained params to QTensor weights per a compiled QuantPlan.
 # ---------------------------------------------------------------------------
 def quantize_model_params(params, policy: PrecisionPolicy):
-    """Walk the param tree; replace projection 'w' leaves with QTensors.
+    """Deprecated alias for ``repro.quant.quantize_model`` (plan discarded).
 
-    Stacked leading axes (layers and/or experts) are vmapped over.  The
-    embedding table (a gather, not a GEMM) is snapped to the 8-bit DFP grid
-    in place (values quantized, storage dtype unchanged).
+    Prefer ``quantize_and_plan`` (or ``repro.quant.quantize_model`` directly)
+    so the compiled, serializable plan travels with the quantized params.
     """
+    qparams, _ = quant_api.quantize_model(params, policy)
+    return qparams
 
-    def quant_w(w, prec):
-        def q2(m):
-            return quantize_weights(
-                m, prec.w_bits, prec.group_size, prec.filter_size, prec.refit_scale
-            )
 
-        fn = q2
-        for _ in range(w.ndim - 2):
-            fn = jax.vmap(fn)
-        return fn(w.astype(jnp.float32))
+def quantize_and_plan(
+    api: ModelApi, params, calib_batches=None
+) -> Tuple[Any, QuantPlan, ModelApi]:
+    """One-call PTQ for a zoo model: returns (qparams, plan, plan-bound api).
 
-    def walk(node, path):
-        if isinstance(node, dict):
-            out = {}
-            for key, val in node.items():
-                sub = f"{path}/{key}" if path else key
-                if key == "w" and hasattr(val, "ndim") and val.ndim >= 2:
-                    prec = policy.resolve(path)
-                    if prec.quantized and prec.w_bits < 16:
-                        kdim = val.shape[-2]
-                        if kdim % prec.group_size == 0 and kdim % 16 == 0:
-                            out[key] = quant_w(val, prec)
-                            continue
-                    out[key] = val
-                elif key == "table" and hasattr(val, "ndim"):
-                    out[key] = calibration.fake_quantize_act(
-                        val.astype(jnp.float32), 8, per_row=True
-                    ).astype(val.dtype)
-                else:
-                    out[key] = walk(val, sub)
-            return out
-        return node
-
-    return walk(params, "")
+    With ``calib_batches`` (iterable of forward-compatible batches), a
+    full-precision observing pass profiles per-site activation ranges and
+    the plan carries static DFP exponents (paper's profiled mode); without,
+    PTQ inference uses dynamic per-row exponents everywhere.
+    """
+    qc = api.cfg.quant
+    qparams, plan = quant_api.quantize_model(
+        params,
+        api.ctx.policy,
+        mode="ptq",
+        backend=qc.backend,
+        calib_batches=calib_batches,
+        forward=lambda p, b, ctx: api.with_ctx(ctx).forward(p, b),
+        act_bits=qc.act_bits,
+    )
+    return qparams, plan, api.with_plan(plan)

@@ -20,8 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ste
-from repro.core.quantizer import QTensor
-from repro.kernels import ops
+from repro.quant.backends import qmatmul
+from repro.quant.qtensor import QTensor
 from repro.models import layers
 from repro.models.layers import QuantCtx, dense
 from repro.parallel import sharding
@@ -57,11 +57,11 @@ def _quantize_expert_weights(experts, ctx: QuantCtx, path: str):
     already hoisted it -- the explicit hoist only pinned the quantized
     copies as live values (+5% bytes, +6.6 GiB temps on arctic x train_4k).
     The lazy per-matmul form below lets XLA place the computation."""
-    if ctx.mode != "qat" or ctx.policy is None:
+    if ctx.mode != "qat" or (ctx.plan is None and ctx.policy is None):
         return experts
     out = {}
     for name, leaf in experts.items():
-        prec = ctx.policy.resolve(f"{path}/experts/{name}")
+        prec = ctx.resolve(f"{path}/experts/{name}")
         w = leaf["w"]
         out[name] = {"w": w, "_prec": prec}  # quantized lazily in the matmul
     return out
@@ -78,7 +78,11 @@ def _expert_matmul(w, x, path: str, ctx: QuantCtx, prec=None, buf_axes=None) -> 
         # (8.5x flops, +12 GiB temps on grok x prefill_32k).  The vmapped
         # qmatmul below lets XLA hoist; the remaining f32 gathers are an
         # open item for a shard_map EP implementation (EXPERIMENTS.md).
-        return jax.vmap(lambda qt, xe: ops.qmatmul(xe, qt, backend=ctx.backend))(w, x)
+        return jax.vmap(
+            lambda qt, xe: qmatmul(
+                xe, qt, backend=ctx.backend, act_exponent=ctx.act_exponent(path)
+            )
+        )(w, x)
     if ctx.mode == "qat" and prec is not None and prec.quantized:
         wq = jax.vmap(
             lambda we: ste.weights_ste(

@@ -1,0 +1,67 @@
+"""`repro.quant`: the single entry point for all quantization.
+
+The paper's pipeline -- cluster-ternarize weights, re-quantize scale tables
+to 8-bit DFP, profile activations for shared exponents, serve on a full
+integer path -- is exposed as one coherent API:
+
+  * ``QTensor`` + packing primitives       (repro.quant.qtensor)
+  * format registry (ternary/int4/int8)    (repro.quant.formats)
+  * backend registry + ``qmatmul``         (repro.quant.backends)
+  * ``QuantPlan`` / ``QuantCtx`` / compile (repro.quant.plan)
+  * ``quantize_model`` calibration-aware PTQ (repro.quant.api)
+
+Migration from the legacy surfaces (still re-exported for compatibility):
+
+  * ``repro.core.quantizer.quantize_weights``  -> ``repro.quant.quantize_weights``
+  * ``repro.kernels.ops.qmatmul``              -> ``repro.quant.qmatmul``
+  * ``repro.models.make_ctx(cfg)``             -> ``QuantCtx.from_config(cfg.quant)``
+  * ``repro.models.quantize_model_params(p, policy)``
+        -> ``qparams, plan = repro.quant.quantize_model(p, policy)`` then
+           ``api = api.with_plan(plan)`` so every consumer shares the plan.
+"""
+from repro.quant.qtensor import (
+    INT4_PER_WORD,
+    TERNARY_PER_WORD,
+    QTensor,
+    dequantize_scales,
+    pack2,
+    pack4,
+    quantize_scales,
+    unpack2,
+    unpack4,
+)
+from repro.quant.formats import (
+    QuantFormat,
+    decode_codes,
+    dequantize_weights,
+    fake_quantize_weights,
+    format_for_bits,
+    format_names,
+    format_of,
+    get_format,
+    quantize_weights,
+    register_format,
+    weight_quantization_error,
+)
+from repro.quant.backends import (
+    backend_names,
+    get_backend,
+    qmatmul,
+    qmatmul_jit,
+    quantize_activations,
+    register_backend,
+    resolve_backend,
+)
+from repro.quant.plan import (
+    QuantCtx,
+    QuantPlan,
+    compile_policy,
+    iter_weight_sites,
+)
+from repro.quant.api import (
+    Observer,
+    observe_site,
+    quantize_model,
+    quantize_params,
+)
+from repro.core.policy import FULL_PRECISION, LayerPrecision, PrecisionPolicy

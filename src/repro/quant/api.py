@@ -1,0 +1,194 @@
+"""Calibration-aware PTQ entry points over compiled precision plans.
+
+``quantize_model(params, policy, calib_batches=...)`` is the one call every
+consumer (server, dry-run, examples, benchmarks) makes to go from trained
+float params to a servable quantized model:
+
+  1. compile the policy against the param tree -> ``QuantPlan``,
+  2. replace projection ``w`` leaves with QTensors per the plan
+     (``quantize_params``),
+  3. optionally run calibration batches through an observing forward pass,
+     profile per-site activation ranges, and thread the finalized shared
+     exponents into the plan (the paper's profiled static-DFP activation
+     mode; un-profiled sites keep dynamic per-row exponents).
+
+The observer uses ``jax.debug.callback`` so it records real runtime values
+even when sites live inside ``lax.scan`` block loops (stacked layers share
+one site path, hence one exponent -- consistent with the plan table).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfp
+from repro.core.policy import PrecisionPolicy
+from repro.quant.formats import quantize_weights
+from repro.quant.plan import (
+    QuantCtx,
+    QuantPlan,
+    compile_policy,
+    is_projection_site,
+    site_subpath,
+)
+from repro.quant.qtensor import TERNARY_PER_WORD
+
+
+def _record(store, site: str, max_abs: float, msq: float) -> None:
+    """Accumulate one batch's stats into any {site: entry} mapping."""
+    e = store.get(site)
+    if e is None:
+        store[site] = {"max_abs": max_abs, "msq": msq, "count": 1.0}
+    else:
+        e["max_abs"] = max(e["max_abs"], max_abs)
+        e["msq"] += msq
+        e["count"] += 1.0
+
+
+class Observer(dict):
+    """Host-side activation-range store: {site: {"max_abs", "msq", "count"}}.
+
+    Populated by ``observe_site`` callbacks during a calibration forward;
+    ``exponents()`` finalizes ``max_abs`` into shared 8-bit DFP exponents.
+    ``msq``/``count`` mirror ``core.calibration.ObserverState`` so the same
+    pass can drive the BN-recompute analogue (``recalibrate_gamma`` needs
+    the per-site second moment).
+    """
+
+    def record(self, site: str, max_abs: float, msq: float) -> None:
+        _record(self, site, max_abs, msq)
+
+    def exponents(self, bits: int = 8, bits_for=None) -> Dict[str, int]:
+        """Finalize ranges into shared DFP exponents.  ``bits_for(site)``
+        overrides the mantissa width per site (must match the act_bits the
+        consumer quantizes with, or the exponent mis-scales)."""
+        return {
+            site: int(
+                dfp.choose_exponent(
+                    jnp.float32(e["max_abs"]),
+                    bits_for(site) if bits_for is not None else bits,
+                )
+            )
+            for site, e in self.items()
+        }
+
+
+def observe_site(store, site: str, x: jax.Array) -> None:
+    """Record one activation batch at ``site`` into a mutable host store.
+
+    Runs via jax.debug.callback so it works identically in eager, jit and
+    lax.scan contexts (max/mean accumulation is order-independent).
+    """
+    xf = x.astype(jnp.float32)
+    max_abs = jnp.max(jnp.abs(xf))
+    msq = jnp.mean(jnp.square(xf))
+
+    def cb(m, s, _store=store, _site=site):
+        _record(_store, _site, float(m), float(s))
+
+    jax.debug.callback(cb, max_abs, msq)
+
+
+# ---------------------------------------------------------------------------
+# Param-tree conversion.
+# ---------------------------------------------------------------------------
+def _quantizable(prec, kdim: int) -> bool:
+    return (
+        prec is not None
+        and prec.quantized
+        and prec.w_bits < 16
+        and kdim % prec.group_size == 0
+        and kdim % TERNARY_PER_WORD == 0
+    )
+
+
+def quantize_params(params, plan: QuantPlan):
+    """Walk the param tree; replace projection 'w' leaves with QTensors.
+
+    Stacked leading axes (layers and/or experts) are vmapped over.  The
+    embedding table (a gather, not a GEMM) is snapped to the 8-bit DFP grid
+    in place (values quantized, storage dtype unchanged).  Precision comes
+    from the compiled plan table -- no per-leaf regex resolution.
+    """
+    from repro.core import calibration
+
+    def quant_w(w, prec):
+        def q2(m):
+            return quantize_weights(
+                m, prec.w_bits, prec.group_size, prec.filter_size,
+                prec.refit_scale, fmt=prec.fmt,
+            )
+
+        fn = q2
+        for _ in range(w.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(w.astype(jnp.float32))
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            out = {}
+            for key, val in node.items():
+                sub = site_subpath(path, key)
+                if is_projection_site(key, val):
+                    prec = plan.resolve(path)
+                    if _quantizable(prec, val.shape[-2]):
+                        out[key] = quant_w(val, prec)
+                    else:
+                        out[key] = val
+                elif key == "table" and hasattr(val, "ndim"):
+                    out[key] = calibration.fake_quantize_act(
+                        val.astype(jnp.float32), 8, per_row=True
+                    ).astype(val.dtype)
+                else:
+                    out[key] = walk(val, sub)
+            return out
+        return node
+
+    return walk(params, "")
+
+
+# ---------------------------------------------------------------------------
+# The one-call PTQ entry point.
+# ---------------------------------------------------------------------------
+def quantize_model(
+    params,
+    policy: PrecisionPolicy,
+    *,
+    mode: str = "ptq",
+    backend: str = "auto",
+    calib_batches: Optional[Iterable[Any]] = None,
+    forward: Optional[Callable[[Any, Any, QuantCtx], Any]] = None,
+    act_bits: int = 8,
+) -> Tuple[Any, QuantPlan]:
+    """Convert float params to QTensors under a compiled plan.
+
+    Returns ``(qparams, plan)``.  With ``calib_batches`` (any iterable of
+    model inputs) and ``forward(params, batch, ctx)``, a full-precision
+    observing pass profiles activation ranges at every projection site and
+    the finalized static exponents ride in the plan; PTQ inference then uses
+    static per-site DFP activations where profiled and dynamic per-row
+    everywhere else.
+    """
+    if calib_batches is not None and forward is None:
+        raise ValueError("calib_batches requires a forward(params, batch, ctx)")
+    plan = compile_policy(policy, params, mode=mode, backend=backend)
+    qparams = quantize_params(params, plan)
+    if calib_batches is not None:
+        obs = Observer()
+        ctx = QuantCtx(mode="fp", policy=policy, observer=obs)
+        for batch in calib_batches:
+            forward(params, batch, ctx)
+        # the observer records through jax.debug.callback: on async-dispatch
+        # backends the callbacks may still be in flight here -- flush them
+        # before finalizing, or the plan silently loses calibrated sites
+        jax.effects_barrier()
+
+        def bits_for(site):
+            prec = plan.resolve(site)
+            # must match the act_bits dense() quantizes this site with
+            return prec.act_bits if prec is not None else act_bits
+
+        plan = plan.with_act_exponents(obs.exponents(act_bits, bits_for))
+    return qparams, plan

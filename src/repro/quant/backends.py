@@ -1,0 +1,210 @@
+"""Backend registry for the quantized matmul: pluggable execution strategies.
+
+``qmatmul(x, qt)`` is the single entry point for PTQ inference.  It runs a
+shared activation-quantization prologue (per-row dynamic DFP exponents, or a
+calibrated static per-site exponent when the ``QuantPlan`` carries one) and
+then dispatches to a registered backend strategy:
+
+  * ``pallas``   : the real integer pipeline (TPU target; runs in interpret
+                   mode on CPU so tests validate the exact kernel
+                   semantics).  The kernel itself comes from the *format*
+                   registry, so new weight encodings plug in here too.
+  * ``xla``      : dequantize-weights -> bf16 dot.  Mathematically identical
+                   up to f32 rounding; this is what the distributed (pjit)
+                   graph lowers for the dry-run, where collectives/sharding
+                   are the object of study.
+  * ``xla_int8`` : integer pipeline without Pallas -- per-group batched int8
+                   dots with int32 accumulation (2x int8 MXU path, 1 B/elem
+                   weight stream).
+  * ``ref``      : the pure-jnp oracle (bit-exact integer semantics).
+  * ``auto``     : resolves to pallas on TPU, xla otherwise.
+
+Every strategy receives the already-quantized activations ``(xq, xe)`` plus
+the QTensor, so registering a new backend is one function -- there is no
+string-compare ladder to extend (that lived in ``kernels/ops.py`` before
+this registry).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfp
+from repro.core.quantizer import QTensor
+from repro.kernels.quantize import quantize_rows
+from repro.kernels.ref import qmatmul_ref, quantize_rows_ref
+
+# fn(xq int8 (M, K), xe int32 ((M,1) or scalar), qt, *, block_m, block_n,
+#    block_k) -> f32 (M, N), exponents applied.
+BackendFn = Callable[..., jax.Array]
+
+_BACKENDS: Dict[str, BackendFn] = {}
+
+
+def register_backend(name: str, fn: BackendFn, *, overwrite: bool = False) -> None:
+    if name in _BACKENDS and not overwrite:
+        raise ValueError(f"backend {name!r} already registered")
+    _BACKENDS[name] = fn
+
+
+def get_backend(name: str) -> BackendFn:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {sorted(_BACKENDS)}"
+        ) from None
+
+
+def backend_names() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(name: str) -> str:
+    """'auto' -> pallas on TPU, xla elsewhere; concrete names pass through."""
+    if name == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return name
+
+
+# ---------------------------------------------------------------------------
+# Shared activation-quantization prologue.
+# ---------------------------------------------------------------------------
+def quantize_activations(
+    x: jax.Array, bits: int = 8, use_pallas: Optional[bool] = None
+):
+    """Per-row dynamic DFP quantization -> (int8 mantissas, int32 exponents).
+
+    Three explicit paths:
+      * pallas on TPU        (use_pallas defaults to True on TPU),
+      * pallas interpret mode (use_pallas=True off-TPU; exact but slow --
+        used by tests to validate the kernel semantics),
+      * the jnp reference    (use_pallas=False; default off-TPU).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return quantize_rows_ref(x, bits)
+    return quantize_rows(x, bits=bits, interpret=not _on_tpu())
+
+
+def _quantize_acts(xm: jax.Array, act_bits: int, act_exponent) -> Tuple[jax.Array, jax.Array]:
+    """Dynamic per-row exponents, or the plan's calibrated static exponent."""
+    if act_exponent is None:
+        return quantize_rows_ref(xm, act_bits)
+    e = jnp.asarray(act_exponent, jnp.int32)
+    return dfp.quantize(xm, e, act_bits), e
+
+
+# ---------------------------------------------------------------------------
+# Built-in backend strategies.
+# ---------------------------------------------------------------------------
+def _xla_backend(xq, xe, qt: QTensor, **_):
+    # float-side equivalent: fake-quantized activations x dequant weights
+    # (f32 dot output; a bf16-output variant was tried as Perf iteration
+    # B3 and had NO effect on collective bytes -- the TP reductions in
+    # the MoE cells come from the combine scatter-add, see moe.py B4)
+    from repro.quant.formats import dequantize_weights
+
+    xf = dfp.dequantize(xq, xe).astype(jnp.bfloat16)
+    w = dequantize_weights(qt).astype(jnp.bfloat16)
+    return jax.lax.dot_general(
+        xf, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _xla_int8_backend(xq, xe, qt: QTensor, **_):
+    # integer pipeline without Pallas: per-group batched int8 dots with
+    # int32 accumulation; weights materialize as int8 codes (1 B/elem)
+    # instead of a scaled bf16 copy (2 B/elem) -- halves the decode-phase
+    # weight stream and uses the 2x int8 MXU path on TPU.
+    from repro.quant.formats import decode_codes
+
+    g = qt.group_size
+    m = xq.shape[0]
+    kg = qt.k // g
+    xg = jnp.moveaxis(xq.reshape(m, kg, g), 1, 0)  # (Kg, M, G) int8
+    wg = decode_codes(qt).reshape(kg, g, qt.n)  # (Kg, G, N) int8
+    part = jax.lax.dot_general(
+        xg, wg, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32,
+    )  # (Kg, M, N) int32
+    scaled = part.astype(jnp.float32) * qt.scale_m.astype(jnp.float32)[:, None, :]
+    out = scaled.sum(axis=0)
+    exp = qt.scale_e.astype(jnp.float32) + xe.astype(jnp.float32)
+    return out * jnp.exp2(exp)
+
+
+def _ref_backend(xq, xe, qt: QTensor, **_):
+    return qmatmul_ref(xq, xe, qt)
+
+
+def _pallas_backend(xq, xe, qt: QTensor, *, block_m=128, block_n=128, block_k=512):
+    from repro.quant.formats import format_of
+
+    kernel = format_of(qt).kernel
+    if kernel is None:
+        raise ValueError(
+            f"format for bits={qt.bits} has no Pallas kernel registered"
+        )
+    interpret = not _on_tpu()
+    m = xq.shape[0]
+    # pad rows to a tile multiple (serving batches are ragged)
+    bm = min(block_m, max(8, m))
+    pad = (-m) % bm
+    if pad:
+        xq = jnp.pad(xq, ((0, pad), (0, 0)))
+    out = kernel(
+        xq, qt.packed, qt.scale_m,
+        group=qt.group_size, block_m=bm, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )
+    out = out[:m] if pad else out
+    exp = qt.scale_e.astype(jnp.float32) + xe.astype(jnp.float32)
+    return out * jnp.exp2(exp)
+
+
+register_backend("xla", _xla_backend)
+register_backend("xla_int8", _xla_int8_backend)
+register_backend("ref", _ref_backend)
+register_backend("pallas", _pallas_backend)
+
+
+# ---------------------------------------------------------------------------
+# The public quantized matmul.
+# ---------------------------------------------------------------------------
+def qmatmul(
+    x: jax.Array,
+    qt: QTensor,
+    *,
+    backend: str = "auto",
+    act_bits: int = 8,
+    act_exponent=None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+) -> jax.Array:
+    """x [..., K] (float) x QTensor (K, N) -> [..., N] f32.
+
+    Full integer pipeline: 8-bit DFP activations (per-row dynamic exponents,
+    or the calibrated static ``act_exponent`` from a QuantPlan), sub-8-bit
+    weights, int32 cluster accumulation, one scale multiply per cluster.
+    """
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])
+    fn = get_backend(resolve_backend(backend))
+    xq, xe = _quantize_acts(xm, act_bits, act_exponent)
+    out = fn(xq, xe, qt, block_m=block_m, block_n=block_n, block_k=block_k)
+    return out.reshape(*lead, qt.n)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "act_bits"))
+def qmatmul_jit(x, qt, backend="auto", act_bits=8):
+    return qmatmul(x, qt, backend=backend, act_bits=act_bits)

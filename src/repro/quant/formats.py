@@ -1,0 +1,223 @@
+"""Quantization format registry: pluggable weight encodings.
+
+A ``QuantFormat`` bundles everything bit-width specific about a weight
+encoding -- how float weights become integer codes + cluster scales
+(``weight_codes``), how codes are packed/unpacked (``encode``/``decode``),
+and which Pallas matmul kernel consumes the packed form (``kernel``).  The
+built-in formats reproduce the paper:
+
+  * ``ternary`` (bits=2): Algorithms 1 & 2 hierarchical cluster
+    ternarization, 16 codes per uint32.
+  * ``int4``    (bits=4): per-cluster DFP mantissas, max-abs scaling,
+    8 codes per uint32.
+  * ``int8``    (bits=8): per-cluster DFP mantissas, raw int8 storage.
+
+New formats plug in with ``register_format`` and flow through every consumer
+(``quantize_weights``, ``qmatmul`` backends, PTQ conversion) without touching
+dispatch code -- this replaces the old ``bits == 2/4/8`` if-chains in
+``core/quantizer.py`` and ``kernels/ops.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfp, ternary
+from repro.core.quantizer import (
+    QTensor,
+    dequantize_scales,
+    pack2,
+    pack4,
+    quantize_scales,
+    unpack2,
+    unpack4,
+)
+from repro.kernels.int4_matmul import int4_matmul
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.ternary_matmul import ternary_matmul
+
+# weight_codes: (w f32 (K, N), group_size, filter_size, refit_scale)
+#   -> (codes int8 (K, N), scale_m int8 (K/g, N), scale_e int32 scalar)
+WeightCodesFn = Callable[..., Tuple[jax.Array, jax.Array, jax.Array]]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantFormat:
+    """One registered weight encoding (see module docstring)."""
+
+    name: str
+    bits: int
+    encode: Callable[[jax.Array], jax.Array]  # int8 codes (K, N) -> packed
+    decode: Callable[[jax.Array, int], jax.Array]  # (packed, K) -> int8 codes
+    weight_codes: WeightCodesFn
+    kernel: Optional[Callable] = None  # Pallas matmul over the packed form
+
+
+_FORMATS: Dict[str, QuantFormat] = {}
+_BY_BITS: Dict[int, str] = {}
+
+
+def register_format(
+    name: str,
+    *,
+    bits: int,
+    encode: Callable,
+    decode: Callable,
+    weight_codes: WeightCodesFn,
+    kernel: Optional[Callable] = None,
+    overwrite: bool = False,
+) -> QuantFormat:
+    """Register a weight format under ``name`` (and as default for ``bits``
+    if no format claimed that width yet)."""
+    if name in _FORMATS and not overwrite:
+        raise ValueError(f"format {name!r} already registered")
+    if overwrite and name in _FORMATS:
+        old_bits = _FORMATS[name].bits
+        if old_bits != bits and _BY_BITS.get(old_bits) == name:
+            del _BY_BITS[old_bits]  # this name no longer encodes that width
+    fmt = QuantFormat(name, bits, encode, decode, weight_codes, kernel)
+    _FORMATS[name] = fmt
+    # claim the bits default only if unclaimed or already owned by this name:
+    # overwriting an unrelated format must not change how fmt="" QTensors
+    # (e.g. pre-existing checkpoints) resolve
+    if bits not in _BY_BITS or _BY_BITS[bits] == name:
+        _BY_BITS[bits] = name
+    return fmt
+
+
+def get_format(name: str) -> QuantFormat:
+    try:
+        return _FORMATS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown quant format {name!r}; registered: {sorted(_FORMATS)}"
+        ) from None
+
+
+def format_for_bits(bits: int) -> QuantFormat:
+    try:
+        return _FORMATS[_BY_BITS[bits]]
+    except KeyError:
+        raise ValueError(
+            f"no quant format registered for bits={bits}; "
+            f"registered: {sorted(_FORMATS)}"
+        ) from None
+
+
+def format_of(qt: QTensor) -> QuantFormat:
+    return get_format(qt.fmt) if qt.fmt else format_for_bits(qt.bits)
+
+
+def format_names() -> Tuple[str, ...]:
+    return tuple(sorted(_FORMATS))
+
+
+# ---------------------------------------------------------------------------
+# Built-in formats (the paper's 2t / 4 / 8-bit cluster schemes).
+# ---------------------------------------------------------------------------
+def _ternary_weight_codes(w, group_size, filter_size, refit_scale):
+    codes, alpha = ternary.ternarize_matrix(w, group_size, filter_size, refit_scale)
+    scale_m, scale_e = quantize_scales(alpha)
+    return codes, scale_m, scale_e
+
+
+def _dfp_weight_codes(bits: int) -> WeightCodesFn:
+    def weight_codes(w, group_size, filter_size, refit_scale):
+        k, n = w.shape
+        blocks = w.reshape(k // group_size, group_size, n)
+        max_abs = jnp.max(jnp.abs(blocks), axis=1)  # (groups, N)
+        alpha = max_abs / dfp.qmax(bits)
+        scale_m, scale_e = quantize_scales(alpha)
+        # mantissas are chosen against the *re-quantized* scales so the
+        # stored (codes, scale table) pair is self-consistent
+        scale = dequantize_scales(scale_m, scale_e)[:, None, :]
+        safe = jnp.where(scale > 0, scale, 1.0)
+        q = jnp.clip(jnp.round(blocks / safe), -dfp.qmax(bits), dfp.qmax(bits))
+        return q.astype(jnp.int8).reshape(k, n), scale_m, scale_e
+
+    return weight_codes
+
+
+register_format(
+    "ternary",
+    bits=2,
+    encode=pack2,
+    decode=unpack2,
+    weight_codes=_ternary_weight_codes,
+    kernel=ternary_matmul,
+)
+register_format(
+    "int4",
+    bits=4,
+    encode=pack4,
+    decode=unpack4,
+    weight_codes=_dfp_weight_codes(4),
+    kernel=int4_matmul,
+)
+register_format(
+    "int8",
+    bits=8,
+    encode=lambda codes: codes,  # raw int8 storage
+    decode=lambda packed, k: packed,
+    weight_codes=_dfp_weight_codes(8),
+    kernel=int8_matmul,
+)
+
+
+# ---------------------------------------------------------------------------
+# Generic weight quantization entry points (format-registry driven).
+# ---------------------------------------------------------------------------
+def quantize_weights(
+    w: jax.Array,
+    bits: int = 2,
+    group_size: int = 64,
+    filter_size: int = 1,
+    refit_scale: bool = False,
+    fmt: Optional[str] = None,
+) -> QTensor:
+    """Quantize a (K, N) projection with the paper's cluster scheme.
+
+    The encoding is resolved through the format registry: ``fmt`` by name,
+    else the default format for ``bits``.  In every case the scale table
+    itself is re-quantized to 8-bit DFP so the whole pipeline stays
+    sub-8-bit.
+    """
+    k, n = w.shape
+    w = w.astype(jnp.float32)
+    f = get_format(fmt) if fmt else format_for_bits(bits)
+    codes, scale_m, scale_e = f.weight_codes(w, group_size, filter_size, refit_scale)
+    return QTensor(
+        f.encode(codes), scale_m, scale_e, f.bits, group_size, (k, n),
+        fmt=f.name if fmt else "",
+    )
+
+
+def decode_codes(qt: QTensor) -> jax.Array:
+    """Integer mantissas (K, N) int8 of a QTensor."""
+    return format_of(qt).decode(qt.packed, qt.k)
+
+
+def dequantize_weights(qt: QTensor) -> jax.Array:
+    """f32 (K, N) reconstruction."""
+    codes = decode_codes(qt).astype(jnp.float32)
+    scale = dequantize_scales(qt.scale_m, qt.scale_e)  # (groups, N)
+    c = codes.reshape(qt.n_groups, qt.group_size, qt.n)
+    return (c * scale[:, None, :]).reshape(qt.k, qt.n)
+
+
+def fake_quantize_weights(
+    w: jax.Array, bits: int, group_size: int, filter_size: int = 1,
+    refit_scale: bool = False,
+) -> jax.Array:
+    """quantize -> dequantize (QAT forward / error measurement)."""
+    return dequantize_weights(
+        quantize_weights(w, bits, group_size, filter_size, refit_scale)
+    )
+
+
+def weight_quantization_error(w, bits, group_size, filter_size=1) -> jax.Array:
+    wq = fake_quantize_weights(w, bits, group_size, filter_size)
+    return jnp.sum((w - wq) ** 2)

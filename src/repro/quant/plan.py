@@ -1,0 +1,260 @@
+"""Compiled precision plans: the static per-layer quantization table.
+
+``PrecisionPolicy`` (core/policy.py) is a *rule set* -- a default precision
+plus ordered regex overrides.  A ``QuantPlan`` is that rule set *compiled*
+against a concrete parameter tree: every projection site's path is resolved
+exactly once into a ``LayerPrecision`` table, so the hot path (``dense()``)
+does a dict lookup instead of a per-call ``re.search`` ladder.  The plan is
+
+  * registered as a pytree (all-static leaves: it rides along inside jitted
+    closures and checkpoint trees without retracing hazards),
+  * JSON-serializable (``to_json``/``from_json``) so PTQ checkpoints carry
+    their plan,
+  * calibration-aware: ``act_exponents`` maps site path -> shared 8-bit DFP
+    activation exponent profiled by the observer pass (the paper's static
+    "profiled DFP" mode); sites without an entry fall back to dynamic
+    per-row exponents, selectable per layer via ``LayerPrecision.static_act``.
+
+``QuantCtx`` is the thin per-forward view models consult: mode + backend +
+(plan | policy) + an optional calibration observer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, MutableMapping, Optional, Tuple
+
+import jax
+
+from repro.core.policy import LayerPrecision, PrecisionPolicy
+
+ActExponents = Tuple[Tuple[str, int], ...]
+
+
+def _prec_to_dict(p: LayerPrecision) -> Dict[str, Any]:
+    return dataclasses.asdict(p)
+
+
+def _prec_from_dict(d: Dict[str, Any]) -> LayerPrecision:
+    return LayerPrecision(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPlan:
+    """Compiled, serializable quantization plan for one parameter tree."""
+
+    site_paths: Tuple[str, ...] = ()
+    site_precisions: Tuple[LayerPrecision, ...] = ()
+    policy: Optional[PrecisionPolicy] = None  # fallback for un-compiled paths
+    mode: str = "ptq"  # 'qat' | 'ptq'
+    backend: str = "auto"
+    act_exponents: ActExponents = ()  # (site path, int32 exponent) pairs
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "_table", dict(zip(self.site_paths, self.site_precisions))
+        )
+        object.__setattr__(self, "_exps", dict(self.act_exponents))
+
+    # -- resolution (the compiled fast path) -------------------------------
+    def resolve(self, path: str) -> Optional[LayerPrecision]:
+        prec = self._table.get(path)
+        if prec is None and self.policy is not None:
+            prec = self.policy.resolve(path)  # regex fallback, off-plan paths
+        return prec
+
+    def act_exponent(self, path: str) -> Optional[int]:
+        """Calibrated static activation exponent for a site, if profiled and
+        the site's precision opts in (``static_act``)."""
+        e = self._exps.get(path)
+        if e is None:
+            return None
+        prec = self.resolve(path)
+        if prec is not None and not prec.static_act:
+            return None
+        return e
+
+    def sites(self) -> Tuple[Tuple[str, LayerPrecision], ...]:
+        return tuple(zip(self.site_paths, self.site_precisions))
+
+    @property
+    def calibrated(self) -> bool:
+        return bool(self.act_exponents)
+
+    def with_act_exponents(self, exps: Dict[str, int]) -> "QuantPlan":
+        pairs = tuple(sorted((str(k), int(v)) for k, v in exps.items()))
+        return dataclasses.replace(self, act_exponents=pairs)
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self) -> str:
+        pol = None
+        if self.policy is not None:
+            pol = {
+                "default": _prec_to_dict(self.policy.default),
+                "overrides": [
+                    [pat, _prec_to_dict(p)] for pat, p in self.policy.overrides
+                ],
+            }
+        return json.dumps(
+            {
+                "version": 1,
+                "mode": self.mode,
+                "backend": self.backend,
+                "sites": [
+                    [path, _prec_to_dict(prec)]
+                    for path, prec in zip(self.site_paths, self.site_precisions)
+                ],
+                "policy": pol,
+                "act_exponents": [[p, e] for p, e in self.act_exponents],
+            }
+        )
+
+    @classmethod
+    def from_json(cls, blob: str) -> "QuantPlan":
+        d = json.loads(blob)
+        pol = None
+        if d.get("policy") is not None:
+            pol = PrecisionPolicy(
+                default=_prec_from_dict(d["policy"]["default"]),
+                overrides=tuple(
+                    (pat, _prec_from_dict(p)) for pat, p in d["policy"]["overrides"]
+                ),
+            )
+        return cls(
+            site_paths=tuple(path for path, _ in d["sites"]),
+            site_precisions=tuple(_prec_from_dict(p) for _, p in d["sites"]),
+            policy=pol,
+            mode=d["mode"],
+            backend=d["backend"],
+            act_exponents=tuple((p, int(e)) for p, e in d["act_exponents"]),
+        )
+
+
+# All fields are static metadata: the plan has no array leaves, so it can sit
+# inside jit closures, checkpoint trees and vmapped calls for free.
+jax.tree_util.register_dataclass(
+    QuantPlan,
+    data_fields=[],
+    meta_fields=[
+        "site_paths", "site_precisions", "policy", "mode", "backend",
+        "act_exponents",
+    ],
+)
+
+
+def is_projection_site(key: str, val) -> bool:
+    """One predicate for 'this leaf is a quantizable projection weight',
+    shared by plan compilation and param conversion so the compiled table
+    and the conversion walk can never disagree about what a site is."""
+    return key == "w" and hasattr(val, "ndim") and val.ndim >= 2
+
+
+def site_subpath(path: str, key: str) -> str:
+    """The one path-construction rule ('a/b/c', matching dense() strings)."""
+    return f"{path}/{key}" if path else key
+
+
+def iter_weight_sites(params) -> Tuple[Tuple[str, Any], ...]:
+    """All projection sites in a param tree: (path, w-leaf) for every dict
+    node holding a 2-D+ ``w``.  Paths match the strings models pass to
+    ``dense()`` (stacked layer/expert axes add no path component)."""
+    sites = []
+
+    def walk(node, path):
+        if not isinstance(node, dict):
+            return
+        for key, val in node.items():
+            if is_projection_site(key, val):
+                sites.append((path, val))
+            elif isinstance(val, dict):
+                walk(val, site_subpath(path, key))
+
+    walk(params, "")
+    return tuple(sites)
+
+
+def compile_policy(
+    policy: PrecisionPolicy,
+    params,
+    *,
+    mode: str = "ptq",
+    backend: str = "auto",
+) -> QuantPlan:
+    """Walk ``params`` once, resolving every projection site's precision.
+
+    Works on concrete arrays or ShapeDtypeStructs (only ``ndim`` is read),
+    so plans compile under ``jax.eval_shape`` for the dry-run.
+    """
+    paths, precs = [], []
+    for path, _ in iter_weight_sites(params):
+        paths.append(path)
+        precs.append(policy.resolve(path))
+    return QuantPlan(
+        site_paths=tuple(paths),
+        site_precisions=tuple(precs),
+        policy=policy,
+        mode=mode,
+        backend=backend,
+    )
+
+
+# ---------------------------------------------------------------------------
+# QuantCtx: the per-forward view models consult.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class QuantCtx:
+    """Thin view over a QuantPlan (or, pre-compile, a PrecisionPolicy).
+
+    mode      : 'fp' | 'qat' | 'ptq'
+    policy    : regex rule set (used until a plan is compiled, and as the
+                fallback for paths outside the compiled table)
+    backend   : qmatmul backend for PTQ
+    plan      : compiled precision plan (dict-lookup resolution + calibrated
+                activation exponents)
+    observer  : mutable {site: {"max_abs", "msq", "count"}} host store; when
+                set, ``dense()`` records activation ranges (calibration pass)
+    """
+
+    mode: str = "fp"  # 'fp' | 'qat' | 'ptq'
+    policy: Optional[PrecisionPolicy] = None
+    backend: str = "auto"  # ptq matmul backend
+    plan: Optional[QuantPlan] = None
+    observer: Optional[MutableMapping] = dataclasses.field(
+        default=None, compare=False
+    )
+
+    @staticmethod
+    def fp() -> "QuantCtx":
+        return QuantCtx("fp", None)
+
+    @classmethod
+    def from_config(cls, q) -> "QuantCtx":
+        """Build the pre-compile ctx from a configs.base.QuantConfig."""
+        if q.mode == "fp":
+            return cls.fp()
+        if q.w_bits == 2:
+            pol = PrecisionPolicy.ternary(q.group_size, q.filter_size, q.refit_scale)
+        elif q.w_bits == 4:
+            pol = PrecisionPolicy.int4(q.group_size)
+        else:
+            pol = PrecisionPolicy.int8(q.group_size)
+        return cls(q.mode, pol, q.backend)
+
+    @classmethod
+    def for_plan(cls, plan: QuantPlan) -> "QuantCtx":
+        return cls(plan.mode, plan.policy, plan.backend, plan=plan)
+
+    def with_observer(self, observer: MutableMapping) -> "QuantCtx":
+        return dataclasses.replace(self, observer=observer)
+
+    def resolve(self, path: str) -> Optional[LayerPrecision]:
+        if self.plan is not None:
+            return self.plan.resolve(path)
+        if self.policy is not None:
+            return self.policy.resolve(path)
+        return None
+
+    def act_exponent(self, path: str) -> Optional[int]:
+        if self.plan is None:
+            return None
+        return self.plan.act_exponent(path)

@@ -1,0 +1,17 @@
+"""QTensor container + packing primitives (canonical API surface).
+
+The implementation lives in ``repro.core.quantizer`` (the dependency base
+layer under the kernels); this module is the ``repro.quant`` face of it.
+See that module's docstring for the storage layout.
+"""
+from repro.core.quantizer import (  # noqa: F401
+    INT4_PER_WORD,
+    TERNARY_PER_WORD,
+    QTensor,
+    dequantize_scales,
+    pack2,
+    pack4,
+    quantize_scales,
+    unpack2,
+    unpack4,
+)

@@ -1,9 +1,12 @@
 """Hypothesis property tests for the quantization core."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this image")
+
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import assume, given, settings
 
 from repro.core import dfp, quantizer, ternary

@@ -1,0 +1,155 @@
+"""QTensor round-trips: pack/unpack exactness across the paper's N sweep,
+pytree registration, and (QTensor + QuantPlan) serialization round-trips."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dfp
+from repro.quant import (
+    QTensor,
+    decode_codes,
+    dequantize_scales,
+    dequantize_weights,
+    pack2,
+    pack4,
+    quantize_weights,
+    unpack2,
+    unpack4,
+)
+
+BITS = (2, 4, 8)
+GROUPS = (4, 16, 64)  # the paper's N sweep
+
+
+def _rand_w(k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Packing primitives.
+# ---------------------------------------------------------------------------
+def test_pack2_roundtrip_exact():
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(-1, 2, size=(64, 8)), jnp.int8)
+    assert (np.asarray(unpack2(pack2(codes), 64)) == np.asarray(codes)).all()
+
+
+def test_pack4_roundtrip_exact_symmetric_range():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.integers(-7, 8, size=(64, 8)), jnp.int8)
+    assert (np.asarray(unpack4(pack4(q), 64)) == np.asarray(q)).all()
+
+
+def test_pack4_rejects_asymmetric_minus8():
+    """The quantizer clips int4 mantissas to +/-qmax(4) == 7; pack4 enforces
+    that symmetric-range contract on concrete inputs."""
+    bad = jnp.full((8, 2), -8, jnp.int8)
+    with pytest.raises(AssertionError):
+        pack4(bad)
+    assert dfp.qmax(4) == 7
+
+
+# ---------------------------------------------------------------------------
+# QTensor mantissa/scale round-trips over bits x group size.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("g", GROUPS)
+def test_codes_pack_unpack_exact(bits, g):
+    qt = quantize_weights(_rand_w(128, 24, seed=bits * 10 + g), bits, g)
+    codes = np.asarray(decode_codes(qt))
+    assert codes.shape == (128, 24) and codes.dtype == np.int8
+    assert np.abs(codes).max() <= (1 if bits == 2 else dfp.qmax(bits))
+    # re-encode through the format's own packer: bit-exact round trip
+    from repro.quant import format_of
+
+    fmt = format_of(qt)
+    repacked = fmt.encode(jnp.asarray(codes))
+    assert (np.asarray(repacked) == np.asarray(qt.packed)).all()
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("g", GROUPS)
+def test_dequantize_on_scale_grid(bits, g):
+    """Reconstruction lies exactly on the (codes x 8-bit scale table) grid."""
+    qt = quantize_weights(_rand_w(128, 12, seed=bits + g), bits, g)
+    rec = np.asarray(dequantize_weights(qt))
+    codes = np.asarray(decode_codes(qt), np.float32)
+    scales = np.asarray(dequantize_scales(qt.scale_m, qt.scale_e))
+    want = (codes.reshape(qt.n_groups, g, 12)
+            * scales[:, None, :]).reshape(128, 12)
+    np.testing.assert_array_equal(rec, want)
+
+
+@pytest.mark.parametrize("bits", (4, 8))
+def test_requantize_idempotent(bits):
+    """Quantizing an already-quantized DFP weight is (near-)exact: the values
+    sit on the DFP grid, so a second pass reproduces them.  (Ternary is
+    excluded: Algorithm 1's threshold search is not idempotent by design.)"""
+    g = 16
+    qt = quantize_weights(_rand_w(64, 8, seed=7), bits, g)
+    w1 = dequantize_weights(qt)
+    w2 = dequantize_weights(quantize_weights(w1, bits, g))
+    scale = float(jnp.max(jnp.abs(w1))) + 1e-9
+    assert float(jnp.max(jnp.abs(w1 - w2))) / scale < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# Pytree + serialization round-trips.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", BITS)
+def test_qtensor_pytree_roundtrip(bits):
+    qt = quantize_weights(_rand_w(64, 8), bits, 16)
+    leaves, treedef = jax.tree.flatten(qt)
+    assert len(leaves) == 3  # packed, scale_m, scale_e
+    back = jax.tree.unflatten(treedef, leaves)
+    assert (back.bits, back.group_size, back.shape, back.fmt) == (
+        qt.bits, qt.group_size, qt.shape, qt.fmt
+    )
+    assert (np.asarray(back.packed) == np.asarray(qt.packed)).all()
+    # jit transparency: a QTensor passes through jit as a pytree argument
+    out = jax.jit(lambda t: dequantize_weights(t))(qt)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(dequantize_weights(qt)))
+
+
+def test_qtensor_checkpoint_serialization_roundtrip():
+    """QTensors inside a param tree survive the training checkpoint codec."""
+    from repro.training import checkpoint as ck
+
+    tree = {
+        "lm": {"w": quantize_weights(_rand_w(64, 8, seed=3), 2, 16)},
+        "b": jnp.arange(4, dtype=jnp.float32),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 1, tree)
+        step, back = ck.restore_latest(d, jax.eval_shape(lambda: tree))
+    assert step == 1
+    qt, bt = tree["lm"]["w"], back["lm"]["w"]
+    assert (bt.bits, bt.group_size, bt.shape) == (qt.bits, qt.group_size, qt.shape)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_weights(bt)), np.asarray(dequantize_weights(qt))
+    )
+
+
+def test_quantplan_checkpointable_alongside_qtensors():
+    """A plan rides with its quantized params: flatten the pair, rebuild,
+    and the plan still resolves (the checkpointable-quantized-model shape)."""
+    from repro.core.policy import PrecisionPolicy
+    from repro.quant import compile_policy
+
+    params = {"lm_head": {"w": _rand_w(64, 8)}}
+    plan = compile_policy(PrecisionPolicy.int8(16), params).with_act_exponents(
+        {"lm_head": -2}
+    )
+    qt = quantize_weights(params["lm_head"]["w"], 8, 16)
+    bundle = {"params": {"lm_head": {"w": qt}}, "plan": plan}
+    leaves, treedef = jax.tree.flatten(bundle)
+    back = jax.tree.unflatten(treedef, leaves)
+    assert back["plan"] == plan
+    assert back["plan"].act_exponent("lm_head") == -2
+    assert back["plan"].resolve("lm_head").w_bits == 8
