@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
                            DESIGN 2.1 TPU adaptation)
   * bench_dispatch      -> repro.quant dispatch overhead (registry vs the
                            legacy string ladder; plan table vs regex resolve)
+  * bench_checkpoint    -> packed artifact vs fp32 checkpoint: on-disk size
+                           and save/restore wall time (artifact lifecycle)
 """
 from __future__ import annotations
 
@@ -18,6 +20,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        bench_checkpoint,
         bench_cluster_hier,
         bench_dispatch,
         bench_finetune,
@@ -30,6 +33,7 @@ def main() -> None:
     for mod in (
         bench_op_ratio,
         bench_dispatch,
+        bench_checkpoint,
         bench_cluster_hier,
         bench_kernels,
         bench_quant_error,

@@ -99,6 +99,24 @@ class ArchConfig:
         return True  # all assigned archs decode (whisper is enc-dec)
 
 
+def config_to_dict(cfg: ArchConfig) -> dict:
+    """JSON-safe serialization of an ArchConfig (nested QuantConfig included).
+
+    This is what rides in a quantized artifact's manifest so a serving
+    process can rebuild the exact model configuration with no out-of-band
+    state (``repro.models.load_servable``)."""
+    return dataclasses.asdict(cfg)
+
+
+def config_from_dict(d: dict) -> ArchConfig:
+    """Inverse of ``config_to_dict``."""
+    d = dict(d)
+    d["quant"] = QuantConfig(**d.get("quant", {}))
+    # JSON turns tuples into lists; ArchConfig has no tuple fields today,
+    # but keep unknown keys loud rather than silently dropped
+    return ArchConfig(**d)
+
+
 @dataclasses.dataclass(frozen=True)
 class ShapeConfig:
     """One input-shape cell from the assignment."""

@@ -232,6 +232,67 @@ def run_cell(
     return result
 
 
+def run_artifact_roundtrip(
+    arch: str, w_bits: int = 2, group_size: int = 16, verbose: bool = True
+) -> Dict[str, Any]:
+    """Artifact round-trip cell: quantize a smoke model, persist the packed
+    QTensor+plan artifact, cold-start it back, and check the served decode
+    step is bit-identical to the in-memory quantize path.
+
+    Unlike the lowering cells this one runs concrete (smoke-sized) arrays --
+    the object of study is the persistence layer, not the compiled graph.
+    """
+    import tempfile
+
+    import numpy as np
+
+    from repro.models import load_servable, quantize_and_plan, save_servable
+    from repro.training.checkpoint import dir_bytes
+
+    qc = QuantConfig(w_bits=w_bits, group_size=group_size, mode="ptq", backend="xla")
+    cfg = configs.get_smoke(arch, qc)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    qparams, plan, qapi = quantize_and_plan(api, params)
+    fp_bytes = sum(np.asarray(l).nbytes for l in jax.tree.leaves(params))
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.time()
+        save_servable(d, qapi, qparams, plan)
+        t_save = time.time() - t0
+        art_bytes = dir_bytes(d)
+        t0 = time.time()
+        cold_api, cold_params, art = load_servable(d)
+        t_load = time.time() - t0
+
+        tok = jnp.zeros((1, 1), jnp.int32)
+        pos = jnp.int32(0)
+        l_mem, _ = qapi.decode(qparams, tok, pos, qapi.init_cache(1, 8))
+        l_cold, _ = cold_api.decode(cold_params, tok, pos, cold_api.init_cache(1, 8))
+        bit_exact = bool(np.array_equal(np.asarray(l_mem), np.asarray(l_cold)))
+        plan_ok = art.plan is not None and art.plan.to_json() == plan.to_json()
+    result = {
+        "arch": arch,
+        "shape": "artifact_roundtrip",
+        "status": "ok" if (bit_exact and plan_ok) else "FAILED",
+        "w_bits": w_bits,
+        "fp32_bytes": fp_bytes,
+        "artifact_bytes": art_bytes,
+        "compression_x": fp_bytes / art_bytes,
+        "decode_bit_exact": bit_exact,
+        "plan_roundtrip": plan_ok,
+        "timings_s": {"save": t_save, "load": t_load},
+    }
+    if verbose:
+        print(
+            f"[{arch} x artifact_roundtrip] {result['status']}  "
+            f"fp32={fp_bytes / 1e6:.2f}MB artifact={art_bytes / 1e6:.2f}MB "
+            f"({result['compression_x']:.1f}x) bit_exact={bit_exact} "
+            f"plan={plan_ok} (save {t_save:.2f}s load {t_load:.2f}s)",
+            flush=True,
+        )
+    return result
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -251,8 +312,32 @@ def main(argv=None) -> int:
                     help="pre-B1 flat-token MoE chunking")
     ap.add_argument("--baseline-kv-shard", action="store_true",
                     help="pre-C4 head-dim cache sharding")
+    ap.add_argument("--artifact-roundtrip", action="store_true",
+                    help="run the packed-artifact save/load/parity cell "
+                         "instead of lowering (uses --arch, --w-bits, "
+                         "--group-size; --all covers every arch)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
+
+    if args.artifact_roundtrip:
+        archs = configs.ARCH_IDS if args.all else [args.arch or "qwen3-8b"]
+        results = []
+        for arch in archs:
+            try:
+                results.append(
+                    run_artifact_roundtrip(arch, args.w_bits, args.group_size)
+                )
+            except Exception as e:
+                results.append({"arch": arch, "shape": "artifact_roundtrip",
+                                "status": "FAILED", "error": repr(e)[:500]})
+                print(f"[{arch} x artifact_roundtrip] FAILED: {repr(e)[:300]}",
+                      flush=True)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(results, f, indent=1)
+        bad = sum(1 for r in results if r["status"] != "ok")
+        print(f"artifact round-trip: {len(results) - bad} ok, {bad} failed")
+        return 1 if bad else 0
 
     cells = []
     if args.all:

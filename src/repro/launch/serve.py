@@ -1,12 +1,20 @@
 """Production serving launcher (PTQ integer pipeline + continuous batching).
 
-Params are quantized through the unified ``repro.quant`` API: the precision
-policy compiles into a serializable ``QuantPlan``, optional calibration
-batches profile static per-site activation exponents (paper's profiled DFP
-mode), and the engine serves from the plan-bound model view.
+Two boot modes:
+
+  * quantize-on-boot: build the model, quantize through the unified
+    ``repro.quant`` API (optional calibration batches profile static
+    per-site activation exponents), and optionally persist the result as a
+    packed artifact (``--save-artifact DIR``).
+  * cold start (``--artifact DIR``): load a previously saved artifact --
+    packed QTensors + compiled plan + serialized ArchConfig -- and serve
+    directly.  No fp32 weights are materialized and no calibration runs;
+    the 4-16x-smaller artifact is the unit of deployment.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
-      --bits 2 --group-size 16 --requests 8 [--calibrate 4] [--plan-json p.json]
+      --bits 2 --group-size 16 --requests 8 [--calibrate 4] \
+      [--save-artifact DIR] [--plan-json p.json]
+  PYTHONPATH=src python -m repro.launch.serve --artifact DIR --requests 8
 """
 from __future__ import annotations
 
@@ -18,26 +26,40 @@ import numpy as np
 
 from repro import configs
 from repro.configs.base import QuantConfig
-from repro.models import build_model, make_smoke_batch, quantize_and_plan
+from repro.models import (
+    build_model,
+    load_servable,
+    make_smoke_batch,
+    quantize_and_plan,
+    save_servable,
+)
 from repro.serving import Request, SamplerConfig, ServingEngine
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--bits", type=int, default=2, choices=[2, 4, 8])
-    ap.add_argument("--group-size", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--calibrate", type=int, default=0, metavar="N",
-                    help="profile N batches for static activation exponents")
-    ap.add_argument("--plan-json", default=None,
-                    help="write the compiled QuantPlan to this path")
-    args = ap.parse_args()
+def tree_mb(tree) -> float:
+    return sum(np.asarray(l).nbytes for l in jax.tree.leaves(tree)) / 1e6
 
+
+def boot_from_artifact(artifact_dir: str):
+    """Cold start: (api, qparams, plan) from a packed on-disk artifact."""
+    t0 = time.time()
+    api, qparams, art = load_servable(artifact_dir)
+    plan = art.plan
+    plan_str = (
+        f"plan: {len(plan.site_paths)} sites, "
+        f"{len(plan.act_exponents)} calibrated"
+        if plan is not None else "plan: none (unquantized artifact)"
+    )
+    print(
+        f"arch={api.cfg.name} cold-started from {art.path} in "
+        f"{time.time() - t0:.2f}s: {tree_mb(qparams):.1f} MB packed, "
+        f"{plan_str} (fp32 never materialized)"
+    )
+    return api, qparams, plan
+
+
+def boot_quantize(args):
+    """Quantize-on-boot: init fp params, PTQ (optionally calibrated)."""
     qc = QuantConfig(w_bits=args.bits, group_size=args.group_size,
                      mode="ptq", backend="xla")
     cfg = (configs.get_smoke if args.smoke else configs.get_config)(args.arch, qc)
@@ -50,15 +72,49 @@ def main():
             for i in range(args.calibrate)
         ]
     qparams, plan, api = quantize_and_plan(api, params, calib_batches=calib)
-    fp_b = sum(np.asarray(l).nbytes for l in jax.tree.leaves(params))
-    q_b = sum(np.asarray(l).nbytes for l in jax.tree.leaves(qparams))
-    print(f"arch={cfg.name} weights {fp_b / 1e6:.1f} MB -> {q_b / 1e6:.1f} MB "
-          f"({fp_b / q_b:.1f}x)  plan: {len(plan.site_paths)} sites, "
+    fp_mb, q_mb = tree_mb(params), tree_mb(qparams)
+    print(f"arch={cfg.name} weights {fp_mb:.1f} MB -> {q_mb:.1f} MB "
+          f"({fp_mb / q_mb:.1f}x)  plan: {len(plan.site_paths)} sites, "
           f"{len(plan.act_exponents)} calibrated")
+    if args.save_artifact:
+        out = save_servable(args.save_artifact, api, qparams, plan)
+        print(f"saved packed artifact to {out} "
+              f"(serve it with --artifact {args.save_artifact})")
     if args.plan_json:
         with open(args.plan_json, "w") as f:
             f.write(plan.to_json())
         print(f"wrote QuantPlan to {args.plan_json}")
+    return api, qparams, plan
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=configs.ARCH_IDS)
+    ap.add_argument("--artifact", default=None, metavar="DIR",
+                    help="cold-start from a packed quantized artifact "
+                         "(replaces --arch/--calibrate: no fp32, no requant)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--bits", type=int, default=2, choices=[2, 4, 8])
+    ap.add_argument("--group-size", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--calibrate", type=int, default=0, metavar="N",
+                    help="profile N batches for static activation exponents")
+    ap.add_argument("--save-artifact", default=None, metavar="DIR",
+                    help="persist the quantized model as a packed artifact")
+    ap.add_argument("--plan-json", default=None,
+                    help="write the compiled QuantPlan to this path")
+    args = ap.parse_args()
+    if bool(args.artifact) == bool(args.arch):
+        ap.error("exactly one of --arch or --artifact is required")
+
+    if args.artifact:
+        api, qparams, plan = boot_from_artifact(args.artifact)
+    else:
+        api, qparams, plan = boot_quantize(args)
+    cfg = api.cfg
 
     eng = ServingEngine(api, qparams, n_slots=args.slots, max_len=args.max_len,
                         sampler=SamplerConfig(temperature=args.temperature))

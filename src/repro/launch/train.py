@@ -54,9 +54,23 @@ def main():
         ckpt_dir=args.ckpt_dir,
         ckpt_every=max(5, args.steps // 4),
     )
-    tr = Trainer(api.train_loss, params, tcfg)
+    # QAT: compile the policy once against the params; the plan-bound view
+    # resolves precision by table lookup, and the plan rides in every
+    # checkpoint so a restarted node resumes under the same precision table
+    api = api.compiled(params)
+    tr = Trainer(api.train_loss, params, tcfg, plan=api.ctx.plan)
     if args.resume and args.ckpt_dir:
-        print(f"resumed at step {tr.maybe_restore()}")
+        start = tr.maybe_restore()
+        restored = tr.plan
+        if restored is not None and (
+            api.ctx.plan is None or restored.to_json() != api.ctx.plan.to_json()
+        ):
+            # train under the checkpointed precision table, not the freshly
+            # re-compiled one (they differ when the policy/config changed or
+            # the checkpoint carries calibrated exponents)
+            api = api.with_plan(restored)
+            tr.rebind_loss(api.train_loss)
+        print(f"resumed at step {start}")
     hist = tr.train(lambda i: make_batch(cfg, dcfg, i), args.steps)
     for i in range(0, len(hist["loss"]), max(1, len(hist["loss"]) // 10)):
         print(f"step {hist['step'][i]:5d}  loss {hist['loss'][i]:.4f}")

@@ -4,8 +4,10 @@ from repro.models.model_zoo import (
     ModelApi,
     build_model,
     input_specs,
+    load_servable,
     make_ctx,
     make_smoke_batch,
     quantize_and_plan,
     quantize_model_params,
+    save_servable,
 )

@@ -19,7 +19,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.base import ArchConfig, ShapeConfig, config_from_dict, config_to_dict
 from repro.core.policy import PrecisionPolicy
 from repro.models import encdec, hybrid, ssm_lm, transformer, vlm
 from repro.quant import api as quant_api
@@ -235,3 +235,39 @@ def quantize_and_plan(
         act_bits=qc.act_bits,
     )
     return qparams, plan, api.with_plan(plan)
+
+
+# ---------------------------------------------------------------------------
+# Quantized artifacts: quantize once, cold-start serving many times.
+# ---------------------------------------------------------------------------
+def save_servable(artifact_dir: str, api: ModelApi, qparams, plan: QuantPlan) -> str:
+    """Persist (qparams, plan) as a self-contained serving artifact.
+
+    The serialized ArchConfig travels in the manifest, so ``load_servable``
+    needs nothing but the directory."""
+    return quant_api.save_artifact(
+        artifact_dir, qparams, plan,
+        extra={"arch_config": config_to_dict(api.cfg)},
+    )
+
+
+def load_servable(artifact_dir: str) -> Tuple[ModelApi, Any, "quant_api.Artifact"]:
+    """Cold-start a zoo model from a packed artifact: (api, qparams, artifact).
+
+    No fp32 weights are materialized and no calibration runs -- the QTensor
+    tree loads packed, the plan (calibrated activation exponents included)
+    comes from the manifest, and the model is rebuilt from the artifact's
+    own serialized ArchConfig and bound to the plan."""
+    art = quant_api.load_artifact(artifact_dir)
+    cfg_dict = art.extra.get("arch_config")
+    if cfg_dict is None:
+        raise ValueError(
+            f"artifact at {artifact_dir!r} carries no 'arch_config' metadata; "
+            "save it with repro.models.save_servable (or pass extra="
+            "{'arch_config': config_to_dict(cfg)} to save_artifact)"
+        )
+    cfg = config_from_dict(cfg_dict)
+    api = build_model(cfg)
+    if art.plan is not None:
+        api = api.with_plan(art.plan)
+    return api, art.params, art

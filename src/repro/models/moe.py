@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ste
+from repro.quant.api import observe_site
 from repro.quant.backends import qmatmul
 from repro.quant.qtensor import QTensor
 from repro.models import layers
@@ -70,6 +71,12 @@ def _quantize_expert_weights(experts, ctx: QuantCtx, path: str):
 def _expert_matmul(w, x, path: str, ctx: QuantCtx, prec=None, buf_axes=None) -> jax.Array:
     """x (E, C, d_in) @ w (E, d_in, d_out); weights already fake-quantized
     (QAT) or QTensor (PTQ)."""
+    if ctx.observer is not None:
+        # calibration pass: record the dispatched (E, C, d) buffer's range so
+        # expert MLP sites get profiled static DFP exponents like dense()
+        # sites do (one shared exponent per site across experts and chunks;
+        # the capacity buffer's zero padding never raises max_abs)
+        observe_site(ctx.observer, path, x)
     if isinstance(w, QTensor):
         # NOTE (Perf iteration B7, REFUTED then reverted): inlining the PTQ
         # matmul with per-intermediate sharding constraints was predicted to

@@ -9,6 +9,8 @@ integer path -- is exposed as one coherent API:
   * backend registry + ``qmatmul``         (repro.quant.backends)
   * ``QuantPlan`` / ``QuantCtx`` / compile (repro.quant.plan)
   * ``quantize_model`` calibration-aware PTQ (repro.quant.api)
+  * ``save_artifact`` / ``load_artifact`` packed on-disk artifacts
+    (quantize once, cold-start serving many times; repro.quant.api)
 
 Migration from the legacy surfaces (still re-exported for compatibility):
 
@@ -59,9 +61,12 @@ from repro.quant.plan import (
     iter_weight_sites,
 )
 from repro.quant.api import (
+    Artifact,
     Observer,
+    load_artifact,
     observe_site,
     quantize_model,
     quantize_params,
+    save_artifact,
 )
 from repro.core.policy import FULL_PRECISION, LayerPrecision, PrecisionPolicy

@@ -60,6 +60,18 @@ class ServingEngine:
 
         self._decode = jax.jit(api.decode)
 
+    @classmethod
+    def from_artifact(cls, artifact_dir: str, **kwargs) -> "ServingEngine":
+        """Cold-start an engine from a packed quantized artifact.
+
+        The decode graph serves straight from the loaded QTensor tree under
+        the artifact's compiled plan -- no fp32 weights, no calibration, no
+        re-quantization on boot."""
+        from repro.models import load_servable  # lazy: serving stays model-agnostic
+
+        api, qparams, _ = load_servable(artifact_dir)
+        return cls(api, qparams, **kwargs)
+
     # -- client API --------------------------------------------------------
     def submit(self, req: Request) -> None:
         if not req.prompt:

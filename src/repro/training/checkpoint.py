@@ -1,4 +1,4 @@
-"""Fault-tolerant checkpointing (no external deps).
+"""Fault-tolerant, codec-based checkpointing (no external deps).
 
 Design for 1000+ nodes:
   * step-atomic: write to ``step_<N>.tmp/`` then a single directory rename
@@ -11,22 +11,144 @@ Design for 1000+ nodes:
     elastic re-scale across restarts (128 -> 512 chips or back).
   * retention: keep the newest ``keep`` checkpoints.
 
+Codec layer (manifest v2): leaves that are not plain arrays serialize
+through a registered ``LeafCodec``.  The built-in ``qtensor`` codec makes
+packed quantized weights first-class on disk -- a QTensor leaf becomes its
+packed payload + scale table + scalar exponent (one sha256-checked .npy per
+payload) plus static metadata (bits/group_size/shape/format tag) in the
+manifest.  A checkpoint can also carry a compiled ``QuantPlan``: ``save``
+writes ``quant_plan.json`` next to the arrays and records its sha256 under
+the manifest's ``quant_plan`` section; ``_verify`` validates it like any
+payload, so a truncated plan can never restore as "unquantized".
+
+Because codec metadata is self-describing, a v2 checkpoint restores without
+a template (``restore_tree``) -- this is what lets a serving process
+cold-start from a packed artifact with no fp32 params and no model init
+(see ``repro.quant.api.save_artifact`` / ``load_artifact``).
+
 On a real multi-host cluster each host writes only its addressable shards;
 here (single host) we write the full array -- the manifest format already
 carries per-array shape/dtype so the multi-host writer is a drop-in.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
 import os
 import shutil
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quantizer import QTensor
 
+PLAN_FILE = "quant_plan.json"
+
+
+def step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:09d}")
+
+
+# ---------------------------------------------------------------------------
+# Leaf codecs: pluggable serialization for non-plain-array leaves.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LeafCodec:
+    """One registered leaf encoding.
+
+    ``matches(leaf)`` decides whether this codec owns a leaf; ``encode``
+    splits it into named array payloads (each stored as its own
+    sha256-checked file) plus JSON-safe static metadata; ``decode`` is the
+    exact inverse.
+    """
+
+    name: str
+    matches: Callable[[Any], bool]
+    encode: Callable[[Any], Tuple[Dict[str, np.ndarray], Dict[str, Any]]]
+    decode: Callable[[Dict[str, np.ndarray], Dict[str, Any]], Any]
+
+
+_CODECS: Dict[str, LeafCodec] = {}
+
+
+def register_codec(
+    name: str,
+    *,
+    matches: Callable[[Any], bool],
+    encode: Callable,
+    decode: Callable,
+    overwrite: bool = False,
+) -> LeafCodec:
+    if name in _CODECS and not overwrite:
+        raise ValueError(f"codec {name!r} already registered")
+    codec = LeafCodec(name, matches, encode, decode)
+    _CODECS[name] = codec
+    return codec
+
+
+def get_codec(name: str) -> LeafCodec:
+    try:
+        return _CODECS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown leaf codec {name!r}; registered: {sorted(_CODECS)}"
+        ) from None
+
+
+def _codec_for(leaf: Any) -> Optional[LeafCodec]:
+    for codec in _CODECS.values():
+        if codec.matches(leaf):
+            return codec
+    return None
+
+
+def _is_codec_leaf(leaf: Any) -> bool:
+    return _codec_for(leaf) is not None
+
+
+# Built-in: packed quantized weights.  (QTensor is the base-layer container
+# from repro.core.quantizer; no higher quant layers are imported here.)
+def _qt_encode(qt: QTensor) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    arrays = {
+        "packed": np.asarray(qt.packed),
+        "scale_m": np.asarray(qt.scale_m),
+        "scale_e": np.asarray(qt.scale_e),
+    }
+    meta = {
+        "bits": qt.bits,
+        "group_size": qt.group_size,
+        "shape": list(qt.shape),
+        "fmt": qt.fmt,
+    }
+    return arrays, meta
+
+
+def _qt_decode(arrays: Dict[str, np.ndarray], meta: Dict[str, Any]) -> QTensor:
+    return QTensor(
+        jnp.asarray(arrays["packed"]),
+        jnp.asarray(arrays["scale_m"]),
+        jnp.asarray(arrays["scale_e"]),
+        bits=int(meta["bits"]),
+        group_size=int(meta["group_size"]),
+        shape=tuple(meta["shape"]),
+        fmt=meta.get("fmt", ""),
+    )
+
+
+register_codec(
+    "qtensor",
+    matches=lambda leaf: isinstance(leaf, QTensor),
+    encode=_qt_encode,
+    decode=_qt_decode,
+)
+
+
+# ---------------------------------------------------------------------------
+# Tree <-> path-keyed flat view (codec nodes stay whole).
+# ---------------------------------------------------------------------------
 def _path_str(path) -> str:
     parts = []
     for e in path:
@@ -39,34 +161,88 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def _flat_with_paths(tree: Any) -> Dict[str, Any]:
-    out = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        out[_path_str(path)] = leaf
-    return out
+def _flat_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_codec_leaf)
+    return [(_path_str(path), leaf) for path, leaf in flat]
 
 
-def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
-    """Atomically persist ``tree`` at ``step``. Returns the final directory."""
+def _payload_name(name: str) -> str:
+    return hashlib.sha1(name.encode()).hexdigest()[:16] + ".npy"
+
+
+def _write_payload(d: str, name: str, arr: np.ndarray) -> Dict[str, Any]:
+    fname = _payload_name(name)
+    fpath = os.path.join(d, fname)
+    np.save(fpath, arr)
+    with open(fpath, "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()
+    return {
+        "file": fname,
+        "sha256": digest,
+        "shape": list(arr.shape),
+        "dtype": str(arr.dtype),
+    }
+
+
+def _plan_json(plan: Any) -> Optional[str]:
+    if plan is None:
+        return None
+    return plan if isinstance(plan, str) else plan.to_json()
+
+
+# ---------------------------------------------------------------------------
+# Save.
+# ---------------------------------------------------------------------------
+def save(
+    ckpt_dir: str,
+    step: int,
+    tree: Any,
+    extra: Optional[Dict] = None,
+    plan: Any = None,
+) -> str:
+    """Atomically persist ``tree`` at ``step``. Returns the final directory.
+
+    Plain array leaves go to the manifest's ``arrays`` section; leaves owned
+    by a registered codec (QTensors) go to ``nodes`` as payload files plus
+    static metadata.  ``plan`` (a ``repro.quant.QuantPlan`` or its JSON
+    string) is written to ``quant_plan.json`` and checksummed under the
+    manifest's ``quant_plan`` section.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
-    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    final = step_dir(ckpt_dir, step)
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    manifest: Dict[str, Any] = {"step": step, "arrays": {}, "extra": extra or {}}
-    for name, leaf in _flat_with_paths(tree).items():
-        arr = np.asarray(leaf)
-        fname = hashlib.sha1(name.encode()).hexdigest()[:16] + ".npy"
-        fpath = os.path.join(tmp, fname)
-        np.save(fpath, arr)
-        with open(fpath, "rb") as f:
-            digest = hashlib.sha256(f.read()).hexdigest()
-        manifest["arrays"][name] = {
-            "file": fname,
-            "sha256": digest,
-            "shape": list(arr.shape),
-            "dtype": str(arr.dtype),
+    manifest: Dict[str, Any] = {
+        "version": 2,
+        "step": step,
+        "arrays": {},
+        "nodes": {},
+        "quant_plan": None,
+        "extra": extra or {},
+    }
+    for name, leaf in _flat_with_paths(tree):
+        codec = _codec_for(leaf)
+        if codec is None:
+            manifest["arrays"][name] = _write_payload(tmp, name, np.asarray(leaf))
+        else:
+            payloads, meta = codec.encode(leaf)
+            manifest["nodes"][name] = {
+                "codec": codec.name,
+                "meta": meta,
+                "arrays": {
+                    field: _write_payload(tmp, f"{name}/{field}", arr)
+                    for field, arr in payloads.items()
+                },
+            }
+    blob = _plan_json(plan)
+    if blob is not None:
+        with open(os.path.join(tmp, PLAN_FILE), "w") as f:
+            f.write(blob)
+        manifest["quant_plan"] = {
+            "file": PLAN_FILE,
+            "sha256": hashlib.sha256(blob.encode()).hexdigest(),
         }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -76,17 +252,47 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None) -> s
     return final
 
 
+# ---------------------------------------------------------------------------
+# Verification (integrity gate for restore_latest's fallback).
+# ---------------------------------------------------------------------------
+def _check_payload(d: str, meta: Dict[str, Any]) -> bool:
+    fpath = os.path.join(d, meta["file"])
+    with open(fpath, "rb") as fh:
+        return hashlib.sha256(fh.read()).hexdigest() == meta["sha256"]
+
+
 def _verify(d: str) -> Optional[Dict]:
+    """Full-integrity check of one checkpoint directory -> manifest or None.
+
+    Everything the manifest references is validated: array payloads, codec
+    node payloads, and the ``quant_plan`` section (checksum AND parseable
+    structure -- a truncated plan JSON must fail verification, not restore
+    as an unquantized checkpoint)."""
     try:
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         for meta in manifest["arrays"].values():
-            fpath = os.path.join(d, meta["file"])
-            with open(fpath, "rb") as fh:
-                if hashlib.sha256(fh.read()).hexdigest() != meta["sha256"]:
+            if not _check_payload(d, meta):
+                return None
+        for node in manifest.get("nodes", {}).values():
+            if node["codec"] not in _CODECS:
+                return None
+            for meta in node["arrays"].values():
+                if not _check_payload(d, meta):
                     return None
+        qp = manifest.get("quant_plan")
+        if qp is not None:
+            with open(os.path.join(d, qp["file"])) as fh:
+                blob = fh.read()
+            if hashlib.sha256(blob.encode()).hexdigest() != qp["sha256"]:
+                return None
+            plan = json.loads(blob)
+            if not isinstance(plan, dict) or "sites" not in plan:
+                return None
         return manifest
-    except (OSError, ValueError, KeyError):
+    except (OSError, ValueError, KeyError, TypeError):
+        # TypeError: structurally corrupt manifest (e.g. a null array entry)
+        # must fall back like any other corruption, not crash restore_latest
         return None
 
 
@@ -103,21 +309,68 @@ def list_steps(ckpt_dir: str) -> List[int]:
     return sorted(steps)
 
 
+def latest_intact(ckpt_dir: str) -> Tuple[Optional[int], Optional[Dict]]:
+    """(step, verified manifest) of the newest intact checkpoint.
+
+    Returning the manifest lets callers thread it into ``restore`` /
+    ``restore_tree`` / ``load_plan`` so a large artifact is read-and-hashed
+    once per boot, not once per helper."""
+    for step in reversed(list_steps(ckpt_dir)):
+        manifest = _verify(step_dir(ckpt_dir, step))
+        if manifest is not None:
+            return step, manifest
+    return None, None
+
+
+def latest_intact_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step whose directory passes full verification."""
+    return latest_intact(ckpt_dir)[0]
+
+
+# ---------------------------------------------------------------------------
+# Restore.
+# ---------------------------------------------------------------------------
+def _load_payload(d: str, meta: Dict[str, Any]) -> np.ndarray:
+    return np.load(os.path.join(d, meta["file"]))
+
+
+def _decode_node(d: str, node: Dict[str, Any]) -> Any:
+    codec = get_codec(node["codec"])
+    arrays = {
+        field: _load_payload(d, meta) for field, meta in node["arrays"].items()
+    }
+    return codec.decode(arrays, node["meta"])
+
+
 def restore(
-    ckpt_dir: str, step: int, template: Any, shardings: Any = None
+    ckpt_dir: str, step: int, template: Any, shardings: Any = None,
+    manifest: Optional[Dict] = None,
 ) -> Any:
-    """Fill ``template`` (pytree of arrays or ShapeDtypeStructs) from disk.
-    ``shardings``: optional matching pytree of NamedSharding for elastic
-    placement onto a (possibly different) mesh."""
-    d = os.path.join(ckpt_dir, f"step_{step:09d}")
-    manifest = _verify(d)
+    """Fill ``template`` (pytree of arrays / ShapeDtypeStructs / QTensors)
+    from disk.  ``shardings``: optional matching pytree of NamedSharding for
+    elastic placement onto a (possibly different) mesh.  ``manifest``: an
+    already-verified manifest (skips re-hashing every payload)."""
+    d = step_dir(ckpt_dir, step)
+    if manifest is None:
+        manifest = _verify(d)
     if manifest is None:
         raise IOError(f"checkpoint {d} missing or corrupt")
-    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
-    flat_s = jax.tree.leaves(shardings) if shardings is not None else [None] * len(flat_t)
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=_is_codec_leaf
+    )
+    flat_s = (
+        jax.tree_util.tree_flatten(shardings, is_leaf=_is_codec_leaf)[0]
+        if shardings is not None
+        else [None] * len(flat_t)
+    )
+    nodes = manifest.get("nodes", {})
     leaves = []
     for (path, leaf), shard in zip(flat_t, flat_s):
         name = _path_str(path)
+        if name in nodes:
+            val = _decode_node(d, nodes[name])
+            leaves.append(jax.device_put(val, shard) if shard is not None else val)
+            continue
         meta = manifest["arrays"].get(name)
         if meta is None:
             raise KeyError(f"checkpoint missing array {name!r}")
@@ -127,22 +380,84 @@ def restore(
         if shard is not None:
             leaves.append(jax.device_put(arr, shard))
         else:
-            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
-    return jax.tree_util.tree_unflatten(jax.tree.structure(template), leaves)
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_tree(d: str, manifest: Optional[Dict] = None) -> Any:
+    """Template-free restore of one verified checkpoint directory.
+
+    Rebuilds the nested-dict pytree purely from manifest paths: plain
+    arrays load with their stored dtype, codec nodes decode through the
+    registry (QTensors come back packed -- the fp32 weights are never
+    materialized).  This is the cold-start path for serving from a packed
+    artifact.  ``manifest``: an already-verified manifest (skips
+    re-hashing)."""
+    if manifest is None:
+        manifest = _verify(d)
+    if manifest is None:
+        raise IOError(f"checkpoint {d} missing or corrupt")
+    out: Dict[str, Any] = {}
+
+    def insert(name: str, val: Any) -> None:
+        node = out
+        parts = name.split("/")
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = val
+
+    for name, meta in manifest["arrays"].items():
+        insert(name, jnp.asarray(_load_payload(d, meta)))
+    for name, node in manifest.get("nodes", {}).items():
+        insert(name, _decode_node(d, node))
+    return out
+
+
+def load_plan(d: str, manifest: Optional[Dict] = None):
+    """The checkpoint's compiled ``QuantPlan`` (or None if it carries none).
+
+    ``manifest``: an already-verified manifest (skips re-hashing)."""
+    if manifest is None:
+        manifest = _verify(d)
+    if manifest is None:
+        raise IOError(f"checkpoint {d} missing or corrupt")
+    qp = manifest.get("quant_plan")
+    if qp is None:
+        return None
+    from repro.quant.plan import QuantPlan  # lazy: keep the base layer light
+
+    with open(os.path.join(d, qp["file"])) as f:
+        return QuantPlan.from_json(f.read())
+
+
+def load_manifest(d: str) -> Dict[str, Any]:
+    """Verified manifest of one checkpoint directory (raises if corrupt)."""
+    manifest = _verify(d)
+    if manifest is None:
+        raise IOError(f"checkpoint {d} missing or corrupt")
+    return manifest
 
 
 def restore_latest(
     ckpt_dir: str, template: Any, shardings: Any = None
 ) -> Tuple[Optional[int], Any]:
     """Newest intact checkpoint (corruption falls back to older ones)."""
-    for step in reversed(list_steps(ckpt_dir)):
-        d = os.path.join(ckpt_dir, f"step_{step:09d}")
-        if _verify(d) is not None:
-            return step, restore(ckpt_dir, step, template, shardings)
-    return None, None
+    step, manifest = latest_intact(ckpt_dir)
+    if step is None:
+        return None, None
+    return step, restore(ckpt_dir, step, template, shardings, manifest=manifest)
+
+
+def dir_bytes(path: str) -> int:
+    """Total on-disk size of a checkpoint/artifact directory."""
+    return sum(
+        os.path.getsize(os.path.join(root, f))
+        for root, _, files in os.walk(path)
+        for f in files
+    )
 
 
 def retain(ckpt_dir: str, keep: int = 3) -> None:
     steps = list_steps(ckpt_dir)
     for step in steps[:-keep]:
-        shutil.rmtree(os.path.join(ckpt_dir, f"step_{step:09d}"), ignore_errors=True)
+        shutil.rmtree(step_dir(ckpt_dir, step), ignore_errors=True)

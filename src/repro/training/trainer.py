@@ -93,9 +93,11 @@ class Trainer:
         mesh=None,
         param_shardings=None,
         batch_shardings_fn: Optional[Callable] = None,
+        plan=None,  # compiled repro.quant.QuantPlan (QAT runs under one)
     ):
         self.tcfg = tcfg
         self.mesh = mesh
+        self.plan = plan
         # own the param buffers: the jitted step donates its inputs, so a
         # caller-shared pytree must not be destroyed under the caller
         self.params = jax.tree.map(jnp.array, params)
@@ -112,14 +114,37 @@ class Trainer:
         self._batch_shardings_fn = batch_shardings_fn
 
     def maybe_restore(self) -> int:
+        """Resume from the newest intact checkpoint, plan included.
+
+        A QAT run's compiled ``QuantPlan`` (with calibrated activation
+        exponents) rides in the checkpoint manifest; it is surfaced on
+        ``self.plan`` so later checkpoints keep carrying it AND so the
+        caller can rebind its loss to the checkpointed precision table
+        (``rebind_loss`` -- the loss closure given to ``__init__`` was
+        built against a freshly compiled plan, which may differ)."""
         if not self.tcfg.ckpt_dir:
             return 0
         template = {"params": self.params, "opt": self.opt_state}
-        step, tree = ckpt_lib.restore_latest(self.tcfg.ckpt_dir, template)
+        step, manifest = ckpt_lib.latest_intact(self.tcfg.ckpt_dir)
         if step is not None:
+            tree = ckpt_lib.restore(
+                self.tcfg.ckpt_dir, step, template, manifest=manifest
+            )
             self.params, self.opt_state = tree["params"], tree["opt"]
             self.step_count = step
+            restored_plan = ckpt_lib.load_plan(
+                ckpt_lib.step_dir(self.tcfg.ckpt_dir, step), manifest=manifest
+            )
+            if restored_plan is not None:
+                self.plan = restored_plan
         return self.step_count
+
+    def rebind_loss(self, loss_fn: Callable) -> None:
+        """Rebuild the jitted step around a new loss closure (e.g. one bound
+        to the plan ``maybe_restore`` recovered from the checkpoint)."""
+        self._step = jax.jit(
+            make_train_step(loss_fn, self.tcfg), donate_argnums=(0, 1)
+        )
 
     def train(
         self, batch_fn: Callable[[int], Any], num_steps: int
@@ -144,6 +169,7 @@ class Trainer:
                     self.tcfg.ckpt_dir,
                     i + 1,
                     {"params": self.params, "opt": self.opt_state},
+                    plan=self.plan,
                 )
                 ckpt_lib.retain(self.tcfg.ckpt_dir, self.tcfg.keep)
         self.step_count += num_steps
