@@ -1,0 +1,188 @@
+"""Serving throughput for the fused quantized decode pipeline (BENCH traj).
+
+Cells: {ternary, int4, int8} x {fused, unfused, xla}, measuring
+
+  * decode tokens/sec  -- one device-resident decode tick (donated cache,
+    argmax in-graph) over an ``n_slots`` batch,
+  * prefill tokens/sec -- one forward over a (B, S) prompt batch,
+  * HBM-visible passes per dense site -- jaxpr equations materializing a
+    full-size tensor for one ``qdense`` projection.  The fused path is ONE
+    pallas_call; the unfused path stages int8 mantissas, the raw matmul
+    output and the scaled/bias output through HBM separately.  (XLA may
+    later fuse elementwise stages, but the kernel-boundary buffers are
+    structural -- this is the count of *guaranteed* materializations.)
+  * ragged-batch recompiles after warmup (power-of-two bucketing: 0).
+
+Wall-clock on the CPU container is regression tracking, not the perf claim
+(pallas cells run in interpret mode off-TPU; the op-count and recompile
+columns are platform-independent).  ``--json out.json`` dumps the table for
+the BENCH trajectory; run.py prints the CSV rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import tiny_lm
+from repro.configs.base import QuantConfig
+from repro.models import build_model, quantize_and_plan
+from repro.quant import qdense, quantize_weights
+
+FORMATS = {"ternary": 2, "int4": 4, "int8": 8}
+MODES = ("fused", "unfused", "xla")
+
+
+def _with_fused(plan, fused: bool):
+    """Copy of ``plan`` with every site's fused knob forced to ``fused``."""
+    return dataclasses.replace(
+        plan,
+        site_precisions=tuple(
+            dataclasses.replace(p, fused=fused) for p in plan.site_precisions
+        ),
+    )
+
+
+def _mode_api(api, plan, mode: str):
+    if mode == "xla":
+        return api.with_plan(dataclasses.replace(plan, backend="xla"))
+    plan = _with_fused(plan, mode == "fused")
+    return api.with_plan(dataclasses.replace(plan, backend="pallas"))
+
+
+def _timed_steps(fn, reps: int) -> float:
+    fn()  # compile / warm
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def count_hbm_passes(fn, *args, min_elems: int) -> int:
+    """Jaxpr equations whose output materializes >= ``min_elems`` elements.
+
+    Reshapes are excluded (metadata-only).  For a fused qdense site this is
+    exactly the pallas_call; each extra equation in the unfused pipeline is
+    a tensor XLA must hold between kernel boundaries.
+    """
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    n = 0
+    for eqn in jaxpr.jaxpr.eqns:
+        if eqn.primitive.name in ("reshape", "broadcast_in_dim"):
+            continue
+        if any(int(np.prod(v.aval.shape or (1,))) >= min_elems for v in eqn.outvars):
+            n += 1
+    return n
+
+
+def _bench_site(bits: int) -> Dict[str, int]:
+    m, k, n, g = 8, 256, 256, 64
+    x = jnp.ones((m, k), jnp.float32)
+    qt = quantize_weights(jnp.ones((k, n), jnp.float32), bits, g)
+    min_elems = m * min(k, n)
+    return {
+        "fused": count_hbm_passes(
+            lambda a: qdense(a, qt, backend="pallas"), x, min_elems=min_elems
+        ),
+        "unfused": count_hbm_passes(
+            lambda a: qdense(a, qt, backend="pallas", fused=False),
+            x, min_elems=min_elems,
+        ),
+    }
+
+
+def _bench_model(bits: int, mode: str, slots: int, seq: int, reps: int):
+    cfg = tiny_lm(QuantConfig(w_bits=bits, group_size=16, mode="ptq"))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    qparams, plan, qapi = quantize_and_plan(api, params)
+    mapi = _mode_api(qapi, plan, mode)
+
+    cache = mapi.init_cache(slots, 32)
+    step = jax.jit(
+        lambda p, t, pos, c: (
+            lambda lg, nc: (jnp.argmax(lg[:, -1, :], -1).astype(jnp.int32), nc)
+        )(*mapi.decode(p, t, pos, c)),
+        donate_argnums=(3,),
+    )
+    tok = jnp.zeros((slots, 1), jnp.int32)
+    state = {"c": cache, "i": 0}
+
+    def tick():
+        toks, state["c"] = step(
+            qparams, tok, jnp.full((slots,), state["i"] % 24, jnp.int32), state["c"]
+        )
+        state["i"] += 1
+        return toks
+
+    decode_s = _timed_steps(tick, reps)
+
+    fwd = jax.jit(lambda p, t: mapi.forward(p, {"tokens": t}))
+    prompts = jnp.zeros((slots, seq), jnp.int32)
+    prefill_s = _timed_steps(lambda: fwd(qparams, prompts), max(1, reps // 2))
+
+    return {
+        "decode_tok_per_s": slots / decode_s,
+        "decode_step_us": decode_s * 1e6,
+        "prefill_tok_per_s": slots * seq / prefill_s,
+    }
+
+
+def _ragged_recompiles() -> int:
+    """Fused-path recompiles across ragged batch sizes after bucket warmup."""
+    from repro.kernels.ternary_matmul import ternary_matmul_fused
+
+    qt = quantize_weights(jnp.ones((64, 32), jnp.float32), 2, 16)
+    qdense(jnp.ones((8, 64)), qt, backend="pallas")  # warm the M=8 bucket
+    base = ternary_matmul_fused._cache_size()
+    for m in (1, 2, 3, 5, 7, 8, 6, 4):
+        qdense(jnp.ones((m, 64)), qt, backend="pallas")
+    return ternary_matmul_fused._cache_size() - base
+
+
+def run(csv=print, *, slots: int = 4, seq: int = 16, reps: int = 3,
+        json_path: str = None) -> List[Dict]:
+    rows: List[Dict] = []
+    for fmt, bits in FORMATS.items():
+        passes = _bench_site(bits)
+        csv(
+            f"decode/hbm_passes_{fmt},{passes['fused']:.0f},"
+            f"unfused={passes['unfused']};fused_is_single_kernel="
+            f"{str(passes['fused'] == 1).lower()}"
+        )
+        for mode in MODES:
+            r = _bench_model(bits, mode, slots, seq, reps)
+            rows.append({"format": fmt, "mode": mode, **r, **{
+                "hbm_passes_per_site": passes.get(mode, passes["unfused"]),
+            }})
+            csv(
+                f"decode/{fmt}_{mode},{r['decode_step_us']:.1f},"
+                f"decode_tok_s={r['decode_tok_per_s']:.1f};"
+                f"prefill_tok_s={r['prefill_tok_per_s']:.1f}"
+            )
+    rc = _ragged_recompiles()
+    csv(f"decode/ragged_recompiles_after_warmup,{rc:.0f},want=0")
+    rows.append({"ragged_recompiles_after_warmup": rc})
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, help="dump the table as JSON")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--reps", type=int, default=3)
+    a = ap.parse_args()
+    run(slots=a.slots, seq=a.seq, reps=a.reps, json_path=a.json)

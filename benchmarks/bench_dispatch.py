@@ -78,7 +78,7 @@ def run(csv=print):
 
     def qmm_ladder():
         xm = x.reshape(-1, x.shape[-1])
-        xq, xe = backends._quantize_acts(xm, 8, None)
+        xq, xe = backends.quantize_activations(xm, 8)
         out = _legacy_ladder("xla_int8")(xq, xe, qt)
         jax.block_until_ready(out)
 

@@ -11,6 +11,10 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
                            legacy string ladder; plan table vs regex resolve)
   * bench_checkpoint    -> packed artifact vs fp32 checkpoint: on-disk size
                            and save/restore wall time (artifact lifecycle)
+  * bench_decode        -> fused decode pipeline: tokens/sec per format x
+                           {fused,unfused,xla}, HBM passes per dense site,
+                           ragged-batch recompile count (BENCH trajectory;
+                           standalone --json for the full table)
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ def main() -> None:
     from benchmarks import (
         bench_checkpoint,
         bench_cluster_hier,
+        bench_decode,
         bench_dispatch,
         bench_finetune,
         bench_kernels,
@@ -34,6 +39,7 @@ def main() -> None:
         bench_op_ratio,
         bench_dispatch,
         bench_checkpoint,
+        bench_decode,
         bench_cluster_hier,
         bench_kernels,
         bench_quant_error,

@@ -24,6 +24,20 @@ def qmax(bits: int) -> int:
     return 2 ** (bits - 1) - 1
 
 
+def exp2i(e) -> jax.Array:
+    """Exact ``2.0**e`` for integer-valued exponents, by bit construction.
+
+    ``jnp.exp2`` lowers to a polynomial approximation on some backends
+    (XLA:CPU's vectorizer is 1 ulp off even at integer arguments) -- fatal
+    for DFP, where every scale is *by definition* an exact power of two.
+    Builds the f32 directly from the exponent field instead.  Accepts int or
+    integer-valued float arrays; exponents clamp to the normal-f32 range
+    [-126, 127] (DFP exponents in this codebase stay well inside it).
+    """
+    ei = jnp.clip(jnp.asarray(e).astype(jnp.int32), -126, 127)
+    return jax.lax.bitcast_convert_type((ei + 127) << 23, jnp.float32)
+
+
 def choose_exponent(max_abs: jax.Array, bits: int) -> jax.Array:
     """Smallest power-of-two exponent e with max_abs <= qmax(bits) * 2**e.
 
@@ -38,13 +52,13 @@ def choose_exponent(max_abs: jax.Array, bits: int) -> jax.Array:
 
 def quantize(x: jax.Array, e: jax.Array, bits: int) -> jax.Array:
     """Round-to-nearest-even mantissas for exponent ``e`` (broadcasts)."""
-    scale = jnp.exp2(-e.astype(jnp.float32))
+    scale = exp2i(-jnp.asarray(e).astype(jnp.int32))
     q = jnp.clip(jnp.round(x * scale), -qmax(bits), qmax(bits))
     return q.astype(jnp.int8 if bits <= 8 else jnp.int32)
 
 
 def dequantize(q: jax.Array, e: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * jnp.exp2(e.astype(jnp.float32))
+    return q.astype(jnp.float32) * exp2i(e)
 
 
 def quantize_tensor(x: jax.Array, bits: int, axis: Optional[tuple] = None):

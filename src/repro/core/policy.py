@@ -38,6 +38,10 @@ class LayerPrecision:
     # registered weight-format name (repro.quant.register_format); None uses
     # the default format for w_bits
     fmt: Optional[str] = None
+    # run this site through the prologue/epilogue-fused kernel when the
+    # backend has one (False pins the site to the unfused three-pass
+    # pipeline -- the escape hatch for debugging / A-B parity runs)
+    fused: bool = True
 
     @property
     def quantized(self) -> bool:

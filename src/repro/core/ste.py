@@ -63,6 +63,6 @@ def act_ste(x: jax.Array, bits: int = 8, per_row: bool = False) -> jax.Array:
         return x
     max_abs = jnp.max(jnp.abs(jax.lax.stop_gradient(x)))
     e = dfp.choose_exponent(max_abs, bits)
-    r = dfp.qmax(bits) * jnp.exp2(e.astype(jnp.float32))
+    r = dfp.qmax(bits) * dfp.exp2i(e)
     xc = jnp.clip(x, -r, r)
     return ste(xc, calibration.fake_quantize_act(xc, bits, per_row))

@@ -5,8 +5,8 @@ Each kernel ships with a jit'd dispatcher (ops.py) and a pure-jnp oracle
 tolerance (flash attention) in interpret mode on CPU.
 """
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
-from repro.kernels.int4_matmul import int4_matmul
-from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.int4_matmul import int4_matmul, int4_matmul_fused
+from repro.kernels.int8_matmul import int8_matmul, int8_matmul_fused
 from repro.kernels.ops import qmatmul, quantize_activations
 from repro.kernels.quantize import quantize_rows
-from repro.kernels.ternary_matmul import ternary_matmul
+from repro.kernels.ternary_matmul import ternary_matmul, ternary_matmul_fused

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels._common import INT4_PER_WORD, decode4_tile
+from repro.kernels._common import INT4_PER_WORD, decode4_tile, fused_qmm_call
 
 try:
     from jax.experimental.pallas import tpu as pltpu
@@ -77,3 +77,37 @@ def int4_matmul(
         compiler_params=None if interpret else _COMPILER_PARAMS,
         interpret=interpret,
     )(x_q, packed, scale_m)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "group", "act", "act_bits", "act_exponent",
+        "block_m", "block_n", "block_k", "interpret",
+    ),
+)
+def int4_matmul_fused(
+    x: jax.Array,  # f32/bf16 (M, K) RAW activations (quantized in-kernel)
+    packed: jax.Array,  # uint32 (K/8, N)
+    scale_m: jax.Array,  # int8 (K/group, N)
+    scale_e: jax.Array,  # int32 scalar
+    *,
+    group: int,
+    bias: jax.Array = None,
+    act: str = None,
+    act_bits: int = 8,
+    act_exponent: int = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Whole dense site in one pallas_call: quantize prologue + int4 matmul
+    + exp2/bias/activation epilogue (exponents applied in-kernel)."""
+    return fused_qmm_call(
+        x, packed, scale_m, scale_e,
+        decode=decode4_tile, words_per_k=INT4_PER_WORD, n=packed.shape[1],
+        group=group, bias=bias, act=act, act_bits=act_bits,
+        act_exponent=act_exponent, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interpret,
+    )

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._common import fused_qmm_call
+
 try:
     from jax.experimental.pallas import tpu as pltpu
 
@@ -75,3 +77,41 @@ def int8_matmul(
         compiler_params=None if interpret else _COMPILER_PARAMS,
         interpret=interpret,
     )(x_q, w_q, scale_m)
+
+
+def _decode_raw(words: jnp.ndarray, bk: int) -> jnp.ndarray:
+    return words  # raw int8 storage: the tile IS the mantissas
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "group", "act", "act_bits", "act_exponent",
+        "block_m", "block_n", "block_k", "interpret",
+    ),
+)
+def int8_matmul_fused(
+    x: jax.Array,  # f32/bf16 (M, K) RAW activations (quantized in-kernel)
+    w_q: jax.Array,  # int8 (K, N)
+    scale_m: jax.Array,  # int8 (K/group, N)
+    scale_e: jax.Array,  # int32 scalar
+    *,
+    group: int,
+    bias: jax.Array = None,
+    act: str = None,
+    act_bits: int = 8,
+    act_exponent: int = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Whole dense site in one pallas_call: quantize prologue + int8 matmul
+    + exp2/bias/activation epilogue (exponents applied in-kernel)."""
+    return fused_qmm_call(
+        x, w_q, scale_m, scale_e,
+        decode=_decode_raw, words_per_k=1, n=w_q.shape[1],
+        group=group, bias=bias, act=act, act_bits=act_bits,
+        act_exponent=act_exponent, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interpret,
+    )

@@ -11,6 +11,9 @@ Migration note (old -> new):
 
     from repro.kernels.ops import qmatmul, quantize_activations
         -> from repro.quant import qmatmul, quantize_activations
+
+Whole-site calls (prologue + matmul + epilogue fused on pallas) should use
+``repro.quant.qdense`` directly.
 """
 from __future__ import annotations
 

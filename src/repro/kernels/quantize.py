@@ -4,6 +4,12 @@ One VMEM pass per row block: max|x| -> shared exponent -> round-to-nearest
 int8 mantissas.  Fusing the three steps avoids two extra HBM round-trips of
 the f32 activation tensor (the dominant cost of dynamic quantization on a
 bandwidth-bound chip).
+
+This is the standalone prologue used by the *unfused* qmatmul pipeline
+(``quantize_activations`` selects it on TPU); the fused ``qdense`` path goes
+further and runs the same quantization inside the matmul kernel itself
+(``kernels/_common.fused_qmm_call``) so the int8 mantissas never touch HBM
+at all.
 """
 from __future__ import annotations
 
@@ -13,7 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.dfp import qmax
+from repro.core.dfp import exp2i, qmax
+from repro.kernels._common import m_bucket, pick_block
 
 try:
     from jax.experimental.pallas import tpu as pltpu
@@ -29,7 +36,7 @@ def _kernel(x_ref, q_ref, e_ref, *, bits: int):
     safe = jnp.maximum(max_abs, jnp.finfo(jnp.float32).tiny)
     e = jnp.ceil(jnp.log2(safe / qmax(bits)))
     e = jnp.where(max_abs > 0, e, jnp.zeros_like(e))
-    q = jnp.clip(jnp.round(x * jnp.exp2(-e)), -qmax(bits), qmax(bits))
+    q = jnp.clip(jnp.round(x * exp2i(-e)), -qmax(bits), qmax(bits))
     q_ref[...] = q.astype(jnp.int8)
     e_ref[...] = e.astype(jnp.int32)
 
@@ -44,21 +51,27 @@ def quantize_rows(
 ):
     """Returns (int8 mantissas (M, D), int32 exponents (M, 1))."""
     m, d = x.shape
-    bm = min(block_m, m)
-    assert m % bm == 0, (m, bm)
+    # ragged serving batches: pad rows to a power-of-two bucket (same policy
+    # as the matmul backends -- aligned blocks, one trace per bucket) rather
+    # than shrinking the block to an arbitrary divisor of M
+    mp = m_bucket(m)
+    if mp != m:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))  # zero rows -> q=0, e=0
+    bm = pick_block(mp, block_m)
     kern = functools.partial(_kernel, bits=bits)
-    return pl.pallas_call(
+    q, e = pl.pallas_call(
         kern,
-        grid=(m // bm,),
+        grid=(mp // bm,),
         in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0))],
         out_specs=[
             pl.BlockSpec((bm, d), lambda i: (i, 0)),
             pl.BlockSpec((bm, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((m, d), jnp.int8),
-            jax.ShapeDtypeStruct((m, 1), jnp.int32),
+            jax.ShapeDtypeStruct((mp, d), jnp.int8),
+            jax.ShapeDtypeStruct((mp, 1), jnp.int32),
         ],
         compiler_params=None if interpret else _COMPILER_PARAMS,
         interpret=interpret,
     )(x)
+    return (q[:m], e[:m]) if mp != m else (q, e)

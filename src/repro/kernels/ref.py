@@ -34,8 +34,9 @@ def qmatmul_ref(x_q: jax.Array, x_e: jax.Array, qt: QTensor) -> jax.Array:
     # one multiply per cluster: scale mantissa applied to the int32 partial
     scaled = part.astype(jnp.float32) * qt.scale_m.astype(jnp.float32)[:, None, :]
     out = scaled.sum(axis=0)
-    exp = qt.scale_e.astype(jnp.float32) + jnp.asarray(x_e, jnp.float32)
-    return out * jnp.exp2(jnp.broadcast_to(exp, (m, 1)) if exp.ndim else exp)
+    exp = qt.scale_e + jnp.asarray(x_e, jnp.int32)
+    scale = dfp.exp2i(exp)  # exact power of two (the DFP contract)
+    return out * (jnp.broadcast_to(scale, (m, 1)) if scale.ndim else scale)
 
 
 def qmatmul_dequant_ref(x: jax.Array, qt: QTensor) -> jax.Array:

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels._common import TERNARY_PER_WORD, decode2_tile
+from repro.kernels._common import TERNARY_PER_WORD, decode2_tile, fused_qmm_call
 
 try:  # TPU-specific scheduling hints; absent on CPU-only installs is fine
     from jax.experimental.pallas import tpu as pltpu
@@ -88,3 +88,37 @@ def ternary_matmul(
         compiler_params=None if interpret else _COMPILER_PARAMS,
         interpret=interpret,
     )(x_q, packed, scale_m)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "group", "act", "act_bits", "act_exponent",
+        "block_m", "block_n", "block_k", "interpret",
+    ),
+)
+def ternary_matmul_fused(
+    x: jax.Array,  # f32/bf16 (M, K) RAW activations (quantized in-kernel)
+    packed: jax.Array,  # uint32 (K/16, N)
+    scale_m: jax.Array,  # int8 (K/group, N)
+    scale_e: jax.Array,  # int32 scalar
+    *,
+    group: int,
+    bias: jax.Array = None,  # (N,) fused into the epilogue
+    act: str = None,
+    act_bits: int = 8,
+    act_exponent: int = None,  # static DFP exponent; None -> per-row dynamic
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Whole dense site in one pallas_call: quantize prologue + ternary
+    matmul + exp2/bias/activation epilogue (exponents applied in-kernel)."""
+    return fused_qmm_call(
+        x, packed, scale_m, scale_e,
+        decode=decode2_tile, words_per_k=TERNARY_PER_WORD, n=packed.shape[1],
+        group=group, bias=bias, act=act, act_bits=act_bits,
+        act_exponent=act_exponent, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interpret,
+    )

@@ -80,12 +80,12 @@ def _attend_dense(q, k, v, bias, ke=None, ve=None):
     scale = q.shape[-1] ** -0.5
     s = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32), k.astype(jnp.float32))
     if ke is not None:  # fold per-(token, head) key scales into the scores
-        kscale = jnp.exp2(ke[..., 0].astype(jnp.float32))  # (B,T,Kh)
+        kscale = dfp.exp2i(ke[..., 0])  # (B,T,Kh), exact power of two
         s = s * kscale.transpose(0, 2, 1)[:, :, None, None, :]
     s = s * scale + bias
     p = jax.nn.softmax(s, axis=-1)
     if ve is not None:  # fold value scales into the probabilities
-        vscale = jnp.exp2(ve[..., 0].astype(jnp.float32))
+        vscale = dfp.exp2i(ve[..., 0])
         p = p * vscale.transpose(0, 2, 1)[:, :, None, None, :]
     out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
     return out

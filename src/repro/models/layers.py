@@ -4,21 +4,24 @@ Every projection goes through ``dense()`` which consults the quantization
 context (``repro.quant.QuantCtx``, a thin view over a compiled ``QuantPlan``
 or a raw ``PrecisionPolicy``): full precision, QAT fake-quant (STE, Sec. 4
 of the paper), or PTQ with real QTensor weights through the registry-driven
-qmatmul.  With a compiled plan, per-site precision is a dict lookup (no
-per-call regex), PTQ activations use the plan's calibrated static exponents
-where profiled, and a ctx carrying an ``observer`` records activation
-ranges for calibration.
+``qdense`` -- one whole-site call that carries the bias and an optional
+activation into the kernel epilogue, so on fused backends (pallas) a
+projection is a single pallas_call with no intermediate HBM round-trips.
+With a compiled plan, per-site precision is a dict lookup (no per-call
+regex), PTQ activations use the plan's calibrated static exponents where
+profiled (per-site ``fused``/``static_act`` knobs), and a ctx carrying an
+``observer`` records activation ranges for calibration.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import ste
 from repro.quant.api import observe_site
-from repro.quant.backends import qmatmul
+from repro.quant.backends import apply_act, qdense
 from repro.quant.plan import QuantCtx  # noqa: F401  (canonical re-export)
 from repro.quant.qtensor import QTensor
 
@@ -33,20 +36,30 @@ def _init_dense(key, d_in: int, d_out: int, bias: bool, dtype) -> Params:
     return p
 
 
-def dense(p: Params, x: jax.Array, path: str, ctx: QuantCtx) -> jax.Array:
-    """Quantization-aware projection x @ W (+ b)."""
+def dense(
+    p: Params, x: jax.Array, path: str, ctx: QuantCtx,
+    act: Optional[str] = None,
+) -> jax.Array:
+    """Quantization-aware projection x @ W (+ b) (+ activation ``act``).
+
+    ``act`` ("silu"/"gelu"/"relu") rides into the PTQ kernel epilogue on
+    fused backends; on the fp/QAT paths it is applied after the bias, so all
+    modes compute the same function.
+    """
     w = p["w"]
     if ctx.observer is not None:  # calibration pass: record this site's range
         observe_site(ctx.observer, path, x)
-    if isinstance(w, QTensor):  # PTQ path: full integer pipeline
+    if isinstance(w, QTensor):  # PTQ path: full integer pipeline, one call
         prec = ctx.resolve(path)
-        act_bits = prec.act_bits if prec else 8
-        y = qmatmul(
-            x, w, backend=ctx.backend, act_bits=act_bits,
+        y = qdense(
+            x, w,
+            bias=p.get("b"), act=act, backend=ctx.backend,
+            act_bits=prec.act_bits if prec else 8,
             act_exponent=ctx.act_exponent(path),
+            fused=prec.fused if prec else True,
         )
-        y = y.astype(x.dtype)
-    elif ctx.mode == "qat" and (ctx.plan is not None or ctx.policy is not None):
+        return y.astype(x.dtype)
+    if ctx.mode == "qat" and (ctx.plan is not None or ctx.policy is not None):
         prec = ctx.resolve(path)
         if prec is not None and prec.quantized:
             wq = ste.weights_ste(
@@ -64,7 +77,7 @@ def dense(p: Params, x: jax.Array, path: str, ctx: QuantCtx) -> jax.Array:
         y = x @ w
     if "b" in p:
         y = y + p["b"]
-    return y
+    return apply_act(y, act)
 
 
 # ---------------------------------------------------------------------------
@@ -149,7 +162,8 @@ def init_mlp(key, d_model: int, d_ff: int, dtype) -> Params:
 
 
 def mlp(p: Params, x: jax.Array, path: str, ctx: QuantCtx) -> jax.Array:
-    h = jax.nn.silu(dense(p["gate"], x, f"{path}/gate", ctx))
+    # silu rides into the gate projection's kernel epilogue on fused backends
+    h = dense(p["gate"], x, f"{path}/gate", ctx, act="silu")
     h = h * dense(p["up"], x, f"{path}/up", ctx)
     return dense(p["down"], h, f"{path}/down", ctx)
 

@@ -6,7 +6,8 @@ integer path -- is exposed as one coherent API:
 
   * ``QTensor`` + packing primitives       (repro.quant.qtensor)
   * format registry (ternary/int4/int8)    (repro.quant.formats)
-  * backend registry + ``qmatmul``         (repro.quant.backends)
+  * backend registry + ``qmatmul``/``qdense`` (repro.quant.backends; qdense
+    is the whole-site call -- fused single-kernel pipeline on pallas)
   * ``QuantPlan`` / ``QuantCtx`` / compile (repro.quant.plan)
   * ``quantize_model`` calibration-aware PTQ (repro.quant.api)
   * ``save_artifact`` / ``load_artifact`` packed on-disk artifacts
@@ -48,10 +49,13 @@ from repro.quant.formats import (
 from repro.quant.backends import (
     backend_names,
     get_backend,
+    has_fused_backend,
+    qdense,
     qmatmul,
     qmatmul_jit,
     quantize_activations,
     register_backend,
+    register_fused_backend,
     resolve_backend,
 )
 from repro.quant.plan import (

@@ -23,6 +23,14 @@ Every strategy receives the already-quantized activations ``(xq, xe)`` plus
 the QTensor, so registering a new backend is one function -- there is no
 string-compare ladder to extend (that lived in ``kernels/ops.py`` before
 this registry).
+
+``qdense(x, qt, bias=..., act=...)`` is the whole-site entry point serving
+uses: on backends with a registered *fused* strategy
+(``register_fused_backend``; built-in: ``pallas``) the quantize prologue,
+matmul, exponent scaling, bias and activation run as ONE pallas_call with no
+intermediate HBM materialization -- the unfused three-pass composition
+(quantize -> matmul -> scale/bias/act) remains the fallback and the ``ref``
+backend stays the bit-exact oracle for both.
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.core import dfp
 from repro.core.quantizer import QTensor
+from repro.kernels._common import activation_fn, m_bucket, pick_block
 from repro.kernels.quantize import quantize_rows
 from repro.kernels.ref import qmatmul_ref, quantize_rows_ref
 
@@ -75,32 +84,36 @@ def resolve_backend(name: str) -> str:
 
 
 # ---------------------------------------------------------------------------
-# Shared activation-quantization prologue.
+# Shared activation-quantization prologue (the ONE entry point: static or
+# dynamic exponents, pallas or jnp -- formerly split across two near-duplicate
+# functions, one of which never reached the Pallas kernel even on TPU).
 # ---------------------------------------------------------------------------
 def quantize_activations(
-    x: jax.Array, bits: int = 8, use_pallas: Optional[bool] = None
-):
-    """Per-row dynamic DFP quantization -> (int8 mantissas, int32 exponents).
+    x: jax.Array,
+    bits: int = 8,
+    use_pallas: Optional[bool] = None,
+    *,
+    exponent=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """DFP-quantize activations -> (int8 mantissas, int32 exponent(s)).
 
-    Three explicit paths:
+    With ``exponent`` (a calibrated static per-site DFP exponent from a
+    QuantPlan) the mantissas are computed directly against it -- no range
+    scan.  Otherwise per-row dynamic exponents, through one of three
+    explicit paths:
       * pallas on TPU        (use_pallas defaults to True on TPU),
       * pallas interpret mode (use_pallas=True off-TPU; exact but slow --
         used by tests to validate the kernel semantics),
       * the jnp reference    (use_pallas=False; default off-TPU).
     """
+    if exponent is not None:
+        e = jnp.asarray(exponent, jnp.int32)
+        return dfp.quantize(x, e, bits), e
     if use_pallas is None:
         use_pallas = _on_tpu()
     if not use_pallas:
         return quantize_rows_ref(x, bits)
     return quantize_rows(x, bits=bits, interpret=not _on_tpu())
-
-
-def _quantize_acts(xm: jax.Array, act_bits: int, act_exponent) -> Tuple[jax.Array, jax.Array]:
-    """Dynamic per-row exponents, or the plan's calibrated static exponent."""
-    if act_exponent is None:
-        return quantize_rows_ref(xm, act_bits)
-    e = jnp.asarray(act_exponent, jnp.int32)
-    return dfp.quantize(xm, e, act_bits), e
 
 
 # ---------------------------------------------------------------------------
@@ -138,12 +151,25 @@ def _xla_int8_backend(xq, xe, qt: QTensor, **_):
     )  # (Kg, M, N) int32
     scaled = part.astype(jnp.float32) * qt.scale_m.astype(jnp.float32)[:, None, :]
     out = scaled.sum(axis=0)
-    exp = qt.scale_e.astype(jnp.float32) + xe.astype(jnp.float32)
-    return out * jnp.exp2(exp)
+    return out * dfp.exp2i(qt.scale_e + xe)
 
 
 def _ref_backend(xq, xe, qt: QTensor, **_):
     return qmatmul_ref(xq, xe, qt)
+
+
+def _pad_rows_to_bucket(x: jax.Array) -> Tuple[jax.Array, int]:
+    """Pad ragged M up to a power-of-two bucket (>= 8).
+
+    Every distinct (M, block) pair is a fresh kernel trace/compile; bucketing
+    collapses the ragged serving batch sizes onto a handful of
+    specializations (zero rows quantize to zero mantissas, so padded rows
+    are inert)."""
+    m = x.shape[0]
+    pad = m_bucket(m) - m
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, m
 
 
 def _pallas_backend(xq, xe, qt: QTensor, *, block_m=128, block_n=128, block_k=512):
@@ -154,27 +180,67 @@ def _pallas_backend(xq, xe, qt: QTensor, *, block_m=128, block_n=128, block_k=51
         raise ValueError(
             f"format for bits={qt.bits} has no Pallas kernel registered"
         )
-    interpret = not _on_tpu()
-    m = xq.shape[0]
-    # pad rows to a tile multiple (serving batches are ragged)
-    bm = min(block_m, max(8, m))
-    pad = (-m) % bm
-    if pad:
-        xq = jnp.pad(xq, ((0, pad), (0, 0)))
+    xq, m = _pad_rows_to_bucket(xq)
     out = kernel(
         xq, qt.packed, qt.scale_m,
-        group=qt.group_size, block_m=bm, block_n=block_n, block_k=block_k,
-        interpret=interpret,
+        group=qt.group_size, block_m=pick_block(xq.shape[0], block_m),
+        block_n=block_n, block_k=block_k, interpret=not _on_tpu(),
     )
-    out = out[:m] if pad else out
-    exp = qt.scale_e.astype(jnp.float32) + xe.astype(jnp.float32)
-    return out * jnp.exp2(exp)
+    out = out[:m]
+    return out * dfp.exp2i(qt.scale_e + xe)
 
 
 register_backend("xla", _xla_backend)
 register_backend("xla_int8", _xla_int8_backend)
 register_backend("ref", _ref_backend)
 register_backend("pallas", _pallas_backend)
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-site strategies: take RAW activations and do prologue + matmul
+# + epilogue in one kernel.  Backends without a fused entry fall back to the
+# unfused composition inside qdense().
+# ---------------------------------------------------------------------------
+# fn(x f32/bf16 (M, K), qt, *, bias, act, act_bits, act_exponent, block_m,
+#    block_n, block_k) -> f32 (M, N) finished output.
+FusedFn = Callable[..., jax.Array]
+
+_FUSED_BACKENDS: Dict[str, FusedFn] = {}
+
+
+def register_fused_backend(name: str, fn: FusedFn, *, overwrite: bool = False) -> None:
+    if name in _FUSED_BACKENDS and not overwrite:
+        raise ValueError(f"fused backend {name!r} already registered")
+    _FUSED_BACKENDS[name] = fn
+
+
+def has_fused_backend(name: str) -> bool:
+    return name in _FUSED_BACKENDS
+
+
+def _pallas_fused(
+    x, qt: QTensor, *, bias=None, act=None, act_bits=8, act_exponent=None,
+    block_m=128, block_n=128, block_k=512,
+):
+    from repro.quant.formats import format_of
+
+    kernel = format_of(qt).fused_kernel
+    if kernel is None:
+        raise ValueError(
+            f"format {format_of(qt).name!r} has no fused Pallas kernel registered"
+        )
+    x, m = _pad_rows_to_bucket(x)
+    out = kernel(
+        x, qt.packed, qt.scale_m, qt.scale_e,
+        group=qt.group_size, bias=bias, act=act, act_bits=act_bits,
+        act_exponent=None if act_exponent is None else int(act_exponent),
+        block_m=pick_block(x.shape[0], block_m), block_n=block_n,
+        block_k=block_k, interpret=not _on_tpu(),
+    )
+    return out[:m]
+
+
+register_fused_backend("pallas", _pallas_fused)
 
 
 # ---------------------------------------------------------------------------
@@ -200,7 +266,7 @@ def qmatmul(
     lead = x.shape[:-1]
     xm = x.reshape(-1, x.shape[-1])
     fn = get_backend(resolve_backend(backend))
-    xq, xe = _quantize_acts(xm, act_bits, act_exponent)
+    xq, xe = quantize_activations(xm, act_bits, exponent=act_exponent)
     out = fn(xq, xe, qt, block_m=block_m, block_n=block_n, block_k=block_k)
     return out.reshape(*lead, qt.n)
 
@@ -208,3 +274,68 @@ def qmatmul(
 @functools.partial(jax.jit, static_argnames=("backend", "act_bits"))
 def qmatmul_jit(x, qt, backend="auto", act_bits=8):
     return qmatmul(x, qt, backend=backend, act_bits=act_bits)
+
+
+# ---------------------------------------------------------------------------
+# The public quantized dense site (prologue + matmul + epilogue).
+# ---------------------------------------------------------------------------
+def apply_act(y: jax.Array, act: Optional[str]) -> jax.Array:
+    return activation_fn(act)(y)  # same table as the fused kernel epilogue
+
+
+def _fused_available(name: str, qt: QTensor) -> bool:
+    """A fused strategy is usable only if the QTensor's format brought a
+    fused kernel (register_format(..., fused_kernel=...)); formats without
+    one -- including pre-existing third-party formats -- fall back to the
+    unfused composition instead of raising."""
+    if name not in _FUSED_BACKENDS:
+        return False
+    from repro.quant.formats import format_of
+
+    return format_of(qt).fused_kernel is not None
+
+
+def qdense(
+    x: jax.Array,
+    qt: QTensor,
+    *,
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+    backend: str = "auto",
+    act_bits: int = 8,
+    act_exponent=None,
+    fused: bool = True,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+) -> jax.Array:
+    """One quantized dense site: x [..., K] -> f32 [..., N] with the scale
+    exponents, ``bias`` and ``act`` ("silu"/"gelu"/"relu") already applied.
+
+    On a backend with a registered fused strategy (and ``fused=True``, the
+    per-site plan knob) the whole site is ONE kernel launch: activations are
+    quantized in-VMEM (per-row dynamic exponents on the first k-step, or the
+    plan's calibrated static ``act_exponent`` baked in as a scalar) and the
+    ``exp2(scale_e + xe)`` / bias / activation epilogue runs inside the
+    resident output tile.  Other backends compose the identical math from
+    the unfused pieces, so ``backend="ref"`` remains the bit-exact oracle
+    for the fused path.
+    """
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])
+    name = resolve_backend(backend)
+    if fused and _fused_available(name, qt):
+        out = _FUSED_BACKENDS[name](
+            xm, qt, bias=bias, act=act, act_bits=act_bits,
+            act_exponent=act_exponent, block_m=block_m, block_n=block_n,
+            block_k=block_k,
+        )
+    else:
+        xq, xe = quantize_activations(xm, act_bits, exponent=act_exponent)
+        out = get_backend(name)(
+            xq, xe, qt, block_m=block_m, block_n=block_n, block_k=block_k
+        )
+        if bias is not None:
+            out = out + bias.astype(jnp.float32)
+        out = apply_act(out, act)
+    return out.reshape(*lead, qt.n)

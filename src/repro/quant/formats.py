@@ -35,9 +35,9 @@ from repro.core.quantizer import (
     unpack2,
     unpack4,
 )
-from repro.kernels.int4_matmul import int4_matmul
-from repro.kernels.int8_matmul import int8_matmul
-from repro.kernels.ternary_matmul import ternary_matmul
+from repro.kernels.int4_matmul import int4_matmul, int4_matmul_fused
+from repro.kernels.int8_matmul import int8_matmul, int8_matmul_fused
+from repro.kernels.ternary_matmul import ternary_matmul, ternary_matmul_fused
 
 # weight_codes: (w f32 (K, N), group_size, filter_size, refit_scale)
 #   -> (codes int8 (K, N), scale_m int8 (K/g, N), scale_e int32 scalar)
@@ -54,6 +54,11 @@ class QuantFormat:
     decode: Callable[[jax.Array, int], jax.Array]  # (packed, K) -> int8 codes
     weight_codes: WeightCodesFn
     kernel: Optional[Callable] = None  # Pallas matmul over the packed form
+    # prologue/epilogue-fused Pallas dense kernel: takes RAW f32/bf16
+    # activations plus (packed, scale_m, scale_e) and applies quantization,
+    # exponents, bias and activation in one pallas_call (see
+    # kernels/_common.fused_qmm_call for the signature contract)
+    fused_kernel: Optional[Callable] = None
 
 
 _FORMATS: Dict[str, QuantFormat] = {}
@@ -68,6 +73,7 @@ def register_format(
     decode: Callable,
     weight_codes: WeightCodesFn,
     kernel: Optional[Callable] = None,
+    fused_kernel: Optional[Callable] = None,
     overwrite: bool = False,
 ) -> QuantFormat:
     """Register a weight format under ``name`` (and as default for ``bits``
@@ -78,7 +84,7 @@ def register_format(
         old_bits = _FORMATS[name].bits
         if old_bits != bits and _BY_BITS.get(old_bits) == name:
             del _BY_BITS[old_bits]  # this name no longer encodes that width
-    fmt = QuantFormat(name, bits, encode, decode, weight_codes, kernel)
+    fmt = QuantFormat(name, bits, encode, decode, weight_codes, kernel, fused_kernel)
     _FORMATS[name] = fmt
     # claim the bits default only if unclaimed or already owned by this name:
     # overwriting an unrelated format must not change how fmt="" QTensors
@@ -148,6 +154,7 @@ register_format(
     decode=unpack2,
     weight_codes=_ternary_weight_codes,
     kernel=ternary_matmul,
+    fused_kernel=ternary_matmul_fused,
 )
 register_format(
     "int4",
@@ -156,6 +163,7 @@ register_format(
     decode=unpack4,
     weight_codes=_dfp_weight_codes(4),
     kernel=int4_matmul,
+    fused_kernel=int4_matmul_fused,
 )
 register_format(
     "int8",
@@ -164,6 +172,7 @@ register_format(
     decode=lambda packed, k: packed,
     weight_codes=_dfp_weight_codes(8),
     kernel=int8_matmul,
+    fused_kernel=int8_matmul_fused,
 )
 
 

@@ -7,6 +7,12 @@ generation feed their last sampled token, idle slots feed a pad token whose
 output is discarded.  Per-slot cache positions use the masked-write decode
 path in the attention/SSM layers.
 
+The tick is device-resident: decode, sampling and the PRNG split live in one
+jitted graph whose KV-cache operand is donated (updated in place, never
+copied), so a tick is ONE dispatch and the only device->host transfer is the
+(n_slots,) sampled-token fetch -- enforced at runtime by a transfer guard,
+not just by convention.
+
 This engine is the system the paper's quantized weights serve from: with PTQ
 params (QTensors) the decode step streams 2-bit/4-bit packed weights -- the
 bandwidth-bound phase where cluster quantization pays off most.
@@ -58,7 +64,15 @@ class ServingEngine:
         self.next_token = np.zeros(n_slots, np.int32)
         self.queue: List[Request] = []
 
-        self._decode = jax.jit(api.decode)
+        def _tick(params, tokens, pos, cache, key):
+            logits, cache = api.decode(params, tokens, pos, cache)
+            key, sub = jax.random.split(key)
+            toks = sample(sub, logits[:, -1, :], sampler)
+            return toks, key, cache
+
+        # donate the cache: the decode step's masked writes update it in
+        # place instead of copying the whole (L, B, S, ...) buffer per tick
+        self._decode_step = jax.jit(_tick, donate_argnums=(3,))
 
     @classmethod
     def from_artifact(cls, artifact_dir: str, **kwargs) -> "ServingEngine":
@@ -103,9 +117,14 @@ class ServingEngine:
             return []
         tokens = jnp.asarray(self.next_token[:, None])
         pos = jnp.asarray(self.slot_pos)
-        logits, self.cache = self._decode(self.params, tokens, pos, self.cache)
-        self.key, sub = jax.random.split(self.key)
-        sampled = np.asarray(sample(sub, logits[:, -1, :], self.sampler))
+        # the guard turns "no host sync per tick" from a convention into a
+        # runtime assert: any device->host readback inside the dispatch
+        # (stray float(), logits fetch, ...) raises
+        with jax.transfer_guard_device_to_host("disallow"):
+            toks, self.key, self.cache = self._decode_step(
+                self.params, tokens, pos, self.cache, self.key
+            )
+        sampled = np.asarray(toks)  # the ONE host sync per tick
 
         finished: List[Request] = []
         for s, req in enumerate(self.slot_req):
