@@ -17,6 +17,11 @@ Wall-clock on the CPU container is regression tracking, not the perf claim
 (pallas cells run in interpret mode off-TPU; the op-count and recompile
 columns are platform-independent).  ``--json out.json`` dumps the table for
 the BENCH trajectory; run.py prints the CSV rows.
+
+Every row records a ``mesh`` axis (the spec string, "1" when unsharded) a
+``devices`` count, and per-device tokens/sec; ``--mesh dp=2,ep=2`` runs the
+decode/prefill cells under NamedSharding on a forced host-device mesh so
+the BENCH trajectory tracks the sharded engine too.
 """
 from __future__ import annotations
 
@@ -56,13 +61,20 @@ def _mode_api(api, plan, mode: str):
 
 
 def _timed_steps(fn, reps: int) -> float:
+    """Median per-call seconds over ``reps`` individually-timed calls.
+
+    The median (vs the mean of one batched loop) keeps a single GC pause or
+    scheduler hiccup from polluting a cell -- interpret-mode cells on the
+    shared CPU container otherwise jitter 25%+ run to run, which is what
+    the --check regression gate has to see through."""
     fn()  # compile / warm
-    t0 = time.perf_counter()
-    out = None
+    times = []
     for _ in range(reps):
-        out = fn()
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
 
 
 def count_hbm_passes(fn, *args, min_elems: int) -> int:
@@ -98,7 +110,8 @@ def _bench_site(bits: int) -> Dict[str, int]:
     }
 
 
-def _bench_model(bits: int, mode: str, slots: int, seq: int, reps: int):
+def _bench_model(bits: int, mode: str, slots: int, seq: int, reps: int,
+                 mesh=None):
     cfg = tiny_lm(QuantConfig(w_bits=bits, group_size=16, mode="ptq"))
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
@@ -106,32 +119,59 @@ def _bench_model(bits: int, mode: str, slots: int, seq: int, reps: int):
     mapi = _mode_api(qapi, plan, mode)
 
     cache = mapi.init_cache(slots, 32)
-    step = jax.jit(
-        lambda p, t, pos, c: (
-            lambda lg, nc: (jnp.argmax(lg[:, -1, :], -1).astype(jnp.int32), nc)
-        )(*mapi.decode(p, t, pos, c)),
-        donate_argnums=(3,),
-    )
     tok = jnp.zeros((slots, 1), jnp.int32)
-    state = {"c": cache, "i": 0}
+    from repro.parallel import sharding as rules
 
-    def tick():
-        toks, state["c"] = step(
-            qparams, tok, jnp.full((slots,), state["i"] % 24, jnp.int32), state["c"]
+    prev_mesh = rules._ACT_MESH[0]
+    try:
+        if mesh is not None:
+            rules.set_activation_mesh(mesh)
+            qparams = jax.device_put(
+                qparams, rules.qtensor_shardings(qparams, mesh)
+            )
+            cache_sh = rules.cache_shardings(
+                jax.tree.map(
+                    lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), cache
+                ),
+                mesh,
+            )
+            cache = jax.device_put(cache, cache_sh)
+            tok = jax.device_put(
+                tok, rules.batch_shardings({"t": tok}, mesh)["t"]
+            )
+        step = jax.jit(
+            lambda p, t, pos, c: (
+                lambda lg, nc: (jnp.argmax(lg[:, -1, :], -1).astype(jnp.int32), nc)
+            )(*mapi.decode(p, t, pos, c)),
+            donate_argnums=(3,),
         )
-        state["i"] += 1
-        return toks
+        state = {"c": cache, "i": 0}
 
-    decode_s = _timed_steps(tick, reps)
+        def tick():
+            toks, state["c"] = step(
+                qparams, tok, jnp.full((slots,), state["i"] % 24, jnp.int32),
+                state["c"],
+            )
+            state["i"] += 1
+            return toks
 
-    fwd = jax.jit(lambda p, t: mapi.forward(p, {"tokens": t}))
-    prompts = jnp.zeros((slots, seq), jnp.int32)
-    prefill_s = _timed_steps(lambda: fwd(qparams, prompts), max(1, reps // 2))
+        decode_s = _timed_steps(tick, reps)
 
+        fwd = jax.jit(lambda p, t: mapi.forward(p, {"tokens": t}))
+        prompts = jnp.zeros((slots, seq), jnp.int32)
+        prefill_s = _timed_steps(
+            lambda: fwd(qparams, prompts), max(1, reps // 2)
+        )
+    finally:  # a failing cell must not leak the global activation mesh
+        rules.set_activation_mesh(prev_mesh)
+
+    devices = 1 if mesh is None else mesh.devices.size
     return {
         "decode_tok_per_s": slots / decode_s,
         "decode_step_us": decode_s * 1e6,
         "prefill_tok_per_s": slots * seq / prefill_s,
+        "decode_tok_per_s_per_device": slots / decode_s / devices,
+        "prefill_tok_per_s_per_device": slots * seq / prefill_s / devices,
     }
 
 
@@ -147,8 +187,15 @@ def _ragged_recompiles() -> int:
     return ternary_matmul_fused._cache_size() - base
 
 
-def run(csv=print, *, slots: int = 4, seq: int = 16, reps: int = 3,
-        json_path: str = None) -> List[Dict]:
+def run(csv=print, *, slots: int = 4, seq: int = 16, reps: int = 15,
+        json_path: str = None, mesh_spec: str = None) -> List[Dict]:
+    mesh = None
+    if mesh_spec:
+        from repro.launch.mesh import parse_mesh_spec
+
+        mesh = parse_mesh_spec(mesh_spec)
+    mesh_tag = mesh_spec or "1"
+    devices = 1 if mesh is None else mesh.devices.size
     rows: List[Dict] = []
     for fmt, bits in FORMATS.items():
         passes = _bench_site(bits)
@@ -158,18 +205,22 @@ def run(csv=print, *, slots: int = 4, seq: int = 16, reps: int = 3,
             f"{str(passes['fused'] == 1).lower()}"
         )
         for mode in MODES:
-            r = _bench_model(bits, mode, slots, seq, reps)
-            rows.append({"format": fmt, "mode": mode, **r, **{
+            r = _bench_model(bits, mode, slots, seq, reps, mesh=mesh)
+            rows.append({
+                "format": fmt, "mode": mode,
+                "mesh": mesh_tag, "devices": devices, **r,
                 "hbm_passes_per_site": passes.get(mode, passes["unfused"]),
-            }})
+            })
             csv(
                 f"decode/{fmt}_{mode},{r['decode_step_us']:.1f},"
                 f"decode_tok_s={r['decode_tok_per_s']:.1f};"
-                f"prefill_tok_s={r['prefill_tok_per_s']:.1f}"
+                f"prefill_tok_s={r['prefill_tok_per_s']:.1f};"
+                f"mesh={mesh_tag};"
+                f"tok_s_per_dev={r['decode_tok_per_s_per_device']:.1f}"
             )
     rc = _ragged_recompiles()
     csv(f"decode/ragged_recompiles_after_warmup,{rc:.0f},want=0")
-    rows.append({"ragged_recompiles_after_warmup": rc})
+    rows.append({"ragged_recompiles_after_warmup": rc, "mesh": mesh_tag})
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rows, f, indent=2)
@@ -178,11 +229,20 @@ def run(csv=print, *, slots: int = 4, seq: int = 16, reps: int = 3,
 
 if __name__ == "__main__":
     import argparse
+    import sys
+
+    # forced host devices for --mesh must be set before jax initializes
+    from repro.launch.mesh import preinit_mesh_flag
+
+    preinit_mesh_flag(sys.argv)
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", default=None, help="dump the table as JSON")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--seq", type=int, default=16)
-    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--reps", type=int, default=15)
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="run the decode cells sharded, e.g. 'dp=2,ep=2'")
     a = ap.parse_args()
-    run(slots=a.slots, seq=a.seq, reps=a.reps, json_path=a.json)
+    run(slots=a.slots, seq=a.seq, reps=a.reps, json_path=a.json,
+        mesh_spec=a.mesh)

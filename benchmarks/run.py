@@ -12,17 +12,102 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
   * bench_checkpoint    -> packed artifact vs fp32 checkpoint: on-disk size
                            and save/restore wall time (artifact lifecycle)
   * bench_decode        -> fused decode pipeline: tokens/sec per format x
-                           {fused,unfused,xla}, HBM passes per dense site,
+                           {fused,unfused,xla} with a mesh axis (per-device
+                           tokens/sec), HBM passes per dense site,
                            ragged-batch recompile count (BENCH trajectory;
                            standalone --json for the full table)
+
+BENCH trajectory tooling:
+
+  * ``--json PATH``  runs the decode benchmark alone and writes its table
+    (how ``benchmarks/BENCH_decode.json``, the committed baseline, is made)
+  * ``--check [PATH]`` runs the decode benchmark and FAILS (exit 1) if any
+    (format, mode, mesh) cell's decode tokens/sec regressed more than 20%
+    vs the committed baseline (default ``benchmarks/BENCH_decode.json``),
+    judged on absolute AND run-normalized tokens/sec together so neither
+    machine-wide drift nor single-cell jitter alone trips the gate
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
 
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_decode.json")
+REGRESSION_FRAC = 0.20  # fail --check beyond 20% tokens/sec loss
 
-def main() -> None:
+
+def _row_key(row: dict):
+    return (row.get("format"), row.get("mode"), row.get("mesh", "1"))
+
+
+def _geomean(vals):
+    import math
+
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def check_decode(rows: list, baseline_path: str = BASELINE) -> list:
+    """Cells regressing >20% decode tokens/sec vs the committed baseline.
+
+    Two independent noise modes exist on shared CI containers: machine-wide
+    drift (every cell slower -- absolute comparison flakes) and single-cell
+    jitter (one interpret-mode cell hiccups -- comparison normalized by the
+    run's geometric mean flakes, because the mean itself moves).  A REAL
+    regression -- one path broke (fusion lost, a new reshard in the decode
+    graph) on a machine that is not uniformly slower -- shows in BOTH
+    signals, so a cell fails only when its absolute tokens/sec AND its
+    run-normalized tokens/sec each drop more than 20%."""
+    with open(baseline_path) as f:
+        base = {_row_key(r): r for r in json.load(f) if "format" in r}
+    cur = {_row_key(r): r for r in rows if "format" in r}
+    common = sorted(set(base) & set(cur))
+    if not common:
+        raise ValueError(
+            f"no common (format, mode, mesh) cells between the current run "
+            f"{sorted(cur)} and baseline {baseline_path!r} {sorted(base)}: "
+            "the gate would pass vacuously -- regenerate the baseline with "
+            "matching cells (run.py --json [--mesh SPEC])"
+        )
+    base_mean = _geomean([base[k]["decode_tok_per_s"] for k in common])
+    cur_mean = _geomean([cur[k]["decode_tok_per_s"] for k in common])
+    bad = []
+    for k in common:
+        abs_base = base[k]["decode_tok_per_s"]
+        abs_cur = cur[k]["decode_tok_per_s"]
+        rel_base = abs_base / base_mean
+        rel_cur = abs_cur / cur_mean
+        lost = 1.0 - REGRESSION_FRAC
+        if abs_cur < abs_base * lost and rel_cur < rel_base * lost:
+            bad.append({
+                "cell": k,
+                "baseline_tok_s": abs_base,
+                "current_tok_s": abs_cur,
+                "baseline_rel": rel_base,
+                "current_rel": rel_cur,
+            })
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="run the decode benchmark only and write its JSON "
+                         "table (the BENCH trajectory baseline)")
+    ap.add_argument("--check", nargs="?", const=BASELINE, default=None,
+                    metavar="BASELINE",
+                    help="run the decode benchmark and fail on a >20%% "
+                         "tokens/sec regression vs the baseline JSON")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="run/check the decode cells sharded (e.g. "
+                         "'dp=2,ep=2'); baseline cells are keyed on the "
+                         "mesh spec, so sharded baselines gate the sharded "
+                         "engine")
+    args = ap.parse_args(argv)
+
     from benchmarks import (
         bench_checkpoint,
         bench_cluster_hier,
@@ -33,6 +118,43 @@ def main() -> None:
         bench_op_ratio,
         bench_quant_error,
     )
+
+    if args.json or args.check:
+        print("name,us_per_call,derived")
+        rows = bench_decode.run(
+            csv=print, json_path=args.json, mesh_spec=args.mesh
+        )
+        if args.check:
+            bad = check_decode(rows, args.check)
+            if bad:
+                # persistent-regression filter: wall-clock cells on shared
+                # containers are bimodal, so a flagged cell must regress in
+                # a SECOND independent run too before the gate fails
+                print(
+                    f"{len(bad)} cell(s) flagged; re-running once to rule "
+                    "out container noise",
+                    flush=True,
+                )
+                flagged = {b["cell"] for b in bad}
+                rows2 = bench_decode.run(csv=print, mesh_spec=args.mesh)
+                bad = [
+                    b for b in check_decode(rows2, args.check)
+                    if b["cell"] in flagged
+                ]
+            if bad:
+                for b in bad:
+                    print(
+                        f"REGRESSION {b['cell']}: "
+                        f"{b['current_tok_s']:.1f} tok/s vs baseline "
+                        f"{b['baseline_tok_s']:.1f} "
+                        f"(normalized {b['current_rel']:.2f} vs "
+                        f"{b['baseline_rel']:.2f}; >"
+                        f"{REGRESSION_FRAC:.0%} loss)",
+                        flush=True,
+                    )
+                return 1
+            print(f"decode check ok vs {args.check}", flush=True)
+        return 0
 
     print("name,us_per_call,derived")
     for mod in (
@@ -52,7 +174,12 @@ def main() -> None:
             f"{(time.time() - t0) * 1e6:.0f},ok",
             flush=True,
         )
+    return 0
 
 
 if __name__ == "__main__":
+    # forced host devices for --mesh must be set before jax initializes
+    from repro.launch.mesh import preinit_mesh_flag
+
+    preinit_mesh_flag(sys.argv)
     sys.exit(main())

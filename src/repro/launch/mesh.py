@@ -25,3 +25,68 @@ def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     """Tiny mesh over the real local devices (tests / examples)."""
     n = jax.device_count()
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# Launcher-friendly aliases: dp -> batch parallelism, ep/tp -> the 'model'
+# axis (tensor and expert parallelism share it; see parallel/sharding.py).
+_MESH_AXIS_ALIASES = {"dp": "data", "ep": "model", "tp": "model"}
+
+
+def mesh_spec_sizes(spec: str) -> tuple:
+    """Parse 'dp=2,ep=2' -> ((axis, size), ...) WITHOUT touching jax device
+    state -- launchers call this to set XLA_FLAGS before the first jax use."""
+    out = []
+    for part in spec.split(","):
+        k, sep, v = part.partition("=")
+        if not sep:
+            raise ValueError(f"bad mesh spec {spec!r}: expected name=size pairs")
+        out.append((_MESH_AXIS_ALIASES.get(k.strip(), k.strip()), int(v)))
+    names = [n for n, _ in out]
+    if len(set(names)) != len(names):
+        raise ValueError(
+            f"mesh spec {spec!r} maps two names onto one axis "
+            f"(aliases: {_MESH_AXIS_ALIASES})"
+        )
+    return tuple(out)
+
+
+def parse_mesh_spec(spec: str) -> jax.sharding.Mesh:
+    """'dp=2,ep=2' (aliases dp->data, ep/tp->model) -> a live Mesh."""
+    pairs = mesh_spec_sizes(spec)
+    return jax.make_mesh(
+        tuple(s for _, s in pairs), tuple(n for n, _ in pairs)
+    )
+
+
+def preinit_mesh_flag(argv) -> None:
+    """Force the host-platform device count for a ``--mesh`` run.
+
+    Scans ``argv`` for ``--mesh SPEC`` or ``--mesh=SPEC`` and, when the
+    operator did not set XLA_FLAGS themselves, sets
+    ``--xla_force_host_platform_device_count`` to the mesh size.  Call
+    before the first jax initialization (importing this module is safe: the
+    flag is read at backend-client creation, not import).  Malformed specs
+    are left for the caller's argparse to report."""
+    import os
+
+    if "XLA_FLAGS" in os.environ:
+        return
+    spec = None
+    for i, arg in enumerate(argv):
+        if arg == "--mesh" and i + 1 < len(argv):
+            spec = argv[i + 1]
+            break
+        if arg.startswith("--mesh="):
+            spec = arg[len("--mesh="):]
+            break
+    if spec is None:
+        return
+    try:
+        n = 1
+        for _, size in mesh_spec_sizes(spec):
+            n *= size
+    except ValueError:
+        return
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n}"
+    )

@@ -11,15 +11,30 @@ Two boot modes:
     directly.  No fp32 weights are materialized and no calibration runs;
     the 4-16x-smaller artifact is the unit of deployment.
 
+With ``--mesh dp=2,ep=2`` the whole pipeline runs sharded: the artifact's
+per-host shard files assemble straight onto their owning devices, the
+engine's decode step runs under NamedSharding, and MoE expert sites
+dispatch through the shard_map expert-parallel fused qdense when the plan
+carries the "pallas_ep" backend.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
       --bits 2 --group-size 16 --requests 8 [--calibrate 4] \
       [--save-artifact DIR] [--plan-json p.json]
-  PYTHONPATH=src python -m repro.launch.serve --artifact DIR --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --artifact DIR --requests 8 \
+      [--mesh dp=2,ep=2]
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
+
+# --mesh on a host without enough devices (CPU smoke runs): force the host
+# platform device count BEFORE the first jax initialization -- mirrors
+# dryrun.py, but only when the operator did not set XLA_FLAGS themselves.
+from repro.launch.mesh import parse_mesh_spec, preinit_mesh_flag
+
+preinit_mesh_flag(sys.argv)
 
 import jax
 import numpy as np
@@ -40,28 +55,32 @@ def tree_mb(tree) -> float:
     return sum(np.asarray(l).nbytes for l in jax.tree.leaves(tree)) / 1e6
 
 
-def boot_from_artifact(artifact_dir: str):
+def boot_from_artifact(artifact_dir: str, mesh=None):
     """Cold start: (api, qparams, plan) from a packed on-disk artifact."""
     t0 = time.time()
-    api, qparams, art = load_servable(artifact_dir)
+    api, qparams, art = load_servable(artifact_dir, mesh=mesh)
     plan = art.plan
     plan_str = (
         f"plan: {len(plan.site_paths)} sites, "
         f"{len(plan.act_exponents)} calibrated"
         if plan is not None else "plan: none (unquantized artifact)"
     )
+    mesh_str = (
+        "" if mesh is None
+        else f" onto mesh {dict(mesh.shape)} (per-host shards assembled)"
+    )
     print(
         f"arch={api.cfg.name} cold-started from {art.path} in "
         f"{time.time() - t0:.2f}s: {tree_mb(qparams):.1f} MB packed, "
-        f"{plan_str} (fp32 never materialized)"
+        f"{plan_str} (fp32 never materialized){mesh_str}"
     )
     return api, qparams, plan
 
 
-def boot_quantize(args):
+def boot_quantize(args, mesh=None):
     """Quantize-on-boot: init fp params, PTQ (optionally calibrated)."""
     qc = QuantConfig(w_bits=args.bits, group_size=args.group_size,
-                     mode="ptq", backend="xla")
+                     mode="ptq", backend=args.backend)
     cfg = (configs.get_smoke if args.smoke else configs.get_config)(args.arch, qc)
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
@@ -77,8 +96,9 @@ def boot_quantize(args):
           f"({fp_mb / q_mb:.1f}x)  plan: {len(plan.site_paths)} sites, "
           f"{len(plan.act_exponents)} calibrated")
     if args.save_artifact:
-        out = save_servable(args.save_artifact, api, qparams, plan)
-        print(f"saved packed artifact to {out} "
+        out = save_servable(args.save_artifact, api, qparams, plan, mesh=mesh)
+        shard_str = " (per-host shards)" if mesh is not None else ""
+        print(f"saved packed artifact to {out}{shard_str} "
               f"(serve it with --artifact {args.save_artifact})")
     if args.plan_json:
         with open(args.plan_json, "w") as f:
@@ -106,18 +126,30 @@ def main():
                     help="persist the quantized model as a packed artifact")
     ap.add_argument("--plan-json", default=None,
                     help="write the compiled QuantPlan to this path")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="serve sharded, e.g. 'dp=2,ep=2' (dp->data, "
+                         "ep/tp->model); cold starts assemble per-host "
+                         "shard files straight onto their devices")
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "xla_int8", "pallas", "pallas_ep",
+                             "ref", "auto"],
+                    help="qmatmul backend the compiled plan carries "
+                         "(pallas_ep routes MoE expert sites through the "
+                         "shard_map fused path under --mesh)")
     args = ap.parse_args()
     if bool(args.artifact) == bool(args.arch):
         ap.error("exactly one of --arch or --artifact is required")
 
+    mesh = parse_mesh_spec(args.mesh) if args.mesh else None
     if args.artifact:
-        api, qparams, plan = boot_from_artifact(args.artifact)
+        api, qparams, plan = boot_from_artifact(args.artifact, mesh=mesh)
     else:
-        api, qparams, plan = boot_quantize(args)
+        api, qparams, plan = boot_quantize(args, mesh=mesh)
     cfg = api.cfg
 
     eng = ServingEngine(api, qparams, n_slots=args.slots, max_len=args.max_len,
-                        sampler=SamplerConfig(temperature=args.temperature))
+                        sampler=SamplerConfig(temperature=args.temperature),
+                        mesh=mesh)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(

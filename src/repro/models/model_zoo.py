@@ -240,25 +240,35 @@ def quantize_and_plan(
 # ---------------------------------------------------------------------------
 # Quantized artifacts: quantize once, cold-start serving many times.
 # ---------------------------------------------------------------------------
-def save_servable(artifact_dir: str, api: ModelApi, qparams, plan: QuantPlan) -> str:
+def save_servable(
+    artifact_dir: str, api: ModelApi, qparams, plan: QuantPlan, mesh=None
+) -> str:
     """Persist (qparams, plan) as a self-contained serving artifact.
 
     The serialized ArchConfig travels in the manifest, so ``load_servable``
-    needs nothing but the directory."""
+    needs nothing but the directory.  With ``mesh`` the payloads write
+    per-host sharded (``payload.shard{k}``; see the checkpoint module
+    docstring for the layout)."""
     return quant_api.save_artifact(
         artifact_dir, qparams, plan,
         extra={"arch_config": config_to_dict(api.cfg)},
+        mesh=mesh,
     )
 
 
-def load_servable(artifact_dir: str) -> Tuple[ModelApi, Any, "quant_api.Artifact"]:
+def load_servable(
+    artifact_dir: str, mesh=None
+) -> Tuple[ModelApi, Any, "quant_api.Artifact"]:
     """Cold-start a zoo model from a packed artifact: (api, qparams, artifact).
 
     No fp32 weights are materialized and no calibration runs -- the QTensor
     tree loads packed, the plan (calibrated activation exponents included)
     comes from the manifest, and the model is rebuilt from the artifact's
-    own serialized ArchConfig and bound to the plan."""
-    art = quant_api.load_artifact(artifact_dir)
+    own serialized ArchConfig and bound to the plan.  With ``mesh`` every
+    payload assembles straight onto its owning devices (per-host shard
+    files via ``jax.make_array_from_single_device_arrays``); the global
+    packed tree never exists on one host."""
+    art = quant_api.load_artifact(artifact_dir, mesh=mesh)
     cfg_dict = art.extra.get("arch_config")
     if cfg_dict is None:
         raise ValueError(

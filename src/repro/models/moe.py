@@ -6,6 +6,10 @@ its expert group is computed with searchsorted; ranks beyond the expert
 capacity are dropped (standard capacity-factor semantics).  Under the
 production mesh the expert axis of the (E, C, d) buffer is sharded over
 'model' (expert parallelism) and the scatter/gather lowers to all-to-alls.
+PTQ serving under the "pallas_ep" backend goes further: the whole expert
+FFN runs as one shard_map over the expert axis (``_expert_ffn``) with the
+dispatch/combine all-to-alls inside the body and the fused ``qdense``
+decoding only local expert slices.
 
 The router is pinned to 8-bit by the precision policy (paper's rule that
 accuracy-critical control paths keep higher precision); expert FFN weights
@@ -21,7 +25,12 @@ import jax.numpy as jnp
 
 from repro.core import ste
 from repro.quant.api import observe_site
-from repro.quant.backends import qmatmul
+from repro.quant.backends import (
+    ep_divisible,
+    expert_ffn_ep,
+    qmatmul,
+    resolve_backend,
+)
 from repro.quant.qtensor import QTensor
 from repro.models import layers
 from repro.models.layers import QuantCtx, dense
@@ -83,11 +92,16 @@ def _expert_matmul(w, x, path: str, ctx: QuantCtx, prec=None, buf_axes=None) -> 
         # stop the partitioner replicating the f32 act-quant tensors inside
         # the chunk loop; instead it un-hoisted the weight dequantization
         # (8.5x flops, +12 GiB temps on grok x prefill_32k).  The vmapped
-        # qmatmul below lets XLA hoist; the remaining f32 gathers are an
-        # open item for a shard_map EP implementation (EXPERIMENTS.md).
+        # qmatmul below lets XLA hoist.  Under the "pallas_ep" backend with a
+        # mesh installed, expert sites bypass this function entirely through
+        # the shard_map EP path (_expert_ffn below), which decodes only the
+        # local expert slices -- no replicated f32 act-quant gathers.
+        site_prec = ctx.resolve(path)
         return jax.vmap(
             lambda qt, xe: qmatmul(
-                xe, qt, backend=ctx.backend, act_exponent=ctx.act_exponent(path)
+                xe, qt, backend=ctx.backend,
+                act_bits=site_prec.act_bits if site_prec else 8,
+                act_exponent=ctx.act_exponent(path),
             )
         )(w, x)
     if ctx.mode == "qat" and prec is not None and prec.quantized:
@@ -100,6 +114,70 @@ def _expert_matmul(w, x, path: str, ctx: QuantCtx, prec=None, buf_axes=None) -> 
         xq = ste.act_ste(x.astype(jnp.float32), prec.act_bits).astype(x.dtype)
         return jnp.einsum("ecd,edf->ecf", xq, wq)
     return jnp.einsum("ecd,edf->ecf", x, w)
+
+
+def _ep_cap_axes(mesh, c: int):
+    """Data-parallel mesh axes the capacity axis can additionally shard over
+    (only taken when C stays divisible; else capacity shards over EP alone
+    and the buffer replicates across the data axes at the shard_map edge)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    total = mesh.shape.get("model", 1)
+    for a in axes:
+        total *= mesh.shape[a]
+    return axes if (axes and c % total == 0) else ()
+
+
+def _use_ep(experts, e: int, c: int, ctx: QuantCtx) -> bool:
+    """Route this chunk's expert FFN through the shard_map EP path?  Only
+    for PTQ (QTensor weights) under the "pallas_ep" backend with a mesh
+    installed whose expert/capacity axes divide the (E, C) buffer."""
+    mesh = sharding._ACT_MESH[0]
+    return (
+        isinstance(experts["gate"]["w"], QTensor)
+        and resolve_backend(ctx.backend) == "pallas_ep"
+        and mesh is not None
+        and ep_divisible(e, c, mesh, "model", _ep_cap_axes(mesh, c))
+    )
+
+
+def _expert_ffn(experts, xb: jax.Array, path: str, ctx: QuantCtx, buf_axes):
+    """gate/up/down over the dispatched (E, C, d) buffer.
+
+    PTQ under the "pallas_ep" backend with an installed mesh runs the whole
+    FFN as ONE shard_map over the expert ('model') axis: dispatch/combine
+    all-to-alls inside the body, fused qdense on the local expert slices
+    (gate silu in the kernel epilogue).  Every other mode composes the three
+    ``_expert_matmul`` sites exactly as before, so the EP path has a
+    bit-identical single-device oracle."""
+    mesh = sharding._ACT_MESH[0]
+    if _use_ep(experts, xb.shape[0], xb.shape[1], ctx):
+        # (no observer handling: calibration always runs on float params, so
+        # the QTensor guard above keeps the observing pass on the oracle path)
+        def site_kw(name):
+            site = f"{path}/experts/{name}"
+            prec = ctx.resolve(site)
+            return {
+                "act_bits": prec.act_bits if prec else 8,
+                "act_exponent": ctx.act_exponent(site),
+                "fused": prec.fused if prec else True,
+            }
+
+        return expert_ffn_ep(
+            {name: experts[name]["w"] for name in ("gate", "up", "down")},
+            xb,
+            mesh=mesh,
+            ep_axis="model",
+            cap_axes=_ep_cap_axes(mesh, xb.shape[1]),
+            backend=ctx.backend,
+            site_kwargs={n: site_kw(n) for n in ("gate", "up", "down")},
+        )
+    em = lambda name, val: _expert_matmul(
+        experts[name]["w"], val, f"{path}/experts/{name}", ctx,
+        prec=experts[name].get("_prec"), buf_axes=buf_axes,
+    )
+    h = jax.nn.silu(em("gate", xb))
+    h = h * em("up", xb)
+    return em("down", h)
 
 
 def capacity(n_tokens: int, top_k: int, n_experts: int, factor: float) -> int:
@@ -134,19 +212,18 @@ def _dispatch_chunk(p, experts, xt: jax.Array, path: str, cfg, ctx: QuantCtx, bu
     buf = jnp.zeros((e * c, d), xt.dtype).at[dest].set(
         xt[sorted_src], mode="drop"
     )
-    xb = sharding.constrain(buf.reshape(e, c, d), buf_axes)
+    use_ep = _use_ep(experts, e, c, ctx)
+    xb = buf.reshape(e, c, d)
+    if not use_ep:  # EP: shard_map's capacity-sharded in_spec IS the layout
+        xb = sharding.constrain(xb, buf_axes)
 
-    em = lambda name, val: _expert_matmul(
-        experts[name]["w"], val, f"{path}/experts/{name}", ctx,
-        prec=experts[name].get("_prec"), buf_axes=buf_axes,
-    )
-    h = jax.nn.silu(em("gate", xb))
-    h = h * em("up", xb)
-    yb = em("down", h)
+    yb = _expert_ffn(experts, xb, path, ctx, buf_axes)
     # combine in the model dtype: the gather/scatter-add below crosses the
     # expert->token sharding boundary, so its collectives move these bytes
     # (f32 here doubled the MoE collective term -- Perf iteration B4)
-    yb = sharding.constrain(yb.astype(xt.dtype), buf_axes)
+    yb = yb.astype(xt.dtype)
+    if not use_ep:  # EP: the combine all-to-all already ran inside shard_map
+        yb = sharding.constrain(yb, buf_axes)
 
     vals = yb.reshape(e * c, d).at[dest].get(
         mode="fill", fill_value=0

@@ -4,4 +4,6 @@ from repro.parallel.sharding import (
     cache_shardings,
     param_shardings,
     param_spec,
+    qtensor_shardings,
+    qtensor_spec,
 )

@@ -21,14 +21,27 @@ to replication (e.g. 8 KV heads on a 16-wide model axis -> replicated, as
 Megatron does).  The MoE expert axis shards over 'model' when divisible
 (expert parallelism), else experts stay replicated and the per-expert FFN
 dims shard instead.
+
+QTensor leaves are first-class: ``param_spec`` dispatches on the *logical*
+(K, N) shape a QTensor carries -- not the packed payload shape, whose K dim
+is divided by the words-per-uint32 packing factor (16 for ternary, 8 for
+int4) -- and ``qtensor_shardings`` expands the one logical decision into
+consistent per-field specs: the packed payload inherits the weight spec
+(packing preserves which dim is which), the scale table follows its cluster
+(K/group) axis, and the shared exponent replicates.  A K assignment is taken
+only when the mesh axis divides the logical K *and* the packed K *and* the
+scale-table K -- otherwise the whole QTensor falls back together, so payload
+and scales can never disagree about their layout.
 """
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.quantizer import QTensor
 
 # projection name -> (contraction-dim role, output-dim role)
 _N_SHARDED = ("wq", "wk", "wv", "up", "gate", "in_proj", "bc_proj", "dt_proj", "lm_head")
@@ -58,9 +71,22 @@ def _fit(mesh: Mesh, dim: int, axis: Optional[str]) -> Optional[str]:
     return axis if dim % mesh.shape[axis] == 0 else None
 
 
-def _proj_spec(path: str, shape, mesh: Mesh, mode: str) -> P:
+def _fit_all(mesh: Mesh, dims, axis: Optional[str]) -> Optional[str]:
+    """axis if it divides EVERY dim in ``dims`` (a logical dim plus its packed
+    and scale-table projections), else None -- the QTensor fields fall back to
+    replication together rather than disagreeing about their layout."""
+    if axis is None or axis not in mesh.shape:
+        return None
+    a = mesh.shape[axis]
+    return axis if all(d % a == 0 for d in dims) else None
+
+
+def _proj_spec(path: str, shape, mesh: Mesh, mode: str, k_dims=None) -> P:
     """Spec for a projection leaf ('w', 'packed' or 'scale_m'): the last two
-    dims are (K-like, N); leading dims are layer/expert stacks."""
+    dims are (K-like, N); leading dims are layer/expert stacks.
+
+    ``k_dims``: extra dims that must also divide for a K-axis assignment to
+    hold (a QTensor's packed K/words and scale-table K/group rows)."""
     k_dim, n_dim = shape[-2], shape[-1]
     name_hit = lambda names: any(re.search(rf"(^|/){n}(/|$)", path) for n in names)
     if name_hit(_K_SHARDED):
@@ -75,11 +101,12 @@ def _proj_spec(path: str, shape, mesh: Mesh, mode: str) -> P:
     else:
         fsdp = "data"
 
+    k_all = (k_dim,) + tuple(k_dims or ())
     if tp_on_k:
-        k_ax = _fit(mesh, k_dim, "model")
+        k_ax = _fit_all(mesh, k_all, "model")
         n_ax = _fit(mesh, n_dim, fsdp)
     else:
-        k_ax = _fit(mesh, k_dim, fsdp)
+        k_ax = _fit_all(mesh, k_all, fsdp)
         n_ax = _fit(mesh, n_dim, "model")
 
     lead: list = [None] * (len(shape) - 2)
@@ -102,7 +129,60 @@ def _vector_spec(path: str, shape, mesh: Mesh) -> P:
     return P(*([None] * len(shape)))
 
 
+def _qt_logical_shape(qt: QTensor) -> Tuple[int, ...]:
+    """Full logical shape of a (possibly stacked) QTensor: the packed
+    payload's leading layer/expert stack dims + the logical (K, N)."""
+    return tuple(qt.packed.shape[:-2]) + tuple(qt.shape)
+
+
+def _qt_words_per_k(qt: QTensor) -> int:
+    """K rows per packed payload row (16 ternary, 8 int4, 1 raw int8)."""
+    return max(1, qt.k // qt.packed.shape[-2])
+
+
+def qtensor_spec(path: str, qt: QTensor, mesh: Mesh, mode: str) -> P:
+    """Logical-weight spec for a QTensor leaf.
+
+    The decision runs on the shape the QTensor *represents* (stack dims +
+    (K, N)), not the packed payload shape, with the extra constraint that a
+    K-axis assignment must also divide the packed (K/words) and scale-table
+    (K/group) projections of K -- int4 payloads halve K, ternary payloads
+    divide it by 16, and the scale table divides it by group_size, so a
+    divisibility check against any single field's shape is wrong for the
+    other two."""
+    shape = _qt_logical_shape(qt)
+    k = qt.k
+    k_dims = (k // _qt_words_per_k(qt), k // qt.group_size)
+    return _proj_spec(path, shape, mesh, mode, k_dims=k_dims)
+
+
+def qtensor_field_shardings(
+    path: str, qt: QTensor, mesh: Mesh, mode: str
+) -> QTensor:
+    """Expand one logical QTensor spec into consistent per-field shardings.
+
+    Returns a QTensor whose data fields hold NamedShardings (same static
+    meta, so it is treedef-compatible with the value tree for device_put /
+    jit in_shardings): the packed payload inherits the weight spec verbatim
+    (packing preserves dim identity), the scale table follows its cluster
+    (K/group) axis, and the shared exponent replicates."""
+    spec = qtensor_spec(path, qt, mesh, mode)
+    return QTensor(
+        packed=NamedSharding(mesh, spec),
+        scale_m=NamedSharding(mesh, spec),
+        scale_e=NamedSharding(mesh, P()),
+        bits=qt.bits, group_size=qt.group_size, shape=tuple(qt.shape),
+        fmt=qt.fmt,
+    )
+
+
+def _is_qtensor(leaf) -> bool:
+    return isinstance(leaf, QTensor)
+
+
 def param_spec(path: str, leaf, mesh: Mesh, mode: str) -> P:
+    if isinstance(leaf, QTensor):
+        return qtensor_spec(path, leaf, mesh, mode)
     shape = leaf.shape
     if re.search(r"(^|/)(table)$", path):  # embedding (V, d): vocab over model
         v_ax = _fit(mesh, shape[0], "model")
@@ -119,12 +199,37 @@ def param_spec(path: str, leaf, mesh: Mesh, mode: str) -> P:
 
 
 def param_shardings(params_shapes: Any, mesh: Mesh, mode: str = "train"):
-    """Pytree of NamedSharding matching ``params_shapes`` (from eval_shape)."""
+    """Pytree of NamedSharding matching ``params_shapes`` (from eval_shape).
+
+    QTensor nodes are treated whole: the logical-shape decision is made once
+    per site and expanded into per-field shardings, so the packed payload
+    and its scale table always agree (flattening them into independent
+    leaves let their divisibility checks diverge)."""
 
     def spec(path, leaf):
-        return NamedSharding(mesh, param_spec(_path_str(path), leaf, mesh, mode))
+        p = _path_str(path)
+        if isinstance(leaf, QTensor):
+            return qtensor_field_shardings(p, leaf, mesh, mode)
+        return NamedSharding(mesh, param_spec(p, leaf, mesh, mode))
 
-    return jax.tree_util.tree_map_with_path(spec, params_shapes)
+    return jax.tree_util.tree_map_with_path(
+        spec, params_shapes, is_leaf=_is_qtensor
+    )
+
+
+def qtensor_shardings(
+    qparams: Any, mesh: Mesh, plan: Any = None, mode: str = "serve"
+):
+    """Shardings for a quantized (PTQ) param tree under ``mesh``.
+
+    The serving-side face of ``param_shardings``: QTensor leaves get
+    consistent payload/scale-table shardings from their logical shape, plain
+    leaves follow the ordinary rules.  ``plan`` (a compiled QuantPlan) is
+    accepted so callers can thread per-site layout overrides through one
+    place; the built-in rules currently derive everything they need from the
+    QTensor itself."""
+    del plan  # reserved for per-site layout overrides
+    return param_shardings(qparams, mesh, mode)
 
 
 def opt_shardings(opt_shapes: Any, mesh: Mesh, mode: str = "train"):

@@ -48,6 +48,8 @@ from repro.quant.formats import (
 )
 from repro.quant.backends import (
     backend_names,
+    ep_divisible,
+    expert_ffn_ep,
     get_backend,
     has_fused_backend,
     qdense,

@@ -222,6 +222,7 @@ def save_artifact(
     *,
     extra: Optional[Dict[str, Any]] = None,
     step: int = 0,
+    mesh: Any = None,
 ) -> str:
     """Persist a quantized model as a self-contained on-disk artifact.
 
@@ -232,21 +233,40 @@ def save_artifact(
     producer metadata; pass the serialized ArchConfig
     (``dataclasses.asdict(cfg)`` under key ``"arch_config"``) so serving can
     cold-start without any out-of-band configuration.
+
+    With ``mesh``, payloads write per-host sharded (``payload.shard{k}``,
+    per-shard sha256) under the serving-mode sharding rules
+    (``repro.parallel.qtensor_shardings``): each host persists only its
+    addressable shards, and a mesh-aware ``load_artifact`` reassembles them
+    device-by-device.
     """
     from repro.training import checkpoint as ckpt
 
+    shardings = None
+    if mesh is not None:
+        from repro.parallel.sharding import qtensor_shardings
+
+        shardings = qtensor_shardings(params, mesh, plan)
     meta = dict(extra or {})
     meta.setdefault("kind", "quant_artifact")
-    return ckpt.save(artifact_dir, step, params, extra=meta, plan=plan)
+    return ckpt.save(
+        artifact_dir, step, params, extra=meta, plan=plan, shardings=shardings
+    )
 
 
-def load_artifact(artifact_dir: str) -> Artifact:
+def load_artifact(artifact_dir: str, *, mesh: Any = None) -> Artifact:
     """Load the newest intact artifact in ``artifact_dir``.
 
     Template-free: the param tree (QTensors still packed -- fp32 weights are
     never materialized) and the plan rebuild purely from the verified
     manifest.  Corrupt steps (including a truncated plan JSON) are skipped
     in favor of older intact ones; no intact step raises IOError.
+
+    With ``mesh``, the serving shardings are computed against the
+    manifest's abstract tree (``ckpt.tree_shapes``; no payload reads) and
+    every payload assembles straight onto its owning devices -- sharded
+    payloads via ``jax.make_array_from_single_device_arrays``, so neither
+    the global fp32 NOR the global packed tree ever exists on one host.
     """
     from repro.training import checkpoint as ckpt
 
@@ -257,9 +277,15 @@ def load_artifact(artifact_dir: str) -> Artifact:
     if step is None:
         raise IOError(f"no intact quantized artifact under {artifact_dir!r}")
     d = ckpt.step_dir(artifact_dir, step)
+    plan = ckpt.load_plan(d, manifest=manifest)
+    shardings = None
+    if mesh is not None:
+        from repro.parallel.sharding import qtensor_shardings
+
+        shardings = qtensor_shardings(ckpt.tree_shapes(manifest), mesh, plan)
     return Artifact(
-        params=ckpt.restore_tree(d, manifest=manifest),
-        plan=ckpt.load_plan(d, manifest=manifest),
+        params=ckpt.restore_tree(d, manifest=manifest, shardings=shardings),
+        plan=plan,
         extra=manifest.get("extra", {}),
         step=step,
         path=d,

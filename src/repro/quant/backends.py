@@ -17,6 +17,12 @@ then dispatches to a registered backend strategy:
                    dots with int32 accumulation (2x int8 MXU path, 1 B/elem
                    weight stream).
   * ``ref``      : the pure-jnp oracle (bit-exact integer semantics).
+  * ``pallas_ep``: pallas for plain dense sites; MoE expert sites
+                   additionally route through ``expert_ffn_ep`` -- the whole
+                   expert FFN wrapped in ``shard_map`` over the expert
+                   ('model') mesh axis, with the dispatch/combine
+                   all-to-alls inside the body, so each device decodes and
+                   activation-quantizes only its local expert slices.
   * ``auto``     : resolves to pallas on TPU, xla otherwise.
 
 Every strategy receives the already-quantized activations ``(xq, xe)`` plus
@@ -35,7 +41,7 @@ backend stays the bit-exact oracle for both.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -194,6 +200,11 @@ register_backend("xla", _xla_backend)
 register_backend("xla_int8", _xla_int8_backend)
 register_backend("ref", _ref_backend)
 register_backend("pallas", _pallas_backend)
+# Expert-parallel strategy: plain dense sites run the ordinary pallas path
+# (the EP-ness only matters at MoE expert sites, which route through
+# expert_ffn_ep below when a mesh is installed); registering it here makes
+# "pallas_ep" a first-class backend name a QuantPlan can carry.
+register_backend("pallas_ep", _pallas_backend)
 
 
 # ---------------------------------------------------------------------------
@@ -241,6 +252,7 @@ def _pallas_fused(
 
 
 register_fused_backend("pallas", _pallas_fused)
+register_fused_backend("pallas_ep", _pallas_fused)
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +305,99 @@ def _fused_available(name: str, qt: QTensor) -> bool:
     from repro.quant.formats import format_of
 
     return format_of(qt).fused_kernel is not None
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel fused FFN: shard_map over the expert ('model') axis.
+# ---------------------------------------------------------------------------
+def _qdense_stack(x, qt: QTensor, **kw):
+    """qdense vmapped over a stacked (E_local, ...) expert axis: each local
+    expert's site is one fused pallas_call over its local buffer slice."""
+    return jax.vmap(lambda xe, qe: qdense(xe, qe, **kw), in_axes=(0, 0))(x, qt)
+
+
+def ep_divisible(e: int, c: int, mesh, ep_axis: str = "model",
+                 cap_axes: Tuple[str, ...] = ()) -> bool:
+    """Can (E, C, d) expert buffers run the shard_map EP path on ``mesh``?
+
+    Needs the expert count divisible by the EP axis and the capacity axis
+    divisible by every axis it is sharded over (the all-to-alls split E by
+    ep on dispatch and C by ep on combine)."""
+    if mesh is None or ep_axis not in mesh.shape:
+        return False
+    ep = mesh.shape[ep_axis]
+    cap = ep
+    for a in cap_axes:
+        cap *= mesh.shape[a]
+    return ep > 1 and e % ep == 0 and c % cap == 0
+
+
+def expert_ffn_ep(
+    experts: Any,  # {"gate": QTensor (E, d, ff), "up": ..., "down": (E, ff, d)}
+    x: jax.Array,  # (E, C, d) dispatched capacity buffer
+    *,
+    mesh,
+    ep_axis: str = "model",
+    cap_axes: Tuple[str, ...] = (),
+    backend: str = "pallas_ep",
+    site_kwargs: Optional[Dict[str, Dict[str, Any]]] = None,
+) -> jax.Array:
+    """The whole MoE expert FFN under expert parallelism, as ONE shard_map.
+
+    The token side of the buffer arrives capacity-sharded (C over
+    ``cap_axes + (ep_axis,)``, exactly how the dispatch scatter leaves it);
+    inside the body an explicit ``all_to_all`` over the expert axis trades
+    capacity shards for expert shards, the three projections run the fused
+    ``qdense`` path on the LOCAL expert slices only (gate's silu rides in
+    its kernel epilogue; h never leaves the shard), and a second
+    ``all_to_all`` combines back to capacity sharding.  Each device decodes
+    and activation-quantizes only its own experts' slices -- the partitioner
+    can no longer replicate the f32 act-quant tensors across the mesh (the
+    failure mode of the vmapped qmatmul path, moe.py Perf iteration B7).
+
+    ``site_kwargs``: optional per-site qdense kwargs keyed
+    "gate"/"up"/"down" (act_bits / act_exponent / fused from the compiled
+    plan) -- per-site so the EP path quantizes each projection exactly like
+    the single-device oracle composition does.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    sites = site_kwargs or {}
+    kw = lambda name: dict(backend=backend, **sites.get(name, {}))
+
+    def body(gq, uq, dq, xs):
+        # xs: (E, C_local, d) -- this device's capacity shard of every expert.
+        # Dispatch all-to-all: trade the expert axis for the capacity axis so
+        # each device holds (E/ep, C_over_cap_axes, d) -- its experts, every
+        # token routed to them.
+        xl = jax.lax.all_to_all(xs, ep_axis, split_axis=0, concat_axis=1,
+                                tiled=True)
+        h = _qdense_stack(xl, gq, act="silu", **kw("gate"))
+        # h stays f32 into the down projection, exactly like the unfused
+        # oracle composition -- casting to the model dtype here would break
+        # bit parity with the single-device path on bf16 models
+        h = h * _qdense_stack(xl, uq, **kw("up"))
+        y = _qdense_stack(h, dq, **kw("down"))
+        # Combine all-to-all: back to capacity sharding for the gather.
+        # Cast to the model dtype FIRST -- astype is elementwise, so moving
+        # it across the pure data movement is bit-identical, and the combine
+        # collective then moves half the bytes on bf16 models (the non-EP
+        # combine learned the same lesson as Perf iteration B4, moe.py).
+        y = jax.lax.all_to_all(y.astype(xs.dtype), ep_axis, split_axis=1,
+                               concat_axis=0, tiled=True)
+        return y
+
+    cap = tuple(cap_axes) + (ep_axis,)
+    xspec = P(None, cap, None)
+    wspec = P(ep_axis)  # leading expert axis of every QTensor field
+    fn = shard_map(
+        body, mesh,
+        in_specs=(wspec, wspec, wspec, xspec),
+        out_specs=xspec,
+        check_rep=False,
+    )
+    return fn(experts["gate"], experts["up"], experts["down"], x)
 
 
 def qdense(

@@ -13,6 +13,16 @@ copied), so a tick is ONE dispatch and the only device->host transfer is the
 (n_slots,) sampled-token fetch -- enforced at runtime by a transfer guard,
 not just by convention.
 
+With a ``mesh`` the whole tick runs under NamedSharding: params (QTensor
+payload/scale leaves included) are placed by the serving sharding rules
+(``repro.parallel.qtensor_shardings``), the donated KV cache is sharded by
+``cache_shardings`` (batch over data axes, heads/seq over model), per-tick
+tokens are fed straight onto their batch sharding, and the engine installs
+the mesh as the ambient activation mesh so MoE dispatch and the shard_map
+expert-parallel FFN see it at trace time.  The engine composes with
+mesh-aware artifacts: ``from_artifact(dir, mesh=...)`` cold-starts from
+per-host shards with no single-host global tree.
+
 This engine is the system the paper's quantized weights serve from: with PTQ
 params (QTensors) the decode step streams 2-bit/4-bit packed weights -- the
 bandwidth-bound phase where cluster quantization pays off most.
@@ -20,7 +30,8 @@ bandwidth-bound phase where cluster quantization pays off most.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +49,7 @@ class Request:
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    admitted_tick: Optional[int] = None  # engine tick this request got a slot
 
 
 class ServingEngine:
@@ -49,22 +61,51 @@ class ServingEngine:
         max_len: int = 256,
         sampler: SamplerConfig = SamplerConfig(),
         seed: int = 0,
+        mesh: Optional[jax.sharding.Mesh] = None,
     ):
+        from repro.parallel import sharding as rules
+
         self.api = api
-        self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.sampler = sampler
-        self.cache = api.init_cache(n_slots, max_len)
-        self.key = jax.random.PRNGKey(seed)
+        self.mesh = mesh
+        self._tok_sharding = None
+        self._pos_sharding = None
+        # the activation mesh this engine's decode graph traces under: its
+        # own mesh, or whatever was ambient at construction (a mesh-less
+        # engine must not see another engine's mesh leak into its trace)
+        self._trace_mesh = mesh if mesh is not None else rules._ACT_MESH[0]
+        if mesh is not None:
+            params = self._install_mesh(params)
+        self.params = params
+        if mesh is None:
+            self.cache = api.init_cache(n_slots, max_len)
+            self.key = jax.random.PRNGKey(seed)
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.parallel import sharding as rules
+
+            cache_shapes = jax.eval_shape(lambda: api.init_cache(n_slots, max_len))
+            self.cache = jax.device_put(
+                api.init_cache(n_slots, max_len),
+                rules.cache_shardings(cache_shapes, mesh),
+            )
+            self.key = jax.device_put(
+                jax.random.PRNGKey(seed), NamedSharding(mesh, P())
+            )
 
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)  # next cache position
         self.slot_cursor = np.zeros(n_slots, np.int32)  # prompt consumption
         self.next_token = np.zeros(n_slots, np.int32)
-        self.queue: List[Request] = []
+        # deque: admission pops from the head every tick -- O(1) instead of
+        # the O(n) list.pop(0) under deep backlogs
+        self.queue: Deque[Request] = deque()
+        self._tick = 0  # monotonically increasing engine tick counter
 
-        def _tick(params, tokens, pos, cache, key):
+        def _tick_fn(params, tokens, pos, cache, key):
             logits, cache = api.decode(params, tokens, pos, cache)
             key, sub = jax.random.split(key)
             toks = sample(sub, logits[:, -1, :], sampler)
@@ -72,7 +113,32 @@ class ServingEngine:
 
         # donate the cache: the decode step's masked writes update it in
         # place instead of copying the whole (L, B, S, ...) buffer per tick
-        self._decode_step = jax.jit(_tick, donate_argnums=(3,))
+        self._decode_step = jax.jit(_tick_fn, donate_argnums=(3,))
+
+    def _install_mesh(self, params):
+        """Install ``self.mesh`` as the serving layout: params onto the
+        serving sharding rules, and the per-tick token/pos shardings (batch
+        over data axes when divisible).  The ambient activation mesh is NOT
+        mutated here -- each decode dispatch scopes it (``step``), so two
+        engines with different meshes coexist in one process."""
+        from repro.parallel import sharding as rules
+
+        mesh = self.mesh
+        params = jax.device_put(
+            params, rules.qtensor_shardings(params, mesh, mode="serve")
+        )
+        # tokens (B, 1) / positions (B,) follow the one batch-sharding rule
+        # (divisibility fallback included) instead of re-deriving it here
+        specs = rules.batch_shardings(
+            {
+                "tokens": jax.ShapeDtypeStruct((self.n_slots, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((self.n_slots,), jnp.int32),
+            },
+            mesh,
+        )
+        self._tok_sharding = specs["tokens"]
+        self._pos_sharding = specs["pos"]
+        return params
 
     @classmethod
     def from_artifact(cls, artifact_dir: str, **kwargs) -> "ServingEngine":
@@ -80,16 +146,25 @@ class ServingEngine:
 
         The decode graph serves straight from the loaded QTensor tree under
         the artifact's compiled plan -- no fp32 weights, no calibration, no
-        re-quantization on boot."""
+        re-quantization on boot.  With ``mesh=...`` the artifact's payloads
+        (including per-host ``payload.shard{k}`` files) assemble directly
+        onto their owning devices."""
         from repro.models import load_servable  # lazy: serving stays model-agnostic
 
-        api, qparams, _ = load_servable(artifact_dir)
+        api, qparams, _ = load_servable(artifact_dir, mesh=kwargs.get("mesh"))
         return cls(api, qparams, **kwargs)
 
     # -- client API --------------------------------------------------------
     def submit(self, req: Request) -> None:
         if not req.prompt:
             raise ValueError("empty prompt")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens cannot fit engine "
+                f"max_len={self.max_len}: the slot would hit the cache cap "
+                "during prefill and finish with truncated or empty output; "
+                "raise max_len or truncate the prompt"
+            )
         self.queue.append(req)
 
     def run(self, max_ticks: int = 1_000) -> List[Request]:
@@ -104,26 +179,48 @@ class ServingEngine:
     def _admit(self) -> None:
         for s in range(self.n_slots):
             if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
+                req.admitted_tick = self._tick
                 self.slot_req[s] = req
                 self.slot_pos[s] = 0
                 self.slot_cursor[s] = 1  # token 0 goes in this tick
                 self.next_token[s] = req.prompt[0]
+
+    def _device_operands(self):
+        tokens = self.next_token[:, None]
+        pos = self.slot_pos
+        if self.mesh is None:
+            return jnp.asarray(tokens), jnp.asarray(pos)
+        return (
+            jax.device_put(tokens, self._tok_sharding),
+            jax.device_put(pos, self._pos_sharding),
+        )
 
     def step(self) -> List[Request]:
         """One lockstep tick over all slots; returns requests finished."""
         self._admit()
         if not any(self.slot_req):
             return []
-        tokens = jnp.asarray(self.next_token[:, None])
-        pos = jnp.asarray(self.slot_pos)
-        # the guard turns "no host sync per tick" from a convention into a
-        # runtime assert: any device->host readback inside the dispatch
-        # (stray float(), logits fetch, ...) raises
-        with jax.transfer_guard_device_to_host("disallow"):
-            toks, self.key, self.cache = self._decode_step(
-                self.params, tokens, pos, self.cache, self.key
-            )
+        self._tick += 1
+        tokens, pos = self._device_operands()
+        from repro.parallel import sharding as rules
+
+        # scope the ambient activation mesh to this dispatch: the first call
+        # traces the decode graph (MoE dispatch constraints + the shard_map
+        # EP path read the mesh at trace time) and the previous value is
+        # always restored, so engines never leak their mesh into each other
+        prev_mesh = rules._ACT_MESH[0]
+        rules.set_activation_mesh(self._trace_mesh)
+        try:
+            # the guard turns "no host sync per tick" from a convention into
+            # a runtime assert: any device->host readback inside the dispatch
+            # (stray float(), logits fetch, ...) raises
+            with jax.transfer_guard_device_to_host("disallow"):
+                toks, self.key, self.cache = self._decode_step(
+                    self.params, tokens, pos, self.cache, self.key
+                )
+        finally:
+            rules.set_activation_mesh(prev_mesh)
         sampled = np.asarray(toks)  # the ONE host sync per tick
 
         finished: List[Request] = []
@@ -155,6 +252,12 @@ class ServingEngine:
     def stats(self) -> Dict[str, Any]:
         return {
             "active": sum(r is not None for r in self.slot_req),
-            "queued": len(self.queue),
+            "queued": len(self.queue),  # queue depth (requests awaiting a slot)
+            "tick": self._tick,
+            "admitted_tick": [
+                r.admitted_tick if r is not None else None
+                for r in self.slot_req
+            ],
             "positions": self.slot_pos.tolist(),
+            "mesh": None if self.mesh is None else dict(self.mesh.shape),
         }

@@ -26,9 +26,38 @@ a template (``restore_tree``) -- this is what lets a serving process
 cold-start from a packed artifact with no fp32 params and no model init
 (see ``repro.quant.api.save_artifact`` / ``load_artifact``).
 
-On a real multi-host cluster each host writes only its addressable shards;
-here (single host) we write the full array -- the manifest format already
-carries per-array shape/dtype so the multi-host writer is a drop-in.
+Sharded payloads (manifest-v2 shard layout)
+-------------------------------------------
+``save(..., shardings=...)`` writes any payload whose sharding splits it
+into multiple shards as per-shard files instead of one blob.  The on-disk
+contract:
+
+  * files: ``<payload>.shard0.npy``, ``<payload>.shard1.npy``, ... -- one
+    ``.npy`` per UNIQUE shard of the global array (replicated mesh axes are
+    deduplicated: a slice held by several devices is written once).  On a
+    multi-host cluster each host writes only its addressable shards into
+    the same step directory; here (single host) all shards are addressable
+    so one process writes the full set.
+  * manifest entry (under ``arrays`` or a codec node's ``arrays``)::
+
+        {"shape": [...], "dtype": "...",
+         "shards": [{"file": "<payload>.shard0.npy",
+                     "sha256": "...",
+                     "index": [[start, stop], ...]},   # one pair per dim
+                    ...]}
+
+    replacing the unsharded ``{"file", "sha256", "shape", "dtype"}`` form;
+    ``index`` is the shard's slice of the global array, so assembly needs
+    no mesh (integrity checks and the template-``restore`` path concatenate
+    on the host).  Every shard carries its own sha256 and is verified by
+    ``_verify`` like any payload.
+  * assembly contract: ``restore_tree(..., shardings=...)`` matches each
+    target device's slice (``sharding.devices_indices_map``) against the
+    saved shard indices and builds the global array with
+    ``jax.make_array_from_single_device_arrays`` -- per-shard files load
+    straight onto their owning devices and the global array is never
+    materialized on one host.  A layout mismatch (elastic re-scale) falls
+    back to host-side concatenation + ``device_put``.
 """
 from __future__ import annotations
 
@@ -62,13 +91,17 @@ class LeafCodec:
     ``matches(leaf)`` decides whether this codec owns a leaf; ``encode``
     splits it into named array payloads (each stored as its own
     sha256-checked file) plus JSON-safe static metadata; ``decode`` is the
-    exact inverse.
+    exact inverse.  ``template`` (optional) rebuilds the leaf from
+    ShapeDtypeStruct fields + metadata without touching payload bytes --
+    what lets ``tree_shapes`` describe a checkpoint abstractly so sharding
+    rules can run before any array is read.
     """
 
     name: str
     matches: Callable[[Any], bool]
     encode: Callable[[Any], Tuple[Dict[str, np.ndarray], Dict[str, Any]]]
     decode: Callable[[Dict[str, np.ndarray], Dict[str, Any]], Any]
+    template: Optional[Callable[[Dict[str, Any], Dict[str, Any]], Any]] = None
 
 
 _CODECS: Dict[str, LeafCodec] = {}
@@ -80,11 +113,12 @@ def register_codec(
     matches: Callable[[Any], bool],
     encode: Callable,
     decode: Callable,
+    template: Optional[Callable] = None,
     overwrite: bool = False,
 ) -> LeafCodec:
     if name in _CODECS and not overwrite:
         raise ValueError(f"codec {name!r} already registered")
-    codec = LeafCodec(name, matches, encode, decode)
+    codec = LeafCodec(name, matches, encode, decode, template)
     _CODECS[name] = codec
     return codec
 
@@ -128,9 +162,9 @@ def _qt_encode(qt: QTensor) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
 
 def _qt_decode(arrays: Dict[str, np.ndarray], meta: Dict[str, Any]) -> QTensor:
     return QTensor(
-        jnp.asarray(arrays["packed"]),
-        jnp.asarray(arrays["scale_m"]),
-        jnp.asarray(arrays["scale_e"]),
+        _as_jax(arrays["packed"]),
+        _as_jax(arrays["scale_m"]),
+        _as_jax(arrays["scale_e"]),
         bits=int(meta["bits"]),
         group_size=int(meta["group_size"]),
         shape=tuple(meta["shape"]),
@@ -138,11 +172,27 @@ def _qt_decode(arrays: Dict[str, np.ndarray], meta: Dict[str, Any]) -> QTensor:
     )
 
 
+def _qt_template(fields: Dict[str, Any], meta: Dict[str, Any]) -> QTensor:
+    """QTensor over ShapeDtypeStruct fields (no payload bytes read)."""
+    return QTensor(
+        fields["packed"], fields["scale_m"], fields["scale_e"],
+        bits=int(meta["bits"]), group_size=int(meta["group_size"]),
+        shape=tuple(meta["shape"]), fmt=meta.get("fmt", ""),
+    )
+
+
+def _as_jax(arr: Any):
+    """np payloads -> device arrays; already-assembled jax.Arrays (the
+    sharded make_array path) pass through untouched."""
+    return arr if isinstance(arr, jax.Array) else jnp.asarray(arr)
+
+
 register_codec(
     "qtensor",
     matches=lambda leaf: isinstance(leaf, QTensor),
     encode=_qt_encode,
     decode=_qt_decode,
+    template=_qt_template,
 )
 
 
@@ -170,15 +220,63 @@ def _payload_name(name: str) -> str:
     return hashlib.sha1(name.encode()).hexdigest()[:16] + ".npy"
 
 
-def _write_payload(d: str, name: str, arr: np.ndarray) -> Dict[str, Any]:
+def _file_sha256(fpath: str) -> str:
+    with open(fpath, "rb") as f:
+        return hashlib.sha256(f.read()).hexdigest()
+
+
+def _norm_index(idx, shape) -> Tuple[Tuple[int, int], ...]:
+    """A devices_indices_map entry -> ((start, stop), ...) per dim."""
+    out = []
+    for s, dim in zip(idx, shape):
+        start = 0 if s.start is None else int(s.start)
+        stop = dim if s.stop is None else int(s.stop)
+        out.append((start, stop))
+    return tuple(out)
+
+
+def _shard_indices(sharding, shape) -> List[Tuple[Tuple[int, int], ...]]:
+    """Unique shard slices of ``shape`` under ``sharding`` (replicated mesh
+    axes deduplicated), in first-seen device order."""
+    seen: List[Tuple[Tuple[int, int], ...]] = []
+    for idx in sharding.devices_indices_map(tuple(shape)).values():
+        key = _norm_index(idx, shape)
+        if key not in seen:
+            seen.append(key)
+    return seen
+
+
+def _write_payload(
+    d: str, name: str, arr: np.ndarray, sharding: Any = None
+) -> Dict[str, Any]:
+    """Write one payload; with a ``sharding`` that splits it, write
+    per-shard files (``<payload>.shard{k}.npy``, own sha256 each) instead of
+    one blob -- the manifest-v2 shard layout (module docstring)."""
     fname = _payload_name(name)
+    indices = (
+        _shard_indices(sharding, arr.shape) if sharding is not None else []
+    )
+    if len(indices) > 1:
+        shards = []
+        for k, index in enumerate(indices):
+            sname = f"{fname[:-len('.npy')]}.shard{k}.npy"
+            spath = os.path.join(d, sname)
+            np.save(spath, arr[tuple(slice(a, b) for a, b in index)])
+            shards.append({
+                "file": sname,
+                "sha256": _file_sha256(spath),
+                "index": [list(p) for p in index],
+            })
+        return {
+            "shards": shards,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
     fpath = os.path.join(d, fname)
     np.save(fpath, arr)
-    with open(fpath, "rb") as f:
-        digest = hashlib.sha256(f.read()).hexdigest()
     return {
         "file": fname,
-        "sha256": digest,
+        "sha256": _file_sha256(fpath),
         "shape": list(arr.shape),
         "dtype": str(arr.dtype),
     }
@@ -199,6 +297,7 @@ def save(
     tree: Any,
     extra: Optional[Dict] = None,
     plan: Any = None,
+    shardings: Any = None,
 ) -> str:
     """Atomically persist ``tree`` at ``step``. Returns the final directory.
 
@@ -206,7 +305,10 @@ def save(
     by a registered codec (QTensors) go to ``nodes`` as payload files plus
     static metadata.  ``plan`` (a ``repro.quant.QuantPlan`` or its JSON
     string) is written to ``quant_plan.json`` and checksummed under the
-    manifest's ``quant_plan`` section.
+    manifest's ``quant_plan`` section.  ``shardings`` (a matching pytree of
+    NamedSharding; codec leaves may carry per-field shardings, e.g. a
+    QTensor of shardings from ``repro.parallel.qtensor_shardings``) switches
+    split payloads to the per-shard layout (module docstring).
     """
     os.makedirs(ckpt_dir, exist_ok=True)
     final = step_dir(ckpt_dir, step)
@@ -222,17 +324,25 @@ def save(
         "quant_plan": None,
         "extra": extra or {},
     }
+    shard_by_name: Dict[str, Any] = (
+        dict(_flat_with_paths(shardings)) if shardings is not None else {}
+    )
     for name, leaf in _flat_with_paths(tree):
         codec = _codec_for(leaf)
+        sh = shard_by_name.get(name)
         if codec is None:
-            manifest["arrays"][name] = _write_payload(tmp, name, np.asarray(leaf))
+            manifest["arrays"][name] = _write_payload(
+                tmp, name, np.asarray(leaf), sh
+            )
         else:
             payloads, meta = codec.encode(leaf)
             manifest["nodes"][name] = {
                 "codec": codec.name,
                 "meta": meta,
                 "arrays": {
-                    field: _write_payload(tmp, f"{name}/{field}", arr)
+                    field: _write_payload(
+                        tmp, f"{name}/{field}", arr, getattr(sh, field, None)
+                    )
                     for field, arr in payloads.items()
                 },
             }
@@ -255,10 +365,45 @@ def save(
 # ---------------------------------------------------------------------------
 # Verification (integrity gate for restore_latest's fallback).
 # ---------------------------------------------------------------------------
+def _shards_tile(meta: Dict[str, Any]) -> bool:
+    """Do the shard indices exactly tile the full array?
+
+    Shards written by ``_write_payload`` come from a mesh sharding, so they
+    form a regular grid: per dimension, the unique (start, stop) intervals
+    must partition [0, dim), and every cross-product cell must be present
+    exactly once.  A step directory missing a host's shards (or a
+    hand-edited manifest) must FAIL verification -- assembling it would
+    leave uninitialized slices in the restored array."""
+    shape = meta["shape"]
+    boxes = {tuple(tuple(p) for p in s["index"]) for s in meta["shards"]}
+    if len(boxes) != len(meta["shards"]):
+        return False  # duplicate index -> double-write, reject
+    per_dim = []
+    for d, dim in enumerate(shape):
+        ivals = sorted({box[d] for box in boxes})
+        pos = 0
+        for start, stop in ivals:
+            if start != pos or stop <= start:
+                return False
+            pos = stop
+        if pos != dim:
+            return False
+        per_dim.append(len(ivals))
+    n_cells = 1
+    for n in per_dim:
+        n_cells *= n
+    return len(boxes) == n_cells
+
+
 def _check_payload(d: str, meta: Dict[str, Any]) -> bool:
-    fpath = os.path.join(d, meta["file"])
-    with open(fpath, "rb") as fh:
-        return hashlib.sha256(fh.read()).hexdigest() == meta["sha256"]
+    if "shards" in meta:  # sharded payload: tile the array AND verify each
+        if not _shards_tile(meta):
+            return False
+        return all(
+            _file_sha256(os.path.join(d, s["file"])) == s["sha256"]
+            for s in meta["shards"]
+        )
+    return _file_sha256(os.path.join(d, meta["file"])) == meta["sha256"]
 
 
 def _verify(d: str) -> Optional[Dict]:
@@ -331,14 +476,63 @@ def latest_intact_step(ckpt_dir: str) -> Optional[int]:
 # Restore.
 # ---------------------------------------------------------------------------
 def _load_payload(d: str, meta: Dict[str, Any]) -> np.ndarray:
-    return np.load(os.path.join(d, meta["file"]))
+    """Host-side load of one payload; sharded payloads concatenate into a
+    single host array (the mesh-free / template-``restore`` path)."""
+    if "shards" not in meta:
+        return np.load(os.path.join(d, meta["file"]))
+    out = np.empty(tuple(meta["shape"]), np.dtype(meta["dtype"]))
+    for s in meta["shards"]:
+        sl = tuple(slice(a, b) for a, b in s["index"])
+        out[sl] = np.load(os.path.join(d, s["file"]))
+    return out
 
 
-def _decode_node(d: str, node: Dict[str, Any]) -> Any:
+def _load_payload_on_mesh(d: str, meta: Dict[str, Any], sharding) -> jax.Array:
+    """Assemble one payload directly onto its target sharding.
+
+    When the saved shard indices match the target layout (the common
+    save-and-restore-on-the-same-mesh-shape case), each ``.shard{k}`` file
+    loads once and is device_put straight onto the devices owning that
+    slice -- ``jax.make_array_from_single_device_arrays`` stitches the
+    global view and the full array never exists on one host.  An elastic
+    layout change falls back to host concatenation + ``device_put``."""
+    shape = tuple(meta["shape"])
+    if sharding is None:
+        return jnp.asarray(_load_payload(d, meta))
+    if "shards" in meta:
+        saved = {
+            tuple(tuple(p) for p in s["index"]): s["file"]
+            for s in meta["shards"]
+        }
+        imap = sharding.devices_indices_map(shape)
+        if all(_norm_index(idx, shape) in saved for idx in imap.values()):
+            cache: Dict[str, np.ndarray] = {}
+            pieces = []
+            for dev, idx in imap.items():
+                fname = saved[_norm_index(idx, shape)]
+                if fname not in cache:
+                    cache[fname] = np.load(os.path.join(d, fname))
+                pieces.append(jax.device_put(cache[fname], dev))
+            return jax.make_array_from_single_device_arrays(
+                shape, sharding, pieces
+            )
+    return jax.device_put(_load_payload(d, meta), sharding)
+
+
+def _decode_node(d: str, node: Dict[str, Any], shard_leaf: Any = None) -> Any:
     codec = get_codec(node["codec"])
-    arrays = {
-        field: _load_payload(d, meta) for field, meta in node["arrays"].items()
-    }
+    if shard_leaf is None:
+        arrays = {
+            field: _load_payload(d, meta)
+            for field, meta in node["arrays"].items()
+        }
+    else:
+        arrays = {
+            field: _load_payload_on_mesh(
+                d, meta, getattr(shard_leaf, field, None)
+            )
+            for field, meta in node["arrays"].items()
+        }
     return codec.decode(arrays, node["meta"])
 
 
@@ -384,7 +578,17 @@ def restore(
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def restore_tree(d: str, manifest: Optional[Dict] = None) -> Any:
+def _insert_by_path(out: Dict[str, Any], name: str, val: Any) -> None:
+    node = out
+    parts = name.split("/")
+    for part in parts[:-1]:
+        node = node.setdefault(part, {})
+    node[parts[-1]] = val
+
+
+def restore_tree(
+    d: str, manifest: Optional[Dict] = None, shardings: Any = None
+) -> Any:
     """Template-free restore of one verified checkpoint directory.
 
     Rebuilds the nested-dict pytree purely from manifest paths: plain
@@ -392,24 +596,53 @@ def restore_tree(d: str, manifest: Optional[Dict] = None) -> Any:
     registry (QTensors come back packed -- the fp32 weights are never
     materialized).  This is the cold-start path for serving from a packed
     artifact.  ``manifest``: an already-verified manifest (skips
-    re-hashing)."""
+    re-hashing).  ``shardings``: a matching pytree of NamedSharding (see
+    ``tree_shapes`` for building one without reading payloads) -- sharded
+    payloads then assemble per-shard straight onto their owning devices and
+    the global tree never materializes on one host."""
     if manifest is None:
         manifest = _verify(d)
     if manifest is None:
         raise IOError(f"checkpoint {d} missing or corrupt")
+    shard_by_name: Dict[str, Any] = (
+        dict(_flat_with_paths(shardings)) if shardings is not None else {}
+    )
     out: Dict[str, Any] = {}
-
-    def insert(name: str, val: Any) -> None:
-        node = out
-        parts = name.split("/")
-        for part in parts[:-1]:
-            node = node.setdefault(part, {})
-        node[parts[-1]] = val
-
     for name, meta in manifest["arrays"].items():
-        insert(name, jnp.asarray(_load_payload(d, meta)))
+        sh = shard_by_name.get(name)
+        val = (
+            _load_payload_on_mesh(d, meta, sh)
+            if sh is not None
+            else jnp.asarray(_load_payload(d, meta))
+        )
+        _insert_by_path(out, name, val)
     for name, node in manifest.get("nodes", {}).items():
-        insert(name, _decode_node(d, node))
+        _insert_by_path(out, name, _decode_node(d, node, shard_by_name.get(name)))
+    return out
+
+
+def tree_shapes(manifest: Dict[str, Any]) -> Any:
+    """Abstract pytree of one checkpoint: ShapeDtypeStructs for plain
+    arrays, codec templates (e.g. QTensors over ShapeDtypeStruct fields)
+    for codec nodes -- built purely from the manifest, no payload reads.
+    This is what sharding rules run against before a mesh-aware restore."""
+    out: Dict[str, Any] = {}
+    for name, meta in manifest["arrays"].items():
+        _insert_by_path(out, name, jax.ShapeDtypeStruct(
+            tuple(meta["shape"]), np.dtype(meta["dtype"])
+        ))
+    for name, node in manifest.get("nodes", {}).items():
+        codec = get_codec(node["codec"])
+        if codec.template is None:
+            raise ValueError(
+                f"codec {codec.name!r} has no template builder; cannot "
+                "describe this checkpoint abstractly"
+            )
+        fields = {
+            field: jax.ShapeDtypeStruct(tuple(m["shape"]), np.dtype(m["dtype"]))
+            for field, m in node["arrays"].items()
+        }
+        _insert_by_path(out, name, codec.template(fields, node["meta"]))
     return out
 
 

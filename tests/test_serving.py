@@ -105,6 +105,48 @@ def test_eos_stops_generation():
     assert out == [first]
 
 
+def test_submit_rejects_overlong_prompt():
+    """A prompt that cannot fit max_len fails loudly at submit time instead
+    of silently finishing done=True with truncated/empty output."""
+    cfg = configs.get_smoke("qwen3-8b")
+    api = build_model(cfg)
+    params = api.init(KEY)
+    eng = ServingEngine(api, params, n_slots=1, max_len=8)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(uid=0, prompt=list(range(8)), max_new_tokens=2))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(uid=1, prompt=list(range(20)), max_new_tokens=2))
+    eng.submit(Request(uid=2, prompt=list(range(7)), max_new_tokens=1))  # fits
+    assert len(eng.run()) == 1
+
+
+def test_queue_depth_and_admission_ticks():
+    """The request queue is a deque reporting depth + per-request admission
+    tick through stats()."""
+    from collections import deque
+
+    cfg = configs.get_smoke("qwen3-8b")
+    api = build_model(cfg)
+    params = api.init(KEY)
+    eng = ServingEngine(api, params, n_slots=1, max_len=16)
+    assert isinstance(eng.queue, deque)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=[i + 1, 2], max_new_tokens=1))
+    s0 = eng.stats()
+    assert s0["queued"] == 3 and s0["tick"] == 0
+    eng.step()
+    s1 = eng.stats()
+    assert s1["queued"] == 2  # one admitted into the single slot
+    assert s1["admitted_tick"] == [0]  # admitted before the first tick ran
+    assert s1["tick"] == 1
+    done = eng.run()
+    # FIFO admission order survives the deque swap, and later requests
+    # record later admission ticks
+    ticks = [r.admitted_tick for r in sorted(done, key=lambda r: r.uid)]
+    assert ticks == sorted(ticks) and ticks[0] == 0
+    assert eng.stats()["queued"] == 0
+
+
 def test_sampler_modes():
     logits = jnp.asarray([[0.0, 5.0, 1.0, -2.0]])
     assert int(sample(KEY, logits, SamplerConfig(temperature=0.0))[0]) == 1

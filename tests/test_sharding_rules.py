@@ -59,6 +59,85 @@ def test_qtensor_fields_shard_like_dense():
     assert sharding.param_spec("blocks/attn/wq/scale_m", _Leaf((64, 64, 4096)), MESH, "serve") == P(None, None, "model")
 
 
+# ---------------------------------------------------------------------------
+# QTensor-aware specs: the decision runs on the logical shape, with packed
+# and scale-table projections of K as extra divisibility constraints.
+# ---------------------------------------------------------------------------
+def _qt(k, n, bits=2, group=16, lead=()):
+    """QTensor over ShapeDtypeStructs (no arrays needed for spec logic)."""
+    from repro.core.quantizer import INT4_PER_WORD, TERNARY_PER_WORD, QTensor
+
+    wpk = {2: TERNARY_PER_WORD, 4: INT4_PER_WORD, 8: 1}[bits]
+    sds = lambda shape: jax.ShapeDtypeStruct(shape, jnp.int8)
+    return QTensor(
+        packed=sds(tuple(lead) + (k // wpk, n)),
+        scale_m=sds(tuple(lead) + (k // group, n)),
+        scale_e=sds(()),
+        bits=bits, group_size=group, shape=(k, n),
+    )
+
+
+def test_qtensor_spec_dispatches_on_logical_shape():
+    # logical K=4096 -> K/16 packed rows = 256, K/16 scale rows = 256: all
+    # divisible by 16 -> the K-sharded member takes the model axis
+    assert sharding.param_spec("blocks/attn/wo/w", _qt(4096, 4096), MESH, "serve") == P("model", None)
+    assert sharding.param_spec("blocks/attn/wq/w", _qt(4096, 4096), MESH, "serve") == P(None, "model")
+
+
+def test_qtensor_packed_dim_divisibility_fallback():
+    # logical K=128 divides 16, but the int4 scale table has 128/16=8 rows
+    # and the packed payload 128/8=16 rows: 8 % 16 != 0 -> the whole QTensor
+    # falls back to replication on K (a dense 128-K leaf would too, but a
+    # payload-shape check alone would wrongly shard scale_m here)
+    assert sharding.param_spec(
+        "blocks/mlp/down/w", _qt(128, 4096, bits=4, group=16), MESH, "serve"
+    ) == P(None, None)
+    # int8 (words_per_k=1) with the same logical K also falls back: the
+    # scale table is the binding constraint
+    assert sharding.param_spec(
+        "blocks/mlp/down/w", _qt(128, 4096, bits=8, group=16), MESH, "serve"
+    ) == P(None, None)
+
+
+def test_qtensor_field_shardings_consistent():
+    qt = _qt(4096, 4096)
+    fs = sharding.qtensor_field_shardings("blocks/attn/wo/w", qt, MESH, "serve")
+    assert fs.packed.spec == P("model", None)
+    assert fs.scale_m.spec == P("model", None)  # scales follow the cluster axis
+    assert fs.scale_e.spec == P()
+    assert (fs.bits, fs.group_size, fs.shape) == (qt.bits, qt.group_size, qt.shape)
+
+
+def test_qtensor_expert_stack_ep():
+    # stacked experts (E=32, K, N): EP over model, inner dims drop the axis
+    qt = _qt(7168, 4864, lead=(32,))
+    spec = sharding.param_spec("blocks/moe/experts/gate/w", qt, MESH, "serve")
+    assert spec == P("model", None, None)
+
+
+def test_qtensor_shardings_tree():
+    from repro.core.quantizer import QTensor
+
+    tree = {
+        "blocks": {"attn": {"wq": {"w": _qt(4096, 4096)}}},
+        "ln": {"scale": _Leaf((4096,))},
+    }
+    sh = sharding.qtensor_shardings(tree, MESH)
+    wq = sh["blocks"]["attn"]["wq"]["w"]
+    assert isinstance(wq, QTensor)  # QTensor-of-shardings, treedef-compatible
+    assert wq.packed.spec == P(None, "model")
+    assert sh["ln"]["scale"].spec == P(None)
+
+
+def test_ep_divisible():
+    from repro.quant import ep_divisible
+
+    assert ep_divisible(4, 8, MESH3, "model", ()) is False  # 4 % 16 != 0
+    assert ep_divisible(32, 32, MESH, "model", ()) is True
+    assert ep_divisible(32, 32, MESH, "model", ("data",)) is False  # C % 512
+    assert ep_divisible(32, 32, None) is False
+
+
 def test_paper_op_ratio_claims():
     """Sec. 3.3: ~85% multiplies replaced at N=4, ~98% at N=64."""
     approx4 = stats.paper_approximation(4)
