@@ -1,6 +1,6 @@
 """Serving throughput for the fused quantized decode pipeline (BENCH traj).
 
-Cells: {ternary, int4, int8} x {fused, unfused, xla}, measuring
+Cells: {ternary, int4, int8, nf4, mx} x {fused, unfused, xla}, measuring
 
   * decode tokens/sec  -- one device-resident decode tick (donated cache,
     argmax in-graph) over an ``n_slots`` batch,
@@ -39,7 +39,19 @@ from repro.configs.base import QuantConfig
 from repro.models import build_model, quantize_and_plan
 from repro.quant import qdense, quantize_weights
 
-FORMATS = {"ternary": 2, "int4": 4, "int8": 8}
+# format name -> (w_bits, QuantConfig.fmt): the paper's three plus the two
+# sub-8-bit block formats (nf4 rides int4's width, mx rides int8's; both are
+# selected by NAME through the plan, never by bits).  Widths come from the
+# registry so the table cannot drift from the formats themselves.
+from repro.quant import get_format
+
+FORMATS = {
+    name: (get_format(name).bits, name if named else None)
+    for name, named in (
+        ("ternary", False), ("int4", False), ("int8", False),
+        ("nf4", True), ("mx", True),
+    )
+}
 MODES = ("fused", "unfused", "xla")
 
 
@@ -94,10 +106,10 @@ def count_hbm_passes(fn, *args, min_elems: int) -> int:
     return n
 
 
-def _bench_site(bits: int) -> Dict[str, int]:
+def _bench_site(bits: int, fmt: str = None) -> Dict[str, int]:
     m, k, n, g = 8, 256, 256, 64
     x = jnp.ones((m, k), jnp.float32)
-    qt = quantize_weights(jnp.ones((k, n), jnp.float32), bits, g)
+    qt = quantize_weights(jnp.ones((k, n), jnp.float32), bits, g, fmt=fmt)
     min_elems = m * min(k, n)
     return {
         "fused": count_hbm_passes(
@@ -111,8 +123,8 @@ def _bench_site(bits: int) -> Dict[str, int]:
 
 
 def _bench_model(bits: int, mode: str, slots: int, seq: int, reps: int,
-                 mesh=None):
-    cfg = tiny_lm(QuantConfig(w_bits=bits, group_size=16, mode="ptq"))
+                 mesh=None, fmt: str = None):
+    cfg = tiny_lm(QuantConfig(w_bits=bits, group_size=16, mode="ptq", fmt=fmt))
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
     qparams, plan, qapi = quantize_and_plan(api, params)
@@ -197,15 +209,16 @@ def run(csv=print, *, slots: int = 4, seq: int = 16, reps: int = 15,
     mesh_tag = mesh_spec or "1"
     devices = 1 if mesh is None else mesh.devices.size
     rows: List[Dict] = []
-    for fmt, bits in FORMATS.items():
-        passes = _bench_site(bits)
+    for fmt, (bits, fmt_name) in FORMATS.items():
+        passes = _bench_site(bits, fmt=fmt_name)
         csv(
             f"decode/hbm_passes_{fmt},{passes['fused']:.0f},"
             f"unfused={passes['unfused']};fused_is_single_kernel="
             f"{str(passes['fused'] == 1).lower()}"
         )
         for mode in MODES:
-            r = _bench_model(bits, mode, slots, seq, reps, mesh=mesh)
+            r = _bench_model(bits, mode, slots, seq, reps, mesh=mesh,
+                             fmt=fmt_name)
             rows.append({
                 "format": fmt, "mode": mode,
                 "mesh": mesh_tag, "devices": devices, **r,

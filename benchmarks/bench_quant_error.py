@@ -41,6 +41,23 @@ def run(csv=print):
                 f"dloss={loss - fp_loss:+.4f};dtop1={top1 - fp_top1:+.4f}"
             )
 
+    # sub-8-bit block formats: nf4 sweeps the cluster size like int4 (same
+    # 4-bit budget, quantile grid); mx pins its 32-element block, so it gets
+    # one cell.  Selected by NAME through the plan (QuantConfig.fmt).
+    for fmt, bits, sweep in (("nf4", 4, (4, 16, 64)), ("mx", 8, (32,))):
+        for n in sweep:
+            qc = QuantConfig(
+                w_bits=bits, group_size=n, mode="ptq", backend="xla", fmt=fmt
+            )
+            qcfg = dataclasses.replace(tiny_lm(), quant=qc)
+            qparams, _plan, qapi = quantize_and_plan(build_model(qcfg), params)
+            loss, top1 = eval_loss_and_top1(qapi, qparams, qcfg, dcfg)
+            csv(
+                f"quant_error/8a-{fmt}-N{n},0,"
+                f"loss={loss:.4f};top1={top1:.4f};"
+                f"dloss={loss - fp_loss:+.4f};dtop1={top1 - fp_top1:+.4f}"
+            )
+
     # direct Algorithm-1 reconstruction error on ResNet-101-shaped ensembles
     rng = np.random.default_rng(0)
     for name, (k, nout, f) in {
@@ -57,6 +74,15 @@ def run(csv=print):
                     quantizer.weight_quantization_error(w, bits, g, f)
                 ) / float(jnp.sum(w * w))
                 csv(f"quant_error/recon_{name}_{bits}w_N{n},0,rel_err={err:.4f}")
+        # block formats on the same ensembles (fmt-selected; mx block fixed)
+        for fmt, groups in (("nf4", (32, 64)), ("mx", (32,))):
+            for g in groups:
+                if k % g:
+                    continue
+                qt = quantizer.quantize_weights(w, group_size=g, fmt=fmt)
+                rec = quantizer.dequantize_weights(qt)
+                err = float(jnp.sum((w - rec) ** 2)) / float(jnp.sum(w * w))
+                csv(f"quant_error/recon_{name}_{fmt}_N{g},0,rel_err={err:.4f}")
     return {"fp_loss": fp_loss, "fp_top1": fp_top1}
 
 

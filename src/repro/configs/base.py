@@ -22,6 +22,10 @@ class QuantConfig:
     refit_scale: bool = False  # beyond-paper L2 refit of alpha
     mode: str = "fp"  # 'fp' | 'qat' | 'ptq'
     backend: str = "auto"  # qmatmul backend for ptq
+    # registered weight-format name (nf4, mx, ...); None keeps the w_bits
+    # ladder (ternary/int4/int8).  Formats with a fixed block (mx: 32)
+    # override group_size for the default sites.
+    fmt: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)

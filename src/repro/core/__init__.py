@@ -10,11 +10,26 @@ from repro.core.dfp import (
     quantize_tensor,
 )
 from repro.core.policy import FULL_PRECISION, LayerPrecision, PrecisionPolicy
-from repro.core.quantizer import (
-    QTensor,
-    decode_codes,
-    dequantize_weights,
-    fake_quantize_weights,
-    quantize_weights,
-)
+from repro.core.quantizer import QTensor
 from repro.core.ternary import ternarize_matrix, ternary_dequantize
+
+# The format-registry entry points re-exported from quantizer are LAZY there
+# (they live in repro.quant.formats, which imports the kernels); resolving
+# them at package-import time completed the cycle
+# repro.kernels -> repro.core -> repro.quant.formats -> repro.kernels and
+# made `import repro.kernels` (or repro.core) fail as a first import.  Keep
+# the names available but resolve them on first attribute access.
+_QUANTIZER_LAZY = (
+    "decode_codes",
+    "dequantize_weights",
+    "fake_quantize_weights",
+    "quantize_weights",
+)
+
+
+def __getattr__(name: str):
+    if name in _QUANTIZER_LAZY:
+        from repro.core import quantizer
+
+        return getattr(quantizer, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -89,11 +89,20 @@ def recalibrate_gamma(
     gamma: jax.Array, rms_fp: jax.Array, rms_q: jax.Array, eps: float = 1e-6
 ) -> jax.Array:
     """BN-recompute analogue: rescale norm gain so the quantized activation
-    second moment matches the full-precision one at the same site."""
-    ratio = jnp.sqrt((rms_fp + eps) / (rms_q + eps))
-    return gamma * ratio
+    RMS matches the full-precision one at the same site.
+
+    ``rms_fp``/``rms_q`` are true root-mean-squares (what
+    ``rms_from_observer`` returns), so the correction is their plain ratio:
+    scaling activations by c scales their RMS by c, and the gain must absorb
+    exactly rms_fp / rms_q to undo the shift.  (A previous revision took
+    sqrt of the ratio here while ``rms_from_observer`` returned the *mean
+    square* -- internally consistent, but any caller passing a true RMS got
+    a half-strength correction.  Both ends now speak RMS.)
+    """
+    return gamma * (rms_fp + eps) / (rms_q + eps)
 
 
 def rms_from_observer(state: ObserverState, site: str) -> jax.Array:
+    """True RMS at ``site``: sqrt of the batch-averaged mean square."""
     entry = state[site]
-    return entry["msq"] / jnp.maximum(entry["count"], 1.0)
+    return jnp.sqrt(entry["msq"] / jnp.maximum(entry["count"], 1.0))

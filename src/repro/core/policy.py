@@ -106,5 +106,32 @@ class PrecisionPolicy:
         )
 
     @classmethod
+    def for_format(
+        cls, fmt: str, group_size: int = 64, filter_size: int = 1,
+        refit_scale: bool = False,
+    ) -> "PrecisionPolicy":
+        """Policy whose default sites use the *named* registered format.
+
+        The default ``LayerPrecision`` carries ``fmt`` plus the format's own
+        bit-width; formats with a fixed cluster length (mx: 32) pin
+        ``group_size`` to it so the compiled plan, the QTensor metadata and
+        the scale tables can never disagree.
+        ``filter_size``/``refit_scale`` are forwarded for formats whose
+        ``weight_codes`` honor them (ternary-style encoders; nf4/mx accept
+        and ignore them).  The paper's 8-bit override sites (embedding /
+        first block / lm_head / router) stay on the built-in int8 format --
+        they are accuracy-critical control paths, not the sub-8-bit
+        experiment.
+        """
+        from repro.quant.formats import get_format  # lazy: formats imports kernels
+
+        f = get_format(fmt)
+        g = f.block_size or group_size
+        return cls(
+            default=LayerPrecision(f.bits, 8, g, filter_size, refit_scale, fmt=fmt),
+            overrides=cls.paper_overrides(group_size),
+        )
+
+    @classmethod
     def full(cls) -> "PrecisionPolicy":
         return cls(default=LayerPrecision(FULL_PRECISION, FULL_PRECISION))

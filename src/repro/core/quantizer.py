@@ -101,6 +101,19 @@ def unpack2(packed: jax.Array, k: int) -> jax.Array:
     return out.reshape(k, packed.shape[1])
 
 
+# NormalFloat-4 lookup table (QLoRA, Dettmers et al. 2023): the 16 quantiles
+# of a standard normal, normalized to [-1, 1].  Stored here on the int8 DFP
+# grid (round(v * 127)) so an nf4 weight decodes to ordinary int8 mantissas:
+# dequant = NF4_LUT_I8[code] * (absmax / 127), which means the per-cluster
+# scale table and every integer matmul path (kernels, ref oracle, xla_int8)
+# consume nf4 exactly like any other format -- the LUT is the only new piece.
+NF4_PER_WORD = 8  # 4-bit codes per uint32, packed along K like int4
+NF4_LUT_I8 = (
+    -127, -88, -67, -50, -36, -23, -12, 0,
+    10, 20, 31, 43, 56, 71, 92, 127,
+)
+
+
 def pack4(q: jax.Array) -> jax.Array:
     """(K, N) int8 in the symmetric range [-7, 7] -> (K/8, N) uint32.
 
@@ -136,6 +149,44 @@ def unpack4(packed: jax.Array, k: int) -> jax.Array:
         lanes.append(jnp.where(c >= 8, c - 16, c))
     out = jnp.stack(lanes, axis=1)
     return out.reshape(k, packed.shape[1])
+
+
+def pack4u(codes: jax.Array) -> jax.Array:
+    """(K, N) int8 UNSIGNED 4-bit codes in [0, 15] -> (K/8, N) uint32.
+
+    The lookup-table companion of ``pack4``: nf4 codes are LUT *indices*,
+    not two's-complement mantissas, so the fields pack without sign handling.
+    The range contract ([0, 15]) is asserted on concrete inputs; under
+    tracing the caller is trusted (the nf4 encoder emits argmin indices,
+    which are in range by construction)."""
+    k, n = codes.shape
+    assert k % NF4_PER_WORD == 0, k
+    if not isinstance(codes, jax.core.Tracer):
+        lo, hi = int(jnp.min(codes)), int(jnp.max(codes))
+        assert 0 <= lo and hi <= 15, (
+            f"pack4u expects unsigned 4-bit codes in [0, 15], got [{lo}, {hi}]"
+        )
+    c = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint32)
+    c = c.reshape(k // NF4_PER_WORD, NF4_PER_WORD, n)
+    word = jnp.zeros((k // NF4_PER_WORD, n), jnp.uint32)
+    for i in range(NF4_PER_WORD):
+        word = word | (c[:, i, :] << (4 * i))
+    return word
+
+
+def unpack4u(packed: jax.Array, k: int) -> jax.Array:
+    """Inverse of pack4u -> (K, N) int8 codes in [0, 15]."""
+    lanes = []
+    for i in range(NF4_PER_WORD):
+        lanes.append(((packed >> (4 * i)) & jnp.uint32(0xF)).astype(jnp.int8))
+    out = jnp.stack(lanes, axis=1)
+    return out.reshape(k, packed.shape[1])
+
+
+def nf4_lut_decode(codes: jax.Array) -> jax.Array:
+    """LUT indices [0, 15] -> int8 mantissas on the NF4_LUT_I8 grid."""
+    lut = jnp.asarray(NF4_LUT_I8, jnp.int8)
+    return jnp.take(lut, codes.astype(jnp.int32), axis=0)
 
 
 # ---------------------------------------------------------------------------

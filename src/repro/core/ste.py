@@ -24,10 +24,13 @@ def ste(x: jax.Array, quantized: jax.Array) -> jax.Array:
 
 
 @functools.lru_cache(maxsize=None)
-def _weight_ste_fn(bits: int, group_size: int, filter_size: int, refit: bool):
+def _weight_ste_fn(bits: int, group_size: int, filter_size: int, refit: bool,
+                   fmt):
     @jax.custom_vjp
     def fq(w):
-        return quantizer.fake_quantize_weights(w, bits, group_size, filter_size, refit)
+        return quantizer.fake_quantize_weights(
+            w, bits, group_size, filter_size, refit, fmt=fmt
+        )
 
     def fwd(w):
         return fq(w), None
@@ -41,11 +44,15 @@ def _weight_ste_fn(bits: int, group_size: int, filter_size: int, refit: bool):
 
 def weights_ste(
     w: jax.Array, bits: int, group_size: int, filter_size: int = 1,
-    refit_scale: bool = False,
+    refit_scale: bool = False, fmt: str = None,
 ) -> jax.Array:
+    """``fmt`` selects a named registered format (nf4, mx, ...) so the QAT
+    forward fake-quantizes on the SAME grid PTQ will deploy on -- resolving
+    by bits alone would silently train against the wrong (uniform) grid for
+    formats that share a width with a built-in."""
     if bits >= 16:  # full precision passthrough
         return w
-    return _weight_ste_fn(bits, group_size, filter_size, refit_scale)(w)
+    return _weight_ste_fn(bits, group_size, filter_size, refit_scale, fmt)(w)
 
 
 def ternary_weights_ste(

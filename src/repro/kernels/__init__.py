@@ -7,6 +7,8 @@ tolerance (flash attention) in interpret mode on CPU.
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.int4_matmul import int4_matmul, int4_matmul_fused
 from repro.kernels.int8_matmul import int8_matmul, int8_matmul_fused
+from repro.kernels.mx_matmul import mx_matmul, mx_matmul_fused
+from repro.kernels.nf4_matmul import nf4_matmul, nf4_matmul_fused
 from repro.kernels.ops import qmatmul, quantize_activations
 from repro.kernels.quantize import quantize_rows
 from repro.kernels.ternary_matmul import ternary_matmul, ternary_matmul_fused

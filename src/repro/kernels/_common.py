@@ -46,6 +46,8 @@ except Exception:  # pragma: no cover
 
 TERNARY_PER_WORD = 16
 INT4_PER_WORD = 8
+NF4_PER_WORD = 8  # 4-bit LUT codes per uint32 (packed like int4)
+MX_BLOCK = 32  # mx shared-exponent block length along K
 
 
 def decode2_tile(words: jnp.ndarray, bk: int) -> jnp.ndarray:
@@ -63,6 +65,26 @@ def decode4_tile(words: jnp.ndarray, bk: int) -> jnp.ndarray:
     for i in range(INT4_PER_WORD):
         c = ((words >> (4 * i)) & jnp.uint32(0xF)).astype(jnp.int8)
         lanes.append(jnp.where(c >= 8, c - 16, c))
+    return jnp.stack(lanes, axis=1).reshape(bk, words.shape[-1])
+
+
+def decode_nf4_tile(words: jnp.ndarray, bk: int) -> jnp.ndarray:
+    """(bk/8, bn) uint32 of nf4 LUT codes -> (bk, bn) int8 LUT mantissas.
+
+    The 16-entry lookup runs in-kernel as a select chain over the constant
+    table (gathers from VMEM constants do not lower on all Pallas targets;
+    16 vector selects per lane do, and vectorize on the VPU).  The resulting
+    mantissas are ordinary int8 lanes, so the MXU contraction and per-cluster
+    scale application downstream are identical to every other format."""
+    from repro.core.quantizer import NF4_LUT_I8
+
+    lanes = []
+    for i in range(NF4_PER_WORD):
+        c = ((words >> (4 * i)) & jnp.uint32(0xF)).astype(jnp.int32)
+        v = jnp.zeros_like(c)
+        for code, val in enumerate(NF4_LUT_I8):
+            v = jnp.where(c == code, jnp.int32(val), v)
+        lanes.append(v.astype(jnp.int8))
     return jnp.stack(lanes, axis=1).reshape(bk, words.shape[-1])
 
 
@@ -84,6 +106,72 @@ def m_bucket(m: int) -> int:
     while b < m:
         b *= 2
     return b
+
+
+# ---------------------------------------------------------------------------
+# The unfused packed-matmul kernel (shared across weight formats).
+# ---------------------------------------------------------------------------
+def _packed_kernel(x_ref, w_ref, s_ref, out_ref, *, decode, bk: int, group: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w8 = decode(w_ref[...], bk)  # (bk, bn) int8 mantissa lanes
+    x = x_ref[...]  # (bm, bk) int8
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for s in range(bk // group):
+        xs = jax.lax.slice_in_dim(x, s * group, (s + 1) * group, axis=1)
+        ws = jax.lax.slice_in_dim(w8, s * group, (s + 1) * group, axis=0)
+        part = jax.lax.dot_general(
+            xs, ws, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+        # one multiply per cluster: scale mantissa applied to the int32 partial
+        acc = acc + part.astype(jnp.float32) * s_ref[s, :].astype(jnp.float32)[None, :]
+    out_ref[...] += acc
+
+
+def packed_qmm_call(
+    x_q: jax.Array,  # int8 (M, K) activation mantissas
+    packed: jax.Array,  # per-format packed weights ((K/words_per_k, N))
+    scale_m: jax.Array,  # int8 (K/group, N)
+    *,
+    decode: Callable,  # (words tile, bk) -> (bk, bn) int8
+    words_per_k: int,
+    group: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """One pallas_call for the unfused per-format matmul: tile decode +
+    per-cluster int32 accumulation.  The grid/BlockSpec scaffolding is
+    identical for every weight encoding -- only ``decode``/``words_per_k``
+    vary -- so every per-format kernel module (ternary/int4/int8/nf4; mx
+    aliases int8) wraps this builder instead of copying the tiling loop
+    (the fused twin is ``fused_qmm_call``).  Exponents (scale_e +
+    activation e) are applied by the caller."""
+    m, k = x_q.shape
+    n = packed.shape[1]
+    bm, bn = min(block_m, m), min(block_n, n)
+    bk = min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    assert bk % group == 0 and bk % words_per_k == 0, (bk, group, words_per_k)
+
+    kern = functools.partial(_packed_kernel, decode=decode, bk=bk, group=group)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // words_per_k, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        # same parallel/parallel/arbitrary semantics as the fused builder
+        compiler_params=None if interpret else _FUSED_COMPILER_PARAMS,
+        interpret=interpret,
+    )(x_q, packed, scale_m)
 
 
 # ---------------------------------------------------------------------------

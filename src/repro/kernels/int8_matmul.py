@@ -2,7 +2,10 @@
 
 Used for the layers the policy pins to 8-bit (embedding/C1 analogue,
 lm_head, MoE router).  int8 MXU contraction at 2x bf16 throughput, int32
-accumulation, one scale multiply per cluster.
+accumulation, one scale multiply per cluster.  Both entry points wrap the
+shared builders in ``kernels/_common`` (``packed_qmm_call`` /
+``fused_qmm_call``) with the identity decode: raw int8 storage, the tile IS
+the mantissas (words_per_k=1).
 """
 from __future__ import annotations
 
@@ -10,36 +13,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.kernels._common import fused_qmm_call
-
-try:
-    from jax.experimental.pallas import tpu as pltpu
-
-    _COMPILER_PARAMS = pltpu.CompilerParams(
-        dimension_semantics=("parallel", "parallel", "arbitrary")
-    )
-except Exception:  # pragma: no cover
-    _COMPILER_PARAMS = None
+from repro.kernels._common import fused_qmm_call, packed_qmm_call
 
 
-def _kernel(x_ref, w_ref, s_ref, out_ref, *, bk: int, group: int):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
-    x = x_ref[...]
-    w8 = w_ref[...]  # already int8 mantissas
-    acc = jnp.zeros(out_ref.shape, jnp.float32)
-    for s in range(bk // group):
-        xs = jax.lax.slice_in_dim(x, s * group, (s + 1) * group, axis=1)
-        ws = jax.lax.slice_in_dim(w8, s * group, (s + 1) * group, axis=0)
-        part = jax.lax.dot_general(
-            xs, ws, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
-        )
-        acc = acc + part.astype(jnp.float32) * s_ref[s, :].astype(jnp.float32)[None, :]
-    out_ref[...] += acc
+def _decode_raw(words: jnp.ndarray, bk: int) -> jnp.ndarray:
+    return words  # raw int8 storage: the tile IS the mantissas
 
 
 @functools.partial(
@@ -56,31 +35,12 @@ def int8_matmul(
     block_k: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    m, k = x_q.shape
-    n = w_q.shape[1]
-    bm, bn = min(block_m, m), min(block_n, n)
-    bk = min(block_k, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
-    assert bk % group == 0, (bk, group)
-
-    kern = functools.partial(_kernel, bk=bk, group=group)
-    return pl.pallas_call(
-        kern,
-        grid=(m // bm, n // bn, k // bk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=None if interpret else _COMPILER_PARAMS,
+    return packed_qmm_call(
+        x_q, w_q, scale_m,
+        decode=_decode_raw, words_per_k=1, group=group,
+        block_m=block_m, block_n=block_n, block_k=block_k,
         interpret=interpret,
-    )(x_q, w_q, scale_m)
-
-
-def _decode_raw(words: jnp.ndarray, bk: int) -> jnp.ndarray:
-    return words  # raw int8 storage: the tile IS the mantissas
+    )
 
 
 @functools.partial(

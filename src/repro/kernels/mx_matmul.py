@@ -1,0 +1,34 @@
+"""mx-format matmul kernels: int8 storage, all-shift block scales.
+
+The mx format is the microscaling-style variant of the paper's DFP clusters:
+every 32-element block along K shares one power-of-two scale and nothing
+else.  Its QTensor scale table carries that as ``scale_m`` values restricted
+to exact powers of two (1, 2, 4, ... 64) over a shared ``scale_e`` base --
+the scale's DFP mantissa is 1 in the floating-point sense, so the
+per-cluster "multiply" is a pure exponent shift.  Multiplying an int32
+partial by an exact power-of-two f32 never rounds, so on today's kernels the
+shift is realized as that multiply bit-exactly; integer hardware realizes it
+as a barrel shift on the partial, which is the paper's
+multiplication-elimination argument taken one step further than ternary:
+int8 mantissa products on the MXU, *zero* true scale multiplies per cluster.
+
+EXECUTION is identical to the int8 format -- raw int8 mantissas (1 B/weight
+HBM stream), per-cluster scale application, int32 accumulation.  All of the
+mx-ness lives in ``quant/formats._mx_weight_codes`` (what the scale table is
+allowed to contain), so the kernels ARE the int8 kernels, aliased rather
+than copied: any tuning or fix to ``int8_matmul`` (block heuristics,
+compiler params, accumulation order) applies to mx automatically instead of
+silently diverging.  The aliases keep mx a first-class registry citizen with
+its own kernel module, per the format-authoring contract
+(docs/WRITING_A_FORMAT.md); a future mx kernel that exploits the shift-only
+scales natively (e.g. int32 shifts before a single f32 convert) replaces
+these aliases without touching the registry.
+"""
+from __future__ import annotations
+
+from repro.kernels.int8_matmul import int8_matmul, int8_matmul_fused
+
+# signatures and semantics: see int8_matmul / int8_matmul_fused.  scale_m is
+# additionally guaranteed (by the mx encoder) to hold only powers of two.
+mx_matmul = int8_matmul
+mx_matmul_fused = int8_matmul_fused

@@ -1,11 +1,14 @@
-"""Pallas TPU kernel: int8 activations x packed 4-bit DFP weights.
+"""Pallas TPU kernel: int8 activations x packed 4-bit NormalFloat weights.
 
-Same tiling/accumulation structure as ternary_matmul (see that module), with
-4-bit two's-complement decode (8 weights per uint32 word -> 4x HBM traffic
-reduction vs bf16) and per-cluster 8-bit scale mantissas.  Both entry points
-wrap the shared builders in ``kernels/_common`` (``packed_qmm_call`` /
-``fused_qmm_call``): the grid/BlockSpec scaffolding is format-independent,
-only the tile decode differs.
+Same tiling/accumulation structure as int4_matmul (8 codes per uint32 word,
+4x HBM traffic reduction vs bf16), but the 4-bit fields are *lookup-table
+indices*, not two's-complement mantissas: each code selects one of the 16
+NF4 quantiles, stored on the int8 grid (``repro.core.quantizer.NF4_LUT_I8``)
+so the decoded tile feeds the MXU int8 contraction exactly like every other
+format.  The per-cluster scale is the cluster's absmax / 127, re-quantized
+to 8-bit DFP -- one multiply per cluster, the paper's arithmetic budget,
+with the LUT soaking up the normal-shaped weight distribution that a uniform
+int4 grid wastes codes on.
 """
 from __future__ import annotations
 
@@ -14,8 +17,8 @@ import functools
 import jax
 
 from repro.kernels._common import (
-    INT4_PER_WORD,
-    decode4_tile,
+    NF4_PER_WORD,
+    decode_nf4_tile,
     fused_qmm_call,
     packed_qmm_call,
 )
@@ -24,9 +27,9 @@ from repro.kernels._common import (
 @functools.partial(
     jax.jit, static_argnames=("group", "block_m", "block_n", "block_k", "interpret")
 )
-def int4_matmul(
+def nf4_matmul(
     x_q: jax.Array,  # int8 (M, K)
-    packed: jax.Array,  # uint32 (K/8, N)
+    packed: jax.Array,  # uint32 (K/8, N) of 4-bit LUT codes
     scale_m: jax.Array,  # int8 (K/group, N)
     *,
     group: int,
@@ -37,7 +40,7 @@ def int4_matmul(
 ) -> jax.Array:
     return packed_qmm_call(
         x_q, packed, scale_m,
-        decode=decode4_tile, words_per_k=INT4_PER_WORD, group=group,
+        decode=decode_nf4_tile, words_per_k=NF4_PER_WORD, group=group,
         block_m=block_m, block_n=block_n, block_k=block_k,
         interpret=interpret,
     )
@@ -50,9 +53,9 @@ def int4_matmul(
         "block_m", "block_n", "block_k", "interpret",
     ),
 )
-def int4_matmul_fused(
+def nf4_matmul_fused(
     x: jax.Array,  # f32/bf16 (M, K) RAW activations (quantized in-kernel)
-    packed: jax.Array,  # uint32 (K/8, N)
+    packed: jax.Array,  # uint32 (K/8, N) of 4-bit LUT codes
     scale_m: jax.Array,  # int8 (K/group, N)
     scale_e: jax.Array,  # int32 scalar
     *,
@@ -66,11 +69,11 @@ def int4_matmul_fused(
     block_k: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """Whole dense site in one pallas_call: quantize prologue + int4 matmul
-    + exp2/bias/activation epilogue (exponents applied in-kernel)."""
+    """Whole dense site in one pallas_call: quantize prologue + in-kernel
+    16-entry-LUT nf4 decode + matmul + exp2/bias/activation epilogue."""
     return fused_qmm_call(
         x, packed, scale_m, scale_e,
-        decode=decode4_tile, words_per_k=INT4_PER_WORD, n=packed.shape[1],
+        decode=decode_nf4_tile, words_per_k=NF4_PER_WORD, n=packed.shape[1],
         group=group, bias=bias, act=act, act_bits=act_bits,
         act_exponent=act_exponent, block_m=block_m, block_n=block_n,
         block_k=block_k, interpret=interpret,

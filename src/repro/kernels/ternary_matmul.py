@@ -12,45 +12,23 @@ revisiting the same (bm, bn) output tile.  Per k-step:
   4. accumulate into the f32 output tile.
 
 Shared exponents (weight scale_e + activation e) are powers of two applied
-by the ops.py wrapper outside the kernel.
+by the ops.py wrapper outside the kernel.  Both entry points wrap the shared
+builders in ``kernels/_common`` (``packed_qmm_call`` / ``fused_qmm_call``):
+the scaffolding above is format-independent, only the 2-bit tile decode is
+ternary's own.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.kernels._common import TERNARY_PER_WORD, decode2_tile, fused_qmm_call
-
-try:  # TPU-specific scheduling hints; absent on CPU-only installs is fine
-    from jax.experimental.pallas import tpu as pltpu
-
-    _COMPILER_PARAMS = pltpu.CompilerParams(
-        dimension_semantics=("parallel", "parallel", "arbitrary")
-    )
-except Exception:  # pragma: no cover
-    _COMPILER_PARAMS = None
-
-
-def _kernel(x_ref, w_ref, s_ref, out_ref, *, bk: int, group: int):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
-    w8 = decode2_tile(w_ref[...], bk)  # (bk, bn) int8 in {-1,0,1}
-    x = x_ref[...]  # (bm, bk) int8
-    acc = jnp.zeros(out_ref.shape, jnp.float32)
-    for s in range(bk // group):
-        xs = jax.lax.slice_in_dim(x, s * group, (s + 1) * group, axis=1)
-        ws = jax.lax.slice_in_dim(w8, s * group, (s + 1) * group, axis=0)
-        part = jax.lax.dot_general(
-            xs, ws, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
-        )
-        sc = s_ref[s, :].astype(jnp.float32)  # one multiply per cluster
-        acc = acc + part.astype(jnp.float32) * sc[None, :]
-    out_ref[...] += acc
+from repro.kernels._common import (
+    TERNARY_PER_WORD,
+    decode2_tile,
+    fused_qmm_call,
+    packed_qmm_call,
+)
 
 
 @functools.partial(
@@ -67,27 +45,12 @@ def ternary_matmul(
     block_k: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    m, k = x_q.shape
-    n = packed.shape[1]
-    bm, bn = min(block_m, m), min(block_n, n)
-    bk = min(block_k, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
-    assert bk % group == 0 and bk % TERNARY_PER_WORD == 0, (bk, group)
-
-    kern = functools.partial(_kernel, bk=bk, group=group)
-    return pl.pallas_call(
-        kern,
-        grid=(m // bm, n // bn, k // bk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk // TERNARY_PER_WORD, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=None if interpret else _COMPILER_PARAMS,
+    return packed_qmm_call(
+        x_q, packed, scale_m,
+        decode=decode2_tile, words_per_k=TERNARY_PER_WORD, group=group,
+        block_m=block_m, block_n=block_n, block_k=block_k,
         interpret=interpret,
-    )(x_q, packed, scale_m)
+    )
 
 
 @functools.partial(

@@ -80,7 +80,8 @@ def boot_from_artifact(artifact_dir: str, mesh=None):
 def boot_quantize(args, mesh=None):
     """Quantize-on-boot: init fp params, PTQ (optionally calibrated)."""
     qc = QuantConfig(w_bits=args.bits, group_size=args.group_size,
-                     mode="ptq", backend=args.backend)
+                     mode="ptq", backend=args.backend,
+                     fmt=getattr(args, "fmt", None))
     cfg = (configs.get_smoke if args.smoke else configs.get_config)(args.arch, qc)
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
@@ -115,6 +116,9 @@ def main():
                          "(replaces --arch/--calibrate: no fp32, no requant)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--bits", type=int, default=2, choices=[2, 4, 8])
+    ap.add_argument("--fmt", default=None, metavar="NAME",
+                    help="registered weight format by name (e.g. nf4, mx); "
+                         "overrides the --bits ladder for default sites")
     ap.add_argument("--group-size", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)

@@ -68,6 +68,7 @@ def dense(
                 prec.group_size,
                 prec.filter_size,
                 prec.refit_scale,
+                fmt=prec.fmt,
             ).astype(x.dtype)
             xq = ste.act_ste(x.astype(jnp.float32), prec.act_bits).astype(x.dtype)
             y = xq @ wq

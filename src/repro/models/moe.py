@@ -108,7 +108,7 @@ def _expert_matmul(w, x, path: str, ctx: QuantCtx, prec=None, buf_axes=None) -> 
         wq = jax.vmap(
             lambda we: ste.weights_ste(
                 we.astype(jnp.float32), prec.w_bits, prec.group_size,
-                prec.filter_size, prec.refit_scale,
+                prec.filter_size, prec.refit_scale, fmt=prec.fmt,
             )
         )(w).astype(x.dtype)
         xq = ste.act_ste(x.astype(jnp.float32), prec.act_bits).astype(x.dtype)

@@ -25,13 +25,16 @@ dims shard instead.
 QTensor leaves are first-class: ``param_spec`` dispatches on the *logical*
 (K, N) shape a QTensor carries -- not the packed payload shape, whose K dim
 is divided by the words-per-uint32 packing factor (16 for ternary, 8 for
-int4) -- and ``qtensor_shardings`` expands the one logical decision into
-consistent per-field specs: the packed payload inherits the weight spec
-(packing preserves which dim is which), the scale table follows its cluster
-(K/group) axis, and the shared exponent replicates.  A K assignment is taken
-only when the mesh axis divides the logical K *and* the packed K *and* the
-scale-table K -- otherwise the whole QTensor falls back together, so payload
-and scales can never disagree about their layout.
+int4 and nf4, 1 for raw-int8 storage: int8 and mx) -- and
+``qtensor_shardings`` expands the one logical decision into consistent
+per-field specs: the packed payload inherits the weight spec (packing
+preserves which dim is which), the scale table follows its cluster
+(K/group) axis (mx: the 32-element block axis), and the shared exponent
+replicates.  A K assignment is taken only when the mesh axis divides the
+logical K *and* the packed K *and* the scale-table K -- otherwise the whole
+QTensor falls back together, so payload and scales can never disagree about
+their layout.  Everything is derived from the QTensor's own shapes, so a
+newly registered format (nf4, mx) shards correctly with no rule changes.
 """
 from __future__ import annotations
 
@@ -136,7 +139,9 @@ def _qt_logical_shape(qt: QTensor) -> Tuple[int, ...]:
 
 
 def _qt_words_per_k(qt: QTensor) -> int:
-    """K rows per packed payload row (16 ternary, 8 int4, 1 raw int8)."""
+    """K rows per packed payload row (16 ternary, 8 int4/nf4, 1 for raw
+    int8 storage: int8 and mx) -- derived from the payload shape itself so
+    registered formats need no table here."""
     return max(1, qt.k // qt.packed.shape[-2])
 
 

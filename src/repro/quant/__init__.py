@@ -24,14 +24,19 @@ Migration from the legacy surfaces (still re-exported for compatibility):
 """
 from repro.quant.qtensor import (
     INT4_PER_WORD,
+    NF4_LUT_I8,
+    NF4_PER_WORD,
     TERNARY_PER_WORD,
     QTensor,
     dequantize_scales,
+    nf4_lut_decode,
     pack2,
     pack4,
+    pack4u,
     quantize_scales,
     unpack2,
     unpack4,
+    unpack4u,
 )
 from repro.quant.formats import (
     QuantFormat,

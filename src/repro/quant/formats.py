@@ -11,11 +11,20 @@ built-in formats reproduce the paper:
   * ``int4``    (bits=4): per-cluster DFP mantissas, max-abs scaling,
     8 codes per uint32.
   * ``int8``    (bits=8): per-cluster DFP mantissas, raw int8 storage.
+  * ``nf4``     (bits=4): NormalFloat lookup-table codes (QLoRA) against a
+    per-cluster absmax scale; 8 codes per uint32, decoded through a 16-entry
+    LUT on the int8 grid (in-kernel on the fused path).
+  * ``mx``      (bits=8): microscaling-style shared power-of-two exponent
+    per 32-element block (``block_size`` pinned to 32): the scale table
+    carries only exact powers of two, so dequantization is all shifts.
 
 New formats plug in with ``register_format`` and flow through every consumer
 (``quantize_weights``, ``qmatmul`` backends, PTQ conversion) without touching
 dispatch code -- this replaces the old ``bits == 2/4/8`` if-chains in
-``core/quantizer.py`` and ``kernels/ops.py``.
+``core/quantizer.py`` and ``kernels/ops.py``.  nf4 and mx deliberately share
+their bit-widths with int4 and int8: every QTensor is stamped with its
+resolved format *name*, and the ``_BY_BITS`` table only answers for legacy
+(empty-fmt) artifacts, where it keeps pointing at the built-in claimant.
 """
 from __future__ import annotations
 
@@ -27,16 +36,23 @@ import jax.numpy as jnp
 
 from repro.core import dfp, ternary
 from repro.core.quantizer import (
+    NF4_LUT_I8,
     QTensor,
     dequantize_scales,
+    nf4_lut_decode,
     pack2,
     pack4,
+    pack4u,
     quantize_scales,
     unpack2,
     unpack4,
+    unpack4u,
 )
+from repro.kernels._common import MX_BLOCK
 from repro.kernels.int4_matmul import int4_matmul, int4_matmul_fused
 from repro.kernels.int8_matmul import int8_matmul, int8_matmul_fused
+from repro.kernels.mx_matmul import mx_matmul, mx_matmul_fused
+from repro.kernels.nf4_matmul import nf4_matmul, nf4_matmul_fused
 from repro.kernels.ternary_matmul import ternary_matmul, ternary_matmul_fused
 
 # weight_codes: (w f32 (K, N), group_size, filter_size, refit_scale)
@@ -59,6 +75,10 @@ class QuantFormat:
     # exponents, bias and activation in one pallas_call (see
     # kernels/_common.fused_qmm_call for the signature contract)
     fused_kernel: Optional[Callable] = None
+    # formats whose encoding fixes the cluster length (mx: 32 elements per
+    # shared exponent) pin it here; quantize_weights then overrides the
+    # caller's group_size so the QTensor metadata always matches the scales
+    block_size: Optional[int] = None
 
 
 _FORMATS: Dict[str, QuantFormat] = {}
@@ -74,6 +94,7 @@ def register_format(
     weight_codes: WeightCodesFn,
     kernel: Optional[Callable] = None,
     fused_kernel: Optional[Callable] = None,
+    block_size: Optional[int] = None,
     overwrite: bool = False,
 ) -> QuantFormat:
     """Register a weight format under ``name`` (and as default for ``bits``
@@ -81,10 +102,36 @@ def register_format(
     if name in _FORMATS and not overwrite:
         raise ValueError(f"format {name!r} already registered")
     if overwrite and name in _FORMATS:
-        old_bits = _FORMATS[name].bits
+        old = _FORMATS[name]
+        old_bits = old.bits
         if old_bits != bits and _BY_BITS.get(old_bits) == name:
-            del _BY_BITS[old_bits]  # this name no longer encodes that width
-    fmt = QuantFormat(name, bits, encode, decode, weight_codes, kernel, fused_kernel)
+            # this name no longer encodes old_bits: hand the width default to
+            # a surviving claimant (first-registered wins, deterministically)
+            # instead of orphaning it -- deleting outright made
+            # format_for_bits(old_bits) raise for a width that resolved
+            # before the re-registration, even with other formats of that
+            # width still registered.  The default is only what legacy
+            # empty-fmt QTensors decode through, so a survivor qualifies
+            # ONLY with the departing claimant's exact codec (same
+            # encode/decode callables -- a re-registration of the same
+            # encoding under another name); handing the width to a format
+            # with different code semantics (e.g. int4 -> nf4's LUT) would
+            # silently mis-decode legacy payloads, where no default at all
+            # fails loudly
+            survivor = next(
+                (f.name for f in _FORMATS.values()
+                 if f.bits == old_bits and f.name != name
+                 and f.decode is old.decode and f.encode is old.encode),
+                None,
+            )
+            if survivor is not None:
+                _BY_BITS[old_bits] = survivor
+            else:
+                del _BY_BITS[old_bits]  # fail closed: no compatible claimant
+    fmt = QuantFormat(
+        name, bits, encode, decode, weight_codes, kernel, fused_kernel,
+        block_size,
+    )
     _FORMATS[name] = fmt
     # claim the bits default only if unclaimed or already owned by this name:
     # overwriting an unrelated format must not change how fmt="" QTensors
@@ -177,6 +224,109 @@ register_format(
 
 
 # ---------------------------------------------------------------------------
+# Sub-8-bit block formats beyond the paper: nf4 (LUT codes) and mx (shared
+# power-of-two block exponents).  Both registered AFTER the built-ins so the
+# bits defaults (4 -> int4, 8 -> int8) that legacy empty-fmt artifacts
+# resolve through stay untouched.
+# ---------------------------------------------------------------------------
+def _nf4_weight_codes(w, group_size, filter_size, refit_scale):
+    """Nearest-NF4-quantile codes against a per-cluster absmax scale.
+
+    The cluster scale is absmax / 127 (so code 15 -- LUT value +127 --
+    reconstructs the cluster max exactly), re-quantized to 8-bit DFP like
+    every other format's scale table.  Codes are chosen against the
+    *re-quantized* scale so (codes, scale table) stay self-consistent.
+    ``filter_size``/``refit_scale`` are Algorithm-2 knobs with no analogue
+    in a quantile LUT; they are accepted and ignored.
+    """
+    del filter_size, refit_scale
+    k, n = w.shape
+    blocks = w.reshape(k // group_size, group_size, n)
+    max_abs = jnp.max(jnp.abs(blocks), axis=1)  # (groups, N)
+    alpha = max_abs / float(NF4_LUT_I8[-1])  # int8-grid LUT: value 127 = max
+    scale_m, scale_e = quantize_scales(alpha)
+    scale = dequantize_scales(scale_m, scale_e)[:, None, :]
+    safe = jnp.where(scale > 0, scale, 1.0)
+    u = blocks / safe  # normalized onto the int8 LUT grid
+    # nearest quantile via the 15 decision midpoints (the LUT is sorted):
+    # equivalent to argmin |u - lut| without materializing the 16x-wider
+    # broadcast temporary (which OOMs quantize-on-boot at production scale)
+    lut = jnp.asarray(NF4_LUT_I8, jnp.float32)
+    mids = (lut[:-1] + lut[1:]) / 2.0
+    idx = jnp.searchsorted(mids, u.reshape(-1)).reshape(u.shape)
+    return idx.astype(jnp.int8).reshape(k, n), scale_m, scale_e
+
+
+def _nf4_decode(packed, k):
+    """packed LUT codes -> int8 mantissas (the jnp twin of the in-kernel
+    16-entry LUT; bit-identical by construction)."""
+    return nf4_lut_decode(unpack4u(packed, k))
+
+
+_MX_SCALE_BITS = 6  # scale_m spans 2**0 .. 2**6 (64 <= int8 max)
+
+
+def _mx_weight_codes(w, group_size, filter_size, refit_scale):
+    """int8 mantissas with one power-of-two exponent per 32-element block.
+
+    Per block b: e_b = choose_exponent(absmax_b, 8).  The shared QTensor base
+    is ``scale_e = max_b(e_b) - 6`` and each block stores
+    ``scale_m = 2**(e_b - scale_e)`` -- an exact power of two in [1, 64], so
+    every per-cluster scale application is an exponent shift, never a true
+    multiply.  Blocks more than 6 octaves below the loudest block clamp to
+    the base (their mantissas quantize on a coarser grid -- the price of the
+    shared int8 scale container; real mx hardware gives each block an
+    independent 8-bit exponent).  ``group_size`` is pinned to 32 by the
+    format's ``block_size``; ``filter_size``/``refit_scale`` do not apply.
+    """
+    del filter_size, refit_scale
+    assert group_size == MX_BLOCK, (
+        f"mx blocks are fixed at {MX_BLOCK} elements, got group_size={group_size}"
+    )
+    k, n = w.shape
+    blocks = w.reshape(k // MX_BLOCK, MX_BLOCK, n)
+    max_abs = jnp.max(jnp.abs(blocks), axis=1)  # (K/32, N)
+    e_b = dfp.choose_exponent(max_abs, bits=8)  # per-block int32
+    # the shared base is the loudest LIVE block: choose_exponent maps an
+    # all-zero block to e=0, far above real weight-block exponents (~-16),
+    # and letting a dead block (zero padding, pruned channel) into the max
+    # would clamp every live block to d=0 and quantize the whole tensor on
+    # a grid thousands of times coarser
+    live = max_abs > 0
+    e_base = jnp.max(jnp.where(live, e_b, jnp.iinfo(jnp.int32).min))
+    scale_e = jnp.where(jnp.any(live), e_base, 0) - _MX_SCALE_BITS
+    d = jnp.clip(e_b - scale_e, 0, _MX_SCALE_BITS)
+    scale_m = (jnp.int32(1) << d).astype(jnp.int8)  # exact powers of two
+    eff_e = scale_e + d  # the realized per-block exponent (>= e_b)
+    q = jnp.clip(
+        jnp.round(blocks * dfp.exp2i(-eff_e)[:, None, :]),
+        -dfp.qmax(8), dfp.qmax(8),
+    )
+    return q.astype(jnp.int8).reshape(k, n), scale_m, scale_e
+
+
+register_format(
+    "nf4",
+    bits=4,
+    encode=pack4u,
+    decode=_nf4_decode,
+    weight_codes=_nf4_weight_codes,
+    kernel=nf4_matmul,
+    fused_kernel=nf4_matmul_fused,
+)
+register_format(
+    "mx",
+    bits=8,
+    encode=lambda codes: codes,  # raw int8 storage (1 B/weight)
+    decode=lambda packed, k: packed,
+    weight_codes=_mx_weight_codes,
+    kernel=mx_matmul,
+    fused_kernel=mx_matmul_fused,
+    block_size=MX_BLOCK,
+)
+
+
+# ---------------------------------------------------------------------------
 # Generic weight quantization entry points (format-registry driven).
 # ---------------------------------------------------------------------------
 def quantize_weights(
@@ -193,14 +343,25 @@ def quantize_weights(
     else the default format for ``bits``.  In every case the scale table
     itself is re-quantized to 8-bit DFP so the whole pipeline stays
     sub-8-bit.
+
+    The QTensor is always stamped with the *resolved* format name -- even
+    when the caller selected by bits.  An empty ``fmt`` stamp re-resolves
+    through the mutable ``_BY_BITS`` table at every later decode, which is
+    ambiguous once two formats share a width (nf4/int4, mx/int8): the
+    artifact's meaning would depend on registry state at load time instead
+    of quantize time.  ``format_of`` still accepts legacy empty-fmt
+    QTensors (pre-fix checkpoints) via the bits default, which registration
+    keeps pointed at the built-ins.
     """
     k, n = w.shape
     w = w.astype(jnp.float32)
     f = get_format(fmt) if fmt else format_for_bits(bits)
+    if f.block_size is not None:
+        group_size = f.block_size  # format-fixed cluster length (mx: 32)
     codes, scale_m, scale_e = f.weight_codes(w, group_size, filter_size, refit_scale)
     return QTensor(
         f.encode(codes), scale_m, scale_e, f.bits, group_size, (k, n),
-        fmt=f.name if fmt else "",
+        fmt=f.name,
     )
 
 
@@ -219,11 +380,15 @@ def dequantize_weights(qt: QTensor) -> jax.Array:
 
 def fake_quantize_weights(
     w: jax.Array, bits: int, group_size: int, filter_size: int = 1,
-    refit_scale: bool = False,
+    refit_scale: bool = False, fmt: Optional[str] = None,
 ) -> jax.Array:
-    """quantize -> dequantize (QAT forward / error measurement)."""
+    """quantize -> dequantize (QAT forward / error measurement).
+
+    ``fmt`` resolves a named format exactly like ``quantize_weights`` --
+    QAT on nf4/mx must adapt the weights to the LUT/shift grid they will
+    actually deploy on, not the bits-default uniform grid."""
     return dequantize_weights(
-        quantize_weights(w, bits, group_size, filter_size, refit_scale)
+        quantize_weights(w, bits, group_size, filter_size, refit_scale, fmt=fmt)
     )
 
 

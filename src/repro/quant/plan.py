@@ -232,7 +232,11 @@ class QuantCtx:
         """Build the pre-compile ctx from a configs.base.QuantConfig."""
         if q.mode == "fp":
             return cls.fp()
-        if q.w_bits == 2:
+        if getattr(q, "fmt", None):  # named registered format (nf4, mx, ...)
+            pol = PrecisionPolicy.for_format(
+                q.fmt, q.group_size, q.filter_size, q.refit_scale
+            )
+        elif q.w_bits == 2:
             pol = PrecisionPolicy.ternary(q.group_size, q.filter_size, q.refit_scale)
         elif q.w_bits == 4:
             pol = PrecisionPolicy.int4(q.group_size)

@@ -6,12 +6,17 @@ See that module's docstring for the storage layout.
 """
 from repro.core.quantizer import (  # noqa: F401
     INT4_PER_WORD,
+    NF4_LUT_I8,
+    NF4_PER_WORD,
     TERNARY_PER_WORD,
     QTensor,
     dequantize_scales,
+    nf4_lut_decode,
     pack2,
     pack4,
+    pack4u,
     quantize_scales,
     unpack2,
     unpack4,
+    unpack4u,
 )

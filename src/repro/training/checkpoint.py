@@ -16,7 +16,12 @@ through a registered ``LeafCodec``.  The built-in ``qtensor`` codec makes
 packed quantized weights first-class on disk -- a QTensor leaf becomes its
 packed payload + scale table + scalar exponent (one sha256-checked .npy per
 payload) plus static metadata (bits/group_size/shape/format tag) in the
-manifest.  A checkpoint can also carry a compiled ``QuantPlan``: ``save``
+manifest.  Payload shapes are format-specific projections of the logical
+(K, N) -- ternary packs K/16 uint32 rows, int4/nf4 K/8, int8/mx store K raw
+int8 rows, and mx scale tables have one row per 32-element block -- but the
+codec never interprets them: each payload records its own shape/dtype and
+the format tag tells the decode side which registry entry owns the bytes,
+so new formats round-trip with no codec changes.  A checkpoint can also carry a compiled ``QuantPlan``: ``save``
 writes ``quant_plan.json`` next to the arrays and records its sha256 under
 the manifest's ``quant_plan`` section; ``_verify`` validates it like any
 payload, so a truncated plan can never restore as "unquantized".

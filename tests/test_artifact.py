@@ -101,6 +101,83 @@ def _flat_qts(tree):
     ]
 
 
+@pytest.mark.parametrize("fmt", ["nf4", "mx"])
+def test_artifact_roundtrip_block_formats(fmt, tmp_path):
+    """nf4/mx artifacts round-trip packed (payload projections differ per
+    format: nf4 packs K/8 uint32 rows like int4, mx stores raw int8 plus a
+    K/32 block-scale table) and cold-start decode is bit-identical."""
+    cfg = configs.get_smoke(
+        "qwen3-8b",
+        QuantConfig(
+            w_bits=4 if fmt == "nf4" else 8, group_size=16, mode="ptq",
+            backend="xla", fmt=fmt,
+        ),
+    )
+    api = build_model(cfg)
+    params = api.init(KEY)
+    qparams, plan, qapi = quantize_and_plan(api, params)
+    fmts = {qt.fmt for _, qt in _flat_qts(qparams)}
+    assert fmt in fmts  # default sites actually use the named format
+
+    save_servable(str(tmp_path), qapi, qparams, plan)
+    cold_api, cold_params, art = load_servable(str(tmp_path))
+    _assert_trees_bit_exact(qparams, cold_params)
+    for path, qt in _flat_qts(cold_params):
+        ref = dict(_flat_qts(qparams))[path]
+        assert (qt.bits, qt.group_size, qt.shape, qt.fmt) == (
+            ref.bits, ref.group_size, ref.shape, ref.fmt
+        ), path
+    assert art.plan.to_json() == plan.to_json()
+
+    tok = jnp.asarray([[3]], jnp.int32)
+    l_mem, _ = qapi.decode(qparams, tok, jnp.int32(0), qapi.init_cache(1, 8))
+    l_cold, _ = cold_api.decode(
+        cold_params, tok, jnp.int32(0), cold_api.init_cache(1, 8)
+    )
+    assert np.array_equal(np.asarray(l_mem), np.asarray(l_cold))
+
+
+def test_legacy_empty_fmt_manifest_resolves_by_bits(tmp_path):
+    """Pre-fix artifacts stamped fmt="" (bits-resolved QTensors) must keep
+    loading and resolving through the bits default -- which registration
+    keeps pointed at the built-ins even though nf4/mx now share those
+    widths.  Simulates a pre-fix manifest by blanking the stored fmt tags."""
+    from repro.quant.formats import format_of
+
+    qapi, qparams, plan = _quantized("qwen3-8b", 4)
+    save_servable(str(tmp_path), qapi, qparams, plan)
+    d = tmp_path / "step_000000000"
+    mpath = d / "manifest.json"
+    man = json.loads(mpath.read_text())
+    blanked = 0
+    for node in man["nodes"].values():
+        if node["codec"] == "qtensor" and node["meta"].get("fmt"):
+            node["meta"]["fmt"] = ""  # what a pre-fix writer stored
+            blanked += 1
+    assert blanked  # post-fix writers always stamp a name
+    mpath.write_text(json.dumps(man))  # meta is not payload-checksummed
+
+    _, cold_params, _ = load_servable(str(tmp_path))
+    legacy = dict(_flat_qts(cold_params))
+    assert legacy
+    for path, qt in legacy.items():
+        assert qt.fmt == ""  # the artifact really is legacy-shaped
+        want = {2: "ternary", 4: "int4", 8: "int8"}[qt.bits]
+        assert format_of(qt).name == want, path  # bits default, not nf4/mx
+        ref = dict(_flat_qts(qparams))[path]
+        # bits-resolution decodes the payload identically to the stamped
+        # original (leading stacked-layer axes decode per-matrix)
+        dec = format_of(qt).decode
+        unstack = lambda a: a.reshape((-1,) + a.shape[-2:])
+        got = [dec(p, qt.k) for p in unstack(qt.packed)]
+        exp = [dec(p, ref.k) for p in unstack(ref.packed)]
+        for g, e in zip(got, exp):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+        np.testing.assert_array_equal(
+            np.asarray(qt.scale_m), np.asarray(ref.scale_m)
+        )
+
+
 def test_config_dict_roundtrip():
     cfg = configs.get_smoke("qwen3-8b", QuantConfig(w_bits=4, mode="ptq"))
     blob = json.dumps(config_to_dict(cfg))  # must be JSON-safe

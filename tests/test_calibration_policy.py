@@ -31,10 +31,38 @@ def test_static_vs_dynamic_quantization_agree_on_seen_range():
 
 
 def test_recalibrate_gamma_restores_rms():
-    """The BN-recompute analogue: rescaled gain matches fp second moments."""
+    """The BN-recompute analogue with TRUE RMS inputs: scaling activations
+    by c scales RMS by c, so the gain absorbs the plain ratio (the old
+    sqrt-of-ratio behavior assumed mean-square inputs)."""
     gamma = jnp.ones((8,))
-    g2 = calibration.recalibrate_gamma(gamma, rms_fp=jnp.asarray(4.0), rms_q=jnp.asarray(1.0))
-    assert float(g2[0]) == pytest.approx(2.0, rel=1e-3)
+    g2 = calibration.recalibrate_gamma(
+        gamma, rms_fp=jnp.asarray(4.0), rms_q=jnp.asarray(1.0)
+    )
+    assert float(g2[0]) == pytest.approx(4.0, rel=1e-3)
+
+
+def test_rms_observer_contract_analytic_gain_ratio():
+    """Regression for the mean-square-vs-RMS contract bug:
+    ``rms_from_observer`` must return sqrt(E[x^2]) (batch-averaged), and
+    feeding its outputs to ``recalibrate_gamma`` must reproduce the
+    analytically known gain ratio when the quantized site is a scaled copy
+    of the fp site.  Pre-fix, the pair returned mean squares + sqrt'd the
+    ratio -- self-consistent, but a caller passing a true RMS (the
+    documented contract) got a half-strength (sqrt) correction."""
+    c = 0.5  # "quantization" that exactly halves every activation
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64,)), jnp.float32)
+    st = calibration.init_observer()
+    st = calibration.observe(st, "s", x)
+    st = calibration.observe(st, "s", x)  # two batches: exercises count avg
+    st_q = calibration.observe(calibration.init_observer(), "s", c * x)
+
+    rms_fp = calibration.rms_from_observer(st, "s")
+    rms_q = calibration.rms_from_observer(st_q, "s")
+    want = float(jnp.sqrt(jnp.mean(jnp.square(x))))
+    assert float(rms_fp) == pytest.approx(want, rel=1e-6)
+    assert float(rms_q) == pytest.approx(c * want, rel=1e-6)
+    g = calibration.recalibrate_gamma(jnp.ones(()), rms_fp, rms_q, eps=0.0)
+    assert float(g) == pytest.approx(1.0 / c, rel=1e-5)
 
 
 def test_policy_paper_rules():

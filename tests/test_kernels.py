@@ -8,21 +8,35 @@ from repro.core.quantizer import quantize_weights
 from repro.kernels import ops, ref
 from repro.kernels.int4_matmul import int4_matmul
 from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.mx_matmul import mx_matmul
+from repro.kernels.nf4_matmul import nf4_matmul
 from repro.kernels.quantize import quantize_rows
 from repro.kernels.ternary_matmul import ternary_matmul
 
-KERNELS = {2: ternary_matmul, 4: int4_matmul, 8: int8_matmul}
+# every registered format's packed-matmul kernel (2/4/8 keep their legacy
+# bits keys; nf4 and mx are name-keyed since their widths collide).  Widths
+# for the named formats come from the registry so they can never drift.
+from repro.quant import get_format
+
+KERNELS = {2: ternary_matmul, 4: int4_matmul, 8: int8_matmul,
+           "nf4": nf4_matmul, "mx": mx_matmul}
+_FMT_BITS = {2: 2, 4: 4, 8: 8,
+             "nf4": get_format("nf4").bits, "mx": get_format("mx").bits}
 
 
 def _setup(m, k, n, g, bits, seed=0):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
-    qt = quantize_weights(jnp.asarray(rng.normal(size=(k, n)), jnp.float32), bits, g)
+    fmt = bits if isinstance(bits, str) else None
+    qt = quantize_weights(
+        jnp.asarray(rng.normal(size=(k, n)), jnp.float32),
+        _FMT_BITS[bits], g, fmt=fmt,
+    )
     xq, xe = ref.quantize_rows_ref(x, 8)
     return x, xq, xe, qt
 
 
-@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("bits", [2, 4, 8, "nf4", "mx"])
 @pytest.mark.parametrize(
     "m,k,n,g,bk",
     [
@@ -34,6 +48,7 @@ def _setup(m, k, n, g, bits, seed=0):
 )
 def test_qmm_kernels_exact_vs_ref(bits, m, k, n, g, bk):
     x, xq, xe, qt = _setup(m, k, n, g, bits)
+    g = qt.group_size  # mx pins its own 32-element block
     want_int = ref.qmatmul_ref(xq, xe, qt)
     kern = KERNELS[bits]
     raw = kern(
@@ -44,7 +59,7 @@ def test_qmm_kernels_exact_vs_ref(bits, m, k, n, g, bk):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want_int), rtol=1e-6)
 
 
-@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("bits", [2, 4, 8, "nf4", "mx"])
 def test_ops_qmatmul_backends_agree(bits):
     x, xq, xe, qt = _setup(16, 256, 64, 64, bits, seed=3)
     want = ref.qmatmul_ref(xq, xe, qt)

@@ -1,15 +1,20 @@
-"""Hypothesis property tests for the quantization core."""
-import pytest
+"""Property tests for the quantization core.
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed in this image")
+Runs under real hypothesis when installed (declared in
+requirements-dev.txt); falls back to the deterministic sampling shim in
+``tests/_proptest.py`` otherwise, so this suite is never skipped -- it was
+silently dead from the seed through PR 4 because the image lacks the
+dependency."""
+import os
+import sys
 
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import assume, given, settings
 
-from repro.core import dfp, quantizer, ternary
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _proptest import assume, given, hnp, settings, st  # noqa: E402,F401
+
+from repro.core import dfp, quantizer, ternary  # noqa: E402
 
 F32 = hnp.arrays(
     np.float32,
@@ -130,3 +135,85 @@ def test_qtensor_roundtrip_structure(w, bits):
     scales = np.asarray(quantizer.dequantize_scales(qt.scale_m, qt.scale_e))
     step = 2.0 ** float(qt.scale_e)
     assert np.allclose(scales / step, np.round(scales / step), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# nf4: unsigned LUT-code pack/unpack contracts.
+# ---------------------------------------------------------------------------
+@given(hnp.arrays(np.int8, (32, 4), elements=st.integers(0, 15)))
+@settings(max_examples=25, deadline=None)
+def test_pack4u_roundtrip(codes):
+    """pack4u/unpack4u are exact inverses over the unsigned code range."""
+    packed = quantizer.pack4u(jnp.asarray(codes))
+    assert packed.shape == (4, 4) and packed.dtype == jnp.uint32
+    assert (np.asarray(quantizer.unpack4u(packed, 32)) == codes).all()
+
+
+@given(hnp.arrays(np.int8, (16, 2), elements=st.integers(0, 15)))
+@settings(max_examples=25, deadline=None)
+def test_nf4_decode_is_lut_of_codes(codes):
+    """Packed-nf4 decode == LUT applied to the unpacked codes, values on the
+    int8 LUT grid (the range contract the kernels' in-VMEM LUT mirrors)."""
+    lut = np.asarray(quantizer.NF4_LUT_I8, np.int8)
+    packed = quantizer.pack4u(jnp.asarray(codes))
+    dec = np.asarray(quantizer.nf4_lut_decode(quantizer.unpack4u(packed, 16)))
+    assert (dec == lut[codes.astype(np.int32)]).all()
+    assert dec.dtype == np.int8 and set(dec.flatten()) <= set(lut.tolist())
+
+
+def test_pack4u_rejects_out_of_range():
+    """The unsigned range contract is asserted on concrete inputs."""
+    import pytest
+
+    with pytest.raises(AssertionError):
+        quantizer.pack4u(jnp.full((8, 2), 16, jnp.int8))
+    with pytest.raises(AssertionError):
+        quantizer.pack4u(jnp.full((8, 2), -1, jnp.int8))
+
+
+@given(hnp.arrays(np.float32, (64, 3), elements=st.floats(-50, 50, width=32)))
+@settings(max_examples=20, deadline=None)
+def test_nf4_qtensor_range_and_grid(w):
+    """nf4 QTensors: packed codes in [0, 15], decoded mantissas on the LUT
+    grid, reconstruction == codes x dequantized scale table exactly."""
+    from repro.quant import formats
+
+    qt = formats.quantize_weights(jnp.asarray(w), group_size=16, fmt="nf4")
+    codes = np.asarray(quantizer.unpack4u(qt.packed, 64))
+    assert codes.min() >= 0 and codes.max() <= 15
+    dec = np.asarray(formats.decode_codes(qt))
+    assert set(dec.flatten()) <= set(quantizer.NF4_LUT_I8)
+    scales = np.asarray(quantizer.dequantize_scales(qt.scale_m, qt.scale_e))
+    want = (dec.astype(np.float32).reshape(4, 16, 3) * scales[:, None, :])
+    np.testing.assert_array_equal(
+        np.asarray(formats.dequantize_weights(qt)), want.reshape(64, 3)
+    )
+
+
+# ---------------------------------------------------------------------------
+# mx: shared power-of-two block exponents (all-shift scale contract).
+# ---------------------------------------------------------------------------
+@given(hnp.arrays(np.float32, (64, 3), elements=st.floats(-50, 50, width=32)))
+@settings(max_examples=20, deadline=None)
+def test_mx_qtensor_shift_only_scales(w):
+    """mx QTensors: every scale mantissa is an exact power of two in
+    [1, 64] (the all-shift dequant contract), mantissas stay in the
+    symmetric int8 range, and the block length is pinned to 32."""
+    from repro.quant import formats
+
+    qt = formats.quantize_weights(jnp.asarray(w), group_size=16, fmt="mx")
+    assert qt.group_size == 32  # format-pinned block, caller's 16 overridden
+    sm = np.asarray(qt.scale_m).astype(np.int32)
+    assert ((sm > 0) & ((sm & (sm - 1)) == 0)).all() and sm.max() <= 64
+    codes = np.asarray(formats.decode_codes(qt))
+    assert np.abs(codes.astype(np.int32)).max() <= dfp.qmax(8)
+    # the loudest block reconstructs within half a step of its own exponent
+    rec = np.asarray(formats.dequantize_weights(qt))
+    blocks = w.reshape(2, 32, 3)
+    rblocks = rec.reshape(2, 32, 3)
+    eff = np.log2(np.asarray(
+        quantizer.dequantize_scales(qt.scale_m, qt.scale_e), np.float64))
+    loud = np.unravel_index(np.argmax(np.abs(blocks).max(1)), (2, 3))
+    g, c = loud
+    step = 2.0 ** eff[g, c]
+    assert np.abs(blocks[g, :, c] - rblocks[g, :, c]).max() <= step / 2 + 1e-6

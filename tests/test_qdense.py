@@ -18,12 +18,23 @@ from repro.serving import Request, ServingEngine
 KEY = jax.random.PRNGKey(0)
 
 
-def _site(m, k, n, g, bits, seed=0, bias=False):
+# every registered weight encoding the fused pipeline must be bit-exact on:
+# the paper's three plus the two sub-8-bit block formats (nf4 shares int4's
+# width, mx shares int8's -- the registry collision case).  Bit widths come
+# from the registry itself so this table can never drift from the formats.
+from repro.quant import get_format
+
+FMTS = ("ternary", "int4", "int8", "nf4", "mx")
+_FMT_BITS = {f: get_format(f).bits for f in FMTS}
+
+
+def _site(m, k, n, g, fmt, seed=0, bias=False):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
     b = jnp.asarray(rng.normal(size=(n,)), jnp.float32) if bias else None
-    return x, quantize_weights(w, bits, g), b
+    fmt = {2: "ternary", 4: "int4", 8: "int8"}.get(fmt, fmt)
+    return x, quantize_weights(w, _FMT_BITS[fmt], g, fmt=fmt), b
 
 
 # ---------------------------------------------------------------------------
@@ -41,14 +52,15 @@ def test_exp2i_exact_powers_of_two():
 # ---------------------------------------------------------------------------
 # Fused kernel vs the ref oracle: bit-identical in interpret mode.
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("fmt", FMTS)
 @pytest.mark.parametrize("static_e", [None, -4])
 @pytest.mark.parametrize("bias", [False, True])
 @pytest.mark.parametrize("act", [None, "silu"])
-def test_qdense_fused_bit_exact_vs_ref(bits, static_e, bias, act):
+def test_qdense_fused_bit_exact_vs_ref(fmt, static_e, bias, act):
     # m=7 exercises the bucket padding; block_k=32 < K exercises the
-    # multi-k-step accumulation + last-step epilogue
-    x, qt, b = _site(7, 64, 32, 16, bits, seed=bits, bias=bias)
+    # multi-k-step accumulation + last-step epilogue (mx pins its own
+    # 32-block, so block_k=32 also means one cluster per k-step there)
+    x, qt, b = _site(7, 64, 32, 16, fmt, seed=_FMT_BITS[fmt], bias=bias)
     got = qdense(
         x, qt, bias=b, act=act, backend="pallas",
         act_exponent=static_e, block_k=32,
@@ -58,7 +70,7 @@ def test_qdense_fused_bit_exact_vs_ref(bits, static_e, bias, act):
         act_exponent=static_e, block_k=32,
     )
     assert np.array_equal(np.asarray(got), np.asarray(want)), (
-        f"fused/{bits}b static={static_e} bias={bias} act={act}"
+        f"fused/{fmt} static={static_e} bias={bias} act={act}"
     )
 
 
@@ -116,7 +128,7 @@ def test_format_without_fused_kernel_falls_back_unfused():
     assert np.array_equal(np.asarray(got), np.asarray(want))
 
 
-@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("bits", FMTS)
 def test_fused_site_materializes_one_full_tensor(bits):
     """The fused dense site is ONE kernel: its jaxpr has exactly one
     equation producing a full-size tensor (the pallas_call), while the
@@ -267,12 +279,18 @@ def test_step_runs_under_d2h_transfer_guard():
     assert seen["guard"] == "disallow"
 
 
-@pytest.mark.parametrize("bits", [2, 4, 8])
-def test_fused_engine_matches_artifact_path_tokens(bits, tmp_path):
+@pytest.mark.parametrize("fmt", FMTS)
+def test_fused_engine_matches_artifact_path_tokens(fmt, tmp_path):
     """Serving through the fused pallas decode emits tokens bit-identical to
-    the PR-2 artifact path served through the ref oracle."""
+    the PR-2 artifact path served through the ref oracle -- for every
+    registered format, the new block formats included (cold-start from the
+    packed artifact, so this is also their save/load decode-parity cell)."""
     cfg = configs.get_smoke(
-        "qwen3-8b", QuantConfig(w_bits=bits, group_size=16, mode="ptq", backend="xla")
+        "qwen3-8b",
+        QuantConfig(
+            w_bits=_FMT_BITS[fmt], group_size=16, mode="ptq", backend="xla",
+            fmt=fmt if fmt in ("nf4", "mx") else None,
+        ),
     )
     api = build_model(cfg)
     params = api.init(KEY)

@@ -130,6 +130,106 @@ def test_register_format_overwrite_does_not_steal_bits_default():
     assert format_for_bits(4).name == "int4"  # stale claim dropped, not kept
 
 
+def test_register_format_overwrite_reassigns_orphaned_bits_default():
+    """Regression: re-registering the sole claimant of a width at a NEW
+    width must hand the old width's default to a surviving format of that
+    width -- pre-fix the default was deleted outright, so format_for_bits
+    raised for a width that resolved fine before the re-registration."""
+    from repro.core.quantizer import pack4, unpack4
+    from repro.quant.formats import _BY_BITS, _FORMATS, _dfp_weight_codes
+
+    kw = dict(encode=pack4, decode=unpack4, weight_codes=_dfp_weight_codes(4))
+    a, b = "orphan_probe_a", "orphan_probe_b"
+    width = 3  # unclaimed by any built-in
+    try:
+        register_format(a, bits=width, overwrite=True, **kw)  # claims width 3
+        register_format(b, bits=width, overwrite=True, **kw)  # doesn't
+        assert format_for_bits(width).name == a
+        # branch 1: a CODEC-COMPATIBLE survivor (same encode/decode
+        # callables) exists -> the default migrates to it
+        register_format(a, bits=5, overwrite=True, **kw)
+        assert format_for_bits(width).name == b
+        # branch 1b: a survivor with DIFFERENT code semantics must NOT
+        # inherit the default -- legacy empty-fmt payloads would silently
+        # mis-decode through it (e.g. int4 two's-complement through a LUT);
+        # fail closed instead
+        from repro.quant.formats import _nf4_decode
+        from repro.core.quantizer import pack4u
+
+        c = "orphan_probe_c"
+        register_format(
+            c, bits=5, overwrite=True,
+            encode=pack4u, decode=_nf4_decode, weight_codes=kw["weight_codes"],
+        )
+        register_format(a, bits=7, overwrite=True, **kw)  # a owned width 5
+        with pytest.raises(ValueError):
+            format_for_bits(5)  # c survives at width 5 but is incompatible
+        # branch 2: no survivor at all -> fail closed (raise), no stale ptr
+        register_format(b, bits=6, overwrite=True, **kw)
+        with pytest.raises(ValueError):
+            format_for_bits(width)
+    finally:  # the registry is process-global: leave no probe state behind
+        for probe in (a, b, "orphan_probe_c"):
+            _FORMATS.pop(probe, None)
+        for bits in (3, 5, 6, 7):
+            if _BY_BITS.get(bits) in (a, b, "orphan_probe_c"):
+                del _BY_BITS[bits]
+
+
+def test_quantize_weights_stamps_resolved_format_name():
+    """Regression: bits-resolved QTensors must be stamped with the resolved
+    format NAME, not fmt="" -- an empty stamp re-resolves through the
+    mutable _BY_BITS table at decode time, which is ambiguous now that nf4
+    coexists with int4 (and mx with int8) at the same width."""
+    from repro.quant.formats import format_of
+
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 8)), jnp.float32)
+    for bits, want in ((2, "ternary"), (4, "int4"), (8, "int8")):
+        qt = quantize_weights(w, bits, 16)
+        assert qt.fmt == want
+    # legacy empty-fmt artifacts (pre-fix checkpoints) still resolve by
+    # bits, and the defaults still point at the built-ins even though nf4
+    # and mx are registered at the same widths
+    legacy4 = dataclasses.replace(quantize_weights(w, 4, 16), fmt="")
+    legacy8 = dataclasses.replace(quantize_weights(w, 8, 16), fmt="")
+    assert format_of(legacy4).name == "int4"
+    assert format_of(legacy8).name == "int8"
+
+
+def test_new_formats_registered_without_stealing_defaults():
+    """nf4 (bits=4) and mx (bits=8) are first-class registry citizens whose
+    bit-widths collide with built-ins -- the registry must keep them
+    name-addressed while bits stay with int4/int8."""
+    assert {"nf4", "mx"} <= set(format_names())
+    assert get_format("nf4").bits == 4 and format_for_bits(4).name == "int4"
+    assert get_format("mx").bits == 8 and format_for_bits(8).name == "int8"
+    assert get_format("mx").block_size == 32
+    for name in ("nf4", "mx"):
+        f = get_format(name)
+        assert f.kernel is not None and f.fused_kernel is not None
+
+
+def test_qat_ste_honors_named_format():
+    """Regression: the QAT forward must fake-quantize on the NAMED format's
+    grid (the one PTQ deploys on), not the bits-default uniform grid --
+    silently training against int4's grid while serving nf4's LUT would
+    lose the QAT benefit with no error."""
+    from repro.core import ste
+    from repro.quant.formats import fake_quantize_weights
+
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 8)), jnp.float32)
+    got = ste.weights_ste(w, 4, 16, fmt="nf4")
+    want = fake_quantize_weights(w, 4, 16, fmt="nf4")
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    # the nf4 grid really differs from the bits-4 default grid
+    assert not np.array_equal(
+        np.asarray(got), np.asarray(fake_quantize_weights(w, 4, 16))
+    )
+    # and the straight-through gradient is still identity
+    g = jax.grad(lambda m: ste.weights_ste(m, 4, 16, fmt="nf4").sum())(w)
+    assert np.allclose(np.asarray(g), 1.0)
+
+
 def test_custom_backend_dispatch():
     calls = []
 

@@ -115,6 +115,71 @@ def test_qtensor_expert_stack_ep():
     assert spec == P("model", None, None)
 
 
+def _qt_fmt(k, n, fmt, lead=()):
+    """Abstract nf4/mx QTensor (the formats whose widths collide with
+    built-ins): nf4 packs K/8 uint32 rows like int4; mx stores raw int8
+    with a K/32 block-scale table."""
+    from repro.core.quantizer import QTensor
+
+    wpk = {"nf4": 8, "mx": 1}[fmt]
+    group = 32 if fmt == "mx" else 16
+    pdt = jnp.uint32 if fmt == "nf4" else jnp.int8
+    sds = lambda shape, dt=jnp.int8: jax.ShapeDtypeStruct(shape, dt)
+    return QTensor(
+        packed=sds(tuple(lead) + (k // wpk, n), pdt),
+        scale_m=sds(tuple(lead) + (k // group, n)),
+        scale_e=sds(()),
+        bits=4 if fmt == "nf4" else 8, group_size=group, shape=(k, n),
+        fmt=fmt,
+    )
+
+
+def test_nf4_qtensor_rules():
+    # nf4 halves K like int4 (K/8 packed words): K=4096 -> packed 512 and
+    # scale 256 rows, all divisible by 16 -> K-sharded member takes model
+    assert sharding.param_spec(
+        "blocks/mlp/down/w", _qt_fmt(4096, 4096, "nf4"), MESH, "serve"
+    ) == P("model", None)
+    # K=128: scale rows 128/16=8 don't divide the 16-wide axis -> the whole
+    # QTensor (payload included) falls back together
+    assert sharding.param_spec(
+        "blocks/mlp/down/w", _qt_fmt(128, 4096, "nf4"), MESH, "serve"
+    ) == P(None, None)
+    fs = sharding.qtensor_field_shardings(
+        "blocks/attn/wq/w", _qt_fmt(4096, 4096, "nf4"), MESH, "serve"
+    )
+    assert fs.packed.spec == P(None, "model")
+    assert fs.scale_m.spec == P(None, "model")
+    assert (fs.bits, fs.group_size, fs.fmt) == (4, 16, "nf4")
+
+
+def test_mx_qtensor_rules():
+    # mx scale tables follow their 32-block cluster axis: K=4096 -> 128
+    # scale rows, divisible -> K shards; payload (raw int8, words_per_k=1)
+    # inherits the same spec
+    qt = _qt_fmt(4096, 4096, "mx")
+    assert sharding.param_spec("blocks/mlp/down/w", qt, MESH, "serve") == P("model", None)
+    fs = sharding.qtensor_field_shardings("blocks/mlp/down/w", qt, MESH, "serve")
+    assert fs.packed.spec == P("model", None)
+    assert fs.scale_m.spec == P("model", None)  # block axis, not payload K
+    assert fs.scale_e.spec == P()
+    # K=256: logical and packed K divide 16 but the 256/32=8 scale rows do
+    # not -> the 32-block table is the binding constraint, all fields fall
+    # back together
+    assert sharding.param_spec(
+        "blocks/mlp/down/w", _qt_fmt(256, 4096, "mx"), MESH, "serve"
+    ) == P(None, None)
+
+
+def test_block_format_expert_stacks_ep():
+    for fmt in ("nf4", "mx"):
+        qt = _qt_fmt(7168, 4864, fmt, lead=(32,))
+        spec = sharding.param_spec(
+            "blocks/moe/experts/gate/w", qt, MESH, "serve"
+        )
+        assert spec == P("model", None, None), fmt
+
+
 def test_qtensor_shardings_tree():
     from repro.core.quantizer import QTensor
 
@@ -136,6 +201,66 @@ def test_ep_divisible():
     assert ep_divisible(32, 32, MESH, "model", ()) is True
     assert ep_divisible(32, 32, MESH, "model", ("data",)) is False  # C % 512
     assert ep_divisible(32, 32, None) is False
+
+
+# ---------------------------------------------------------------------------
+# Block-format QTensors on a REAL forced 4-device mesh (subprocess: the host
+# device count must be set before jax initializes, as in test_dryrun.py).
+# ---------------------------------------------------------------------------
+_FORCED_MESH_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import parse_mesh_spec
+from repro.parallel import sharding
+from repro.quant import dequantize_weights, quantize_weights
+
+assert jax.device_count() == 4, jax.device_count()
+mesh = parse_mesh_spec("dp=2,tp=2")  # data=2 x model=2
+
+rng = np.random.default_rng(0)
+w = jnp.asarray(rng.normal(size=(128, 64)), jnp.float32)
+for fmt in ("nf4", "mx"):
+    qt = quantize_weights(w, group_size=32, fmt=fmt)
+    tree = {"blocks": {"mlp": {"down": {"w": qt}}}}
+    sh = sharding.qtensor_shardings(tree, mesh)
+    fs = sh["blocks"]["mlp"]["down"]["w"]
+    assert fs.packed.spec == P("model", None), (fmt, fs.packed.spec)
+    assert fs.scale_m.spec == P("model", None), (fmt, fs.scale_m.spec)
+    on_mesh = jax.device_put(tree, sh)
+    qts = on_mesh["blocks"]["mlp"]["down"]["w"]
+    # each device holds half the packed K rows and half the scale rows
+    wpk = {"nf4": 8, "mx": 1}[fmt]
+    for shard in qts.packed.addressable_shards:
+        assert shard.data.shape == (128 // wpk // 2, 64), (fmt, shard.data.shape)
+    for shard in qts.scale_m.addressable_shards:
+        assert shard.data.shape == (128 // qt.group_size // 2, 64), fmt
+    # the sharded tensor dequantizes bit-identically to the host original
+    got = np.asarray(jax.jit(dequantize_weights)(qts))
+    want = np.asarray(dequantize_weights(qt))
+    assert np.array_equal(got, want), fmt
+print("OK")
+"""
+
+
+@pytest.mark.slow  # fresh JAX subprocess (repo convention for forced-device cells)
+def test_block_formats_on_forced_4_device_mesh():
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.path.join(repo, "src"),
+        XLA_FLAGS="--xla_force_host_platform_device_count=4",
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", _FORCED_MESH_SCRIPT],
+        capture_output=True, text=True, timeout=300, env=env, cwd=repo,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
 
 
 def test_paper_op_ratio_claims():
