@@ -16,6 +16,11 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
                            tokens/sec), HBM passes per dense site,
                            ragged-batch recompile count (BENCH trajectory;
                            standalone --json for the full table)
+  * bench_serving       -> staged vs lockstep engines under open-loop
+                           Poisson load: sustained tok/s + TTFT/TPOT p95
+                           for ternary + int8, greedy parity asserted
+                           (``--serving-json`` writes the committed
+                           ``benchmarks/BENCH_serving.json`` baseline)
 
 BENCH trajectory tooling:
 
@@ -121,6 +126,11 @@ def main(argv=None) -> int:
                          "'dp=2,ep=2'); baseline cells are keyed on the "
                          "mesh spec, so sharded baselines gate the sharded "
                          "engine")
+    ap.add_argument("--serving-json", default=None, metavar="PATH",
+                    help="run the serving benchmark only (staged vs "
+                         "lockstep under Poisson load) and write its JSON "
+                         "table -- how benchmarks/BENCH_serving.json is "
+                         "made")
     args = ap.parse_args(argv)
 
     from benchmarks import (
@@ -132,7 +142,13 @@ def main(argv=None) -> int:
         bench_kernels,
         bench_op_ratio,
         bench_quant_error,
+        bench_serving,
     )
+
+    if args.serving_json:
+        print("name,us_per_call,derived")
+        bench_serving.run(csv=print, json_path=args.serving_json)
+        return 0
 
     if args.json or args.check:
         print("name,us_per_call,derived")
@@ -182,6 +198,7 @@ def main(argv=None) -> int:
         bench_decode,
         bench_cluster_hier,
         bench_kernels,
+        bench_serving,
         bench_quant_error,
         bench_finetune,
     ):

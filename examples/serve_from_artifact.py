@@ -6,13 +6,18 @@ packed artifact -- QTensor payloads + 8-bit DFP scale tables + the compiled
 ``QuantPlan`` with profiled static activation exponents, every payload
 sha256-checked.
 
-Phase 2 (run on every serving node, every boot): cold-start straight from
-the artifact.  No fp32 weights are materialized, no calibration re-runs --
-the engine decodes from the packed 2-bit weights under the persisted plan,
-and serves tokens bit-identical to the process that produced the artifact.
+Phase 2 (run on every serving node, every boot): cold-start the STAGED
+engine straight from the artifact.  No fp32 weights are materialized, no
+calibration re-runs -- prompts prefill in chunks through a dedicated graph,
+finished prefixes are inserted into decode-cache slots, and the donated
+decode tick streams tokens, bit-identical to the process that produced the
+artifact.  Each boot reports per-request TTFT/TPOT/queue-wait percentiles
+from ``engine.stats()["latency"]``, and the first boot cross-checks the
+staged tokens against the lockstep oracle (see docs/SERVING.md).
 
   PYTHONPATH=src python examples/serve_from_artifact.py [--bits 2] \
-      [--artifact-dir DIR] [--boots 2]
+      [--artifact-dir DIR] [--boots 2] [--prefill-chunk 16] \
+      [--policy decode|prefill]
 """
 import argparse
 import os
@@ -29,7 +34,13 @@ import numpy as np
 from benchmarks.common import tiny_lm, train_fp_baseline
 from repro.configs.base import QuantConfig
 from repro.models import build_model, quantize_and_plan, save_servable
-from repro.serving import Request, SamplerConfig, ServingEngine
+from repro.serving import (
+    Request,
+    SamplerConfig,
+    SchedulerConfig,
+    ServingEngine,
+    StagedEngine,
+)
 from repro.training import checkpoint
 from repro.training.data import make_batch
 
@@ -56,24 +67,51 @@ def quantize_once(artifact_dir: str, bits: int, train_steps: int) -> None:
           f"{len(plan.act_exponents)}/{len(plan.site_paths)} sites calibrated")
 
 
-def serve_once(artifact_dir: str, boot: int, requests: int) -> list:
-    t0 = time.time()
-    eng = ServingEngine.from_artifact(
-        artifact_dir, n_slots=4, max_len=96,
-        sampler=SamplerConfig(temperature=0.0),
-    )
-    print(f"[serve #{boot}] cold-started from artifact in {time.time() - t0:.2f}s "
-          f"(no fp32, no recalibration)")
+def _workload(requests: int):
+    """Mixed long/short prompts: the long ones exercise chunked prefill."""
     rng = np.random.default_rng(0)
-    for i in range(requests):
-        eng.submit(Request(
-            uid=i, prompt=rng.integers(0, 512, 6).tolist(), max_new_tokens=12,
-        ))
+    return [
+        Request(
+            uid=i,
+            prompt=rng.integers(0, 512, 40 if i % 3 == 0 else 6).tolist(),
+            max_new_tokens=12,
+        )
+        for i in range(requests)
+    ]
+
+
+def serve_once(artifact_dir: str, boot: int, requests: int, chunk: int,
+               policy: str, engine: str = "staged") -> list:
+    t0 = time.time()
+    cls = StagedEngine if engine == "staged" else ServingEngine
+    kw = {} if engine == "lockstep" else {
+        "sched": SchedulerConfig(prefill_chunk=chunk, policy=policy)
+    }
+    eng = cls.from_artifact(
+        artifact_dir, n_slots=4, max_len=96,
+        sampler=SamplerConfig(temperature=0.0), **kw,
+    )
+    print(f"[serve #{boot}] {engine} engine cold-started from artifact in "
+          f"{time.time() - t0:.2f}s (no fp32, no recalibration)")
+    for req in _workload(requests):
+        eng.submit(req)
     t0 = time.time()
     done = eng.run()
     toks = sum(len(r.output) for r in done)
-    print(f"[serve #{boot}] {len(done)} requests / {toks} tokens "
-          f"in {time.time() - t0:.1f}s; req 0 -> {done[0].output}")
+    line = f"[serve #{boot}] {len(done)} requests / {toks} tokens " \
+           f"in {time.time() - t0:.1f}s"
+    s = eng.stats()
+    if engine == "staged":
+        c = s["counts"]
+        line += (f"; {c['prefill_chunks']} prefill chunks + "
+                 f"{c['inserts']} inserts + {c['generate_ticks']} decode ticks")
+    req0 = next(r for r in done if r.uid == 0)
+    print(f"{line}; req 0 -> {req0.output}")
+    for name in ("queue_wait", "ttft", "tpot"):
+        p = s["latency"][name]
+        if p:
+            print(f"[serve #{boot}]   {name:10s} p50={p['p50'] * 1e3:6.1f}ms "
+                  f"p95={p['p95'] * 1e3:6.1f}ms p99={p['p99'] * 1e3:6.1f}ms")
     return sorted((r.uid, tuple(r.output)) for r in done)
 
 
@@ -86,6 +124,8 @@ def main():
                     help="how many serving cold starts to simulate")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--train-steps", type=int, default=80)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--policy", default="decode", choices=["decode", "prefill"])
     args = ap.parse_args()
 
     tmp = None
@@ -96,13 +136,16 @@ def main():
     try:
         quantize_once(artifact_dir, args.bits, args.train_steps)
         outputs = [
-            serve_once(artifact_dir, b + 1, args.requests)
+            serve_once(artifact_dir, b + 1, args.requests,
+                       args.prefill_chunk, args.policy)
             for b in range(args.boots)
         ]
         assert all(o == outputs[0] for o in outputs[1:]), "boots disagreed!"
-        if args.boots > 1:
-            print(f"[done] {args.boots} cold starts served identical greedy "
-                  f"tokens from one artifact")
+        oracle = serve_once(artifact_dir, 0, args.requests,
+                            args.prefill_chunk, args.policy, engine="lockstep")
+        assert oracle == outputs[0], "staged diverged from the lockstep oracle!"
+        print(f"[done] {args.boots} staged cold start(s) served greedy tokens "
+              f"identical to each other AND to the lockstep oracle")
     finally:
         if tmp is not None:
             tmp.cleanup()

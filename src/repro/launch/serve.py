@@ -22,6 +22,12 @@ carries the "pallas_ep" backend.
       [--save-artifact DIR] [--plan-json p.json]
   PYTHONPATH=src python -m repro.launch.serve --artifact DIR --requests 8 \
       [--mesh dp=2,ep=2]
+
+Serving runs the staged engine by default (prefill / insert / generate
+stages, chunked prefill, SLO percentiles in the run report); ``--engine
+lockstep`` selects the shared-tick oracle, ``--prefill-chunk`` and
+``--policy {decode,prefill}`` tune the staged scheduler.  See
+docs/SERVING.md.
 """
 from __future__ import annotations
 
@@ -48,7 +54,13 @@ from repro.models import (
     quantize_and_plan,
     save_servable,
 )
-from repro.serving import Request, SamplerConfig, ServingEngine
+from repro.serving import (
+    Request,
+    SamplerConfig,
+    SchedulerConfig,
+    ServingEngine,
+    StagedEngine,
+)
 
 
 def tree_mb(tree) -> float:
@@ -123,6 +135,18 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--engine", default="staged",
+                    choices=["lockstep", "staged"],
+                    help="staged (default): prefill/insert/generate stages "
+                         "with chunked prefill; lockstep: the shared-tick "
+                         "oracle (prefill and decode in one graph)")
+    ap.add_argument("--prefill-chunk", type=int, default=32, metavar="N",
+                    help="staged engine: max prompt tokens one prefill "
+                         "dispatch may consume")
+    ap.add_argument("--policy", default="decode",
+                    choices=["decode", "prefill"],
+                    help="staged engine stage arbitration: decode-priority "
+                         "(inter-token latency) vs prefill-priority (TTFT)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--calibrate", type=int, default=0, metavar="N",
                     help="profile N batches for static activation exponents")
@@ -151,9 +175,17 @@ def main():
         api, qparams, plan = boot_quantize(args, mesh=mesh)
     cfg = api.cfg
 
-    eng = ServingEngine(api, qparams, n_slots=args.slots, max_len=args.max_len,
-                        sampler=SamplerConfig(temperature=args.temperature),
-                        mesh=mesh)
+    eng_kw = dict(n_slots=args.slots, max_len=args.max_len,
+                  sampler=SamplerConfig(temperature=args.temperature),
+                  mesh=mesh)
+    if args.engine == "staged":
+        eng = StagedEngine(api, qparams, sched=SchedulerConfig(
+            prefill_chunk=args.prefill_chunk, policy=args.policy), **eng_kw)
+        print(f"engine=staged policy={args.policy} "
+              f"prefill_chunk={args.prefill_chunk}")
+    else:
+        eng = ServingEngine(api, qparams, **eng_kw)
+        print("engine=lockstep (shared-tick oracle)")
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(
@@ -165,6 +197,18 @@ def main():
     dt = time.time() - t0
     toks = sum(len(r.output) for r in done)
     print(f"{len(done)} requests / {toks} tokens in {dt:.1f}s ({toks / dt:.1f} tok/s)")
+    left = eng.leftover()
+    if left["in_flight"] or left["queued"]:
+        print(f"UNFINISHED: {len(left['in_flight'])} in flight, "
+              f"{len(left['queued'])} queued (tick budget expired; "
+              "drain() returns them)")
+    lat = eng.stats()["latency"]
+    for name in ("queue_wait", "ttft", "tpot"):
+        p = lat[name]
+        if p is not None:
+            print(f"  {name:10s} p50={p['p50'] * 1e3:7.1f}ms "
+                  f"p95={p['p95'] * 1e3:7.1f}ms p99={p['p99'] * 1e3:7.1f}ms "
+                  f"(n={p['n']})")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.output}")
 

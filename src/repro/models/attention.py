@@ -156,8 +156,17 @@ def attention(
     cache_index: Optional[jax.Array] = None,  # scalar write position
     chunk: int = 1024,
     rope: bool = True,
+    attend_cache: bool = False,  # S>1 chunk attends over the whole cache
 ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
-    """Returns (output (B,S,d), updated cache or None)."""
+    """Returns (output (B,S,d), updated cache or None).
+
+    ``attend_cache`` forces the cache-attend (decode) path for S > 1: after
+    the chunk's K/V are written at ``cache_index``, scores run against the
+    FULL cache, so earlier chunks of the same prompt are visible.  This is
+    what chunked prefill needs -- the plain prefill path only attends over
+    the chunk's own K/V and would drop history for any chunk after the
+    first.  S == 1 decode behaves exactly as before.
+    """
     hd = cfg.hd()
     g = cfg.n_heads // cfg.n_kv_heads
     src = x if kv_src is None else kv_src
@@ -183,7 +192,7 @@ def attention(
         q_pos = positions
 
     new_cache = None
-    decode = cache is not None and x.shape[1] == 1
+    decode = cache is not None and (x.shape[1] == 1 or attend_cache)
     if cache is not None:
         quantized_kv = len(cache) == 4
         if quantized_kv:  # int8 DFP cache: quantize on write

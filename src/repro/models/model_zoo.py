@@ -10,6 +10,19 @@ signatures so the trainer / server / dry-run treat every family uniformly:
   prefill(params, batch, cache) -> (logits, cache)
   decode(params, token, pos, cache) -> (logits, cache)
   input_specs(shape_cfg) -> (batch/spec pytree, kind)
+
+Staged-serving members (the prefill / insert / generate engine split):
+
+  prefill_chunk(params, tokens, start, cache) -> (logits, cache)
+      consume one (B, S) chunk of prompt tokens at cache positions
+      [start, start+S), attending over the whole cache so earlier chunks
+      stay visible; None for families whose decode state cannot replay a
+      chunk in one graph (ssm/hybrid/encdec -- the staged engine falls
+      back to budgeted per-token decode prefill there).
+  insert(cache, prefix, slot) -> cache
+      write a B=1 prefix cache (a finished prefill) into slot ``slot`` of
+      a B=n_slots decode cache -- every leaf's batch row is overwritten,
+      so stale state from the slot's previous occupant cannot leak.
 """
 from __future__ import annotations
 
@@ -36,6 +49,9 @@ class ModelApi:
     init_cache: Callable
     prefill: Optional[Callable]
     decode: Callable
+    # staged serving: chunked prompt consumption + per-slot cache insertion
+    prefill_chunk: Optional[Callable] = None
+    insert: Optional[Callable] = None
 
     def with_ctx(self, ctx: QuantCtx) -> "ModelApi":
         """Rebind every member to a new quantization context."""
@@ -61,6 +77,32 @@ def make_ctx(cfg: ArchConfig) -> QuantCtx:
     return QuantCtx.from_config(cfg.quant)
 
 
+def _insert_leaf(buf, pre, slot: Any, axis: int):
+    return jax.lax.dynamic_update_slice_in_dim(
+        buf, pre.astype(buf.dtype), slot, axis=axis
+    )
+
+
+def insert_prefix(cache, prefix, slot, batch_axis_overrides: Optional[Dict[str, int]] = None):
+    """Write a B=1 ``prefix`` cache into batch row ``slot`` of ``cache``.
+
+    Every model family stacks its decode state as (layers, B, ...), so the
+    batch axis is 1 for every leaf; ``batch_axis_overrides`` names top-level
+    leaves that deviate (encdec's (B, T, d) ``enc_out`` is axis 0).  ``slot``
+    may be traced -- one compile covers every slot.
+    """
+    over = batch_axis_overrides or {}
+    if not over:
+        return jax.tree.map(lambda b, p: _insert_leaf(b, p, slot, 1), cache, prefix)
+    out = {}
+    for name, leaf in cache.items():
+        ax = over.get(name, 1)
+        out[name] = jax.tree.map(
+            lambda b, p, a=ax: _insert_leaf(b, p, slot, a), leaf, prefix[name]
+        )
+    return out
+
+
 def build_model(cfg: ArchConfig, ctx: Optional[QuantCtx] = None) -> ModelApi:
     ctx = ctx or QuantCtx.from_config(cfg.quant)
     fam = cfg.family
@@ -73,6 +115,10 @@ def build_model(cfg: ArchConfig, ctx: Optional[QuantCtx] = None) -> ModelApi:
             init_cache=lambda b, m: transformer.init_cache(cfg, b, m),
             prefill=lambda p, b, c: transformer.prefill(p, b["tokens"], cfg, ctx, c),
             decode=lambda p, t, pos, c: transformer.decode_step(p, t, pos, cfg, ctx, c),
+            prefill_chunk=lambda p, t, start, c: transformer.prefill_chunk(
+                p, t, start, cfg, ctx, c
+            ),
+            insert=insert_prefix,
         )
     if fam == "vlm":
         return ModelApi(
@@ -83,6 +129,10 @@ def build_model(cfg: ArchConfig, ctx: Optional[QuantCtx] = None) -> ModelApi:
             init_cache=lambda b, m: transformer.init_cache(cfg, b, m),
             prefill=lambda p, b, c: vlm.prefill(p, b, cfg, ctx, c),
             decode=lambda p, t, pos, c: transformer.decode_step(p, t, pos, cfg, ctx, c),
+            prefill_chunk=lambda p, t, start, c: transformer.prefill_chunk(
+                p, t, start, cfg, ctx, c
+            ),
+            insert=insert_prefix,
         )
     if fam == "hybrid":
         return ModelApi(
@@ -93,6 +143,7 @@ def build_model(cfg: ArchConfig, ctx: Optional[QuantCtx] = None) -> ModelApi:
             init_cache=lambda b, m: hybrid.init_cache(cfg, b, m),
             prefill=None,  # hybrid prefill == forward + state replay (engine-level)
             decode=lambda p, t, pos, c: hybrid.decode_step(p, t, pos, cfg, ctx, c),
+            insert=insert_prefix,  # ssm states + per-superblock KV: all (L, B, ...)
         )
     if fam == "ssm":
         return ModelApi(
@@ -103,6 +154,7 @@ def build_model(cfg: ArchConfig, ctx: Optional[QuantCtx] = None) -> ModelApi:
             init_cache=lambda b, m: ssm_lm.init_cache(cfg, b, m),
             prefill=None,
             decode=lambda p, t, pos, c: ssm_lm.decode_step(p, t, pos, cfg, ctx, c),
+            insert=insert_prefix,
         )
     if fam == "encdec":
         return ModelApi(
@@ -113,6 +165,9 @@ def build_model(cfg: ArchConfig, ctx: Optional[QuantCtx] = None) -> ModelApi:
             init_cache=lambda b, m: encdec.init_cache(cfg, b, m),
             prefill=lambda p, b, c: encdec.prefill(p, b, cfg, ctx, c),
             decode=lambda p, t, pos, c: encdec.decode_step(p, t, pos, cfg, ctx, c),
+            insert=lambda c, pre, s: insert_prefix(
+                c, pre, s, batch_axis_overrides={"enc_out": 0}
+            ),
         )
     raise ValueError(fam)
 

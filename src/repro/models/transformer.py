@@ -64,7 +64,8 @@ def init_lm(key, cfg) -> Dict[str, Any]:
 
 
 def _block_apply(
-    bp, x, positions, cfg, ctx: QuantCtx, window, cache=None, cache_index=None
+    bp, x, positions, cfg, ctx: QuantCtx, window, cache=None, cache_index=None,
+    attend_cache=False,
 ):
     # NOTE (Perf iteration B2, REFUTED): constraining the attention/MoE
     # sublayer outputs to seq-sharded here (Megatron-SP style) halves the
@@ -76,6 +77,7 @@ def _block_apply(
     a, new_cache = attn_lib.attention(
         bp["attn"], h, positions, cfg, ctx, "blocks/attn",
         causal=True, window=window, cache=cache, cache_index=cache_index,
+        attend_cache=attend_cache,
     )
     x = x + a
     h = layers.rmsnorm(bp["ln2"], x, cfg.norm_eps)
@@ -154,7 +156,8 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def _cache_scan(params, x, positions, cfg, ctx, cache, cache_index, win):
+def _cache_scan(params, x, positions, cfg, ctx, cache, cache_index, win,
+                attend_cache=False):
     quantized = "ke" in cache
 
     def body(h, scanned):
@@ -165,7 +168,8 @@ def _cache_scan(params, x, positions, cfg, ctx, cache, cache_index, win):
         else:
             c = (scanned["k"], scanned["v"])
         h, new = _block_apply(
-            bp, h, positions, cfg, ctx, w, cache=c, cache_index=cache_index
+            bp, h, positions, cfg, ctx, w, cache=c, cache_index=cache_index,
+            attend_cache=attend_cache,
         )
         out = {"k": new[0], "v": new[1]}
         if quantized:
@@ -189,6 +193,31 @@ def prefill(params, tokens, cfg, ctx: QuantCtx, cache, extra_embeds=None):
     positions = jnp.arange(s)
     win = window_schedule(cfg, cache["k"].shape[2])
     x, cache = _cache_scan(params, x, positions, cfg, ctx, cache, jnp.int32(0), win)
+    x = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return layers.dense(params["lm_head"], x, "lm_head", ctx), cache
+
+
+def prefill_chunk(params, tokens, start, cfg, ctx: QuantCtx, cache):
+    """Consume one chunk of a prompt against a partially-filled cache.
+
+    ``tokens`` (B, S) land at cache positions [start, start + S); attention
+    runs over the WHOLE cache (``attend_cache``), so chunks after the first
+    see every earlier chunk of the same prompt.  ``start`` is a traced
+    scalar -- the graph compiles once per chunk LENGTH, never per offset.
+    Returns (last-token logits, cache); only the final chunk's logits are
+    meaningful to a caller sampling the first generated token.
+    """
+    x = layers.embed(params["embed"], tokens)
+    s = x.shape[1]
+    positions = start + jnp.arange(s)
+    if cfg.mrope:  # text-only serving prompt: all three components temporal
+        positions = jnp.broadcast_to(
+            positions[None, None, :], (3, tokens.shape[0], s)
+        )
+    win = window_schedule(cfg, cache["k"].shape[2])
+    x, cache = _cache_scan(
+        params, x, positions, cfg, ctx, cache, start, win, attend_cache=True
+    )
     x = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
     return layers.dense(params["lm_head"], x, "lm_head", ctx), cache
 

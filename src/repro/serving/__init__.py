@@ -1,3 +1,10 @@
-"""Serving substrate: continuous-batching engine, samplers, KV caches."""
-from repro.serving.engine import Request, ServingEngine
+"""Serving substrate: lockstep + staged continuous-batching engines,
+samplers, chunked-prefill scheduler, KV caches."""
+from repro.serving.engine import Request, ServingEngine, StagedEngine
 from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.scheduler import (
+    LatencyStats,
+    SchedulerConfig,
+    chunk_plan,
+    next_action,
+)

@@ -1,35 +1,53 @@
-"""Batched serving engine with token-level continuous batching (Orca-style).
+"""Serving engines over slot-based decode state: the lockstep oracle and
+the staged continuous-batching engine.
 
-All ``n_slots`` step in lockstep through ONE jitted decode graph per tick:
-slots still consuming their prompt feed the next prompt token (prefill and
-decode share the graph -- admission never stalls running requests), slots in
-generation feed their last sampled token, idle slots feed a pad token whose
-output is discarded.  Per-slot cache positions use the masked-write decode
-path in the attention/SSM layers.
+``ServingEngine`` (lockstep, Orca-style): all ``n_slots`` step through ONE
+jitted decode graph per tick -- slots consuming their prompt feed the next
+prompt token, generating slots feed their last sampled token, idle slots
+feed a pad token whose output is discarded.  Simple, and bit-exact: it is
+the token-parity oracle the staged engine is tested against.  Its weakness
+is structural: prefill and decode share the tick, so a P-token prompt costs
+P full-batch dispatches during which its slot emits nothing.
 
-The tick is device-resident: decode, sampling and the PRNG split live in one
-jitted graph whose KV-cache operand is donated (updated in place, never
-copied), so a tick is ONE dispatch and the only device->host transfer is the
-(n_slots,) sampled-token fetch -- enforced at runtime by a transfer guard,
-not just by convention.
+``StagedEngine`` splits the engine into three explicit stages
+(JetStream/MaxEngine-style):
 
-With a ``mesh`` the whole tick runs under NamedSharding: params (QTensor
-payload/scale leaves included) are placed by the serving sharding rules
-(``repro.parallel.qtensor_shardings``), the donated KV cache is sharded by
-``cache_shardings`` (batch over data axes, heads/seq over model), per-tick
-tokens are fed straight onto their batch sharding, and the engine installs
-the mesh as the ambient activation mesh so MoE dispatch and the shard_map
-expert-parallel FFN see it at trace time.  The engine composes with
-mesh-aware artifacts: ``from_artifact(dir, mesh=...)`` cold-starts from
-per-host shards with no single-host global tree.
+  * ``prefill`` -- a dedicated jitted graph consumes a whole prompt chunk
+    (B=1, S=chunk) against a private cache, chunked at a configurable token
+    budget so arbitrarily long prompts never monopolize a tick; families
+    without a chunk graph (ssm/hybrid/encdec) fall back to budgeted
+    per-token decode prefill into the same private cache.
+  * ``insert`` -- a donated in-place write of the finished prefix into the
+    decode cache's reserved slot (every leaf's batch row is overwritten, so
+    stale state from the slot's previous occupant cannot leak).
+  * ``generate`` -- the existing donated one-dispatch decode tick over the
+    slot batch.
 
-This engine is the system the paper's quantized weights serve from: with PTQ
-params (QTensors) the decode step streams 2-bit/4-bit packed weights -- the
-bandwidth-bound phase where cluster quantization pays off most.
+Admission is asynchronous: the scheduler (``repro.serving.scheduler``)
+interleaves prefill chunks with generate ticks under a policy knob
+(decode-priority vs prefill-priority) and tracks per-request queue-wait /
+TTFT / TPOT, surfaced as p50/p95/p99 through ``stats()``.
+
+Both engines share the slot bookkeeping, the donated device-resident tick
+(one host sync per tick, transfer-guard-asserted), mesh installation, and
+artifact cold start.  With identical seeds and prompts the two engines
+produce bit-identical greedy tokens: chunked prefill writes exactly the
+K/V rows the lockstep tick would have written, and attention masks stale
+positions to exact zeros.  (Stochastic sampling consumes the PRNG stream
+in dispatch order, which differs by construction; parity is a greedy
+contract.  MoE capacity drops depend on which tokens share a dispatch, so
+parity there additionally assumes drop-free capacity -- see
+docs/SERVING.md.)
+
+This engine layer is the system the paper's quantized weights serve from:
+with PTQ params (QTensors) the decode step streams 2-bit/4-bit packed
+weights -- the bandwidth-bound phase where cluster quantization pays off.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional
 
@@ -38,6 +56,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.scheduler import (
+    LatencyStats,
+    PrefillTask,
+    SchedulerConfig,
+    chunk_plan,
+    next_action,
+)
 
 
 @dataclasses.dataclass
@@ -50,9 +75,18 @@ class Request:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     admitted_tick: Optional[int] = None  # engine tick this request got a slot
+    # wall-clock SLO trace (time.monotonic seconds), filled by the engine:
+    # submit -> prefill_start (queue wait) -> first_token (TTFT) -> finish
+    submit_t: Optional[float] = None
+    prefill_start_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
 
 
-class ServingEngine:
+class _EngineBase:
+    """Slot/queue bookkeeping, device placement and the donated decode tick
+    shared by the lockstep and staged engines."""
+
     def __init__(
         self,
         api,  # ModelApi
@@ -72,6 +106,7 @@ class ServingEngine:
         self.mesh = mesh
         self._tok_sharding = None
         self._pos_sharding = None
+        self._cache_sharding = None
         # the activation mesh this engine's decode graph traces under: its
         # own mesh, or whatever was ambient at construction (a mesh-less
         # engine must not see another engine's mesh leak into its trace)
@@ -85,12 +120,10 @@ class ServingEngine:
         else:
             from jax.sharding import NamedSharding, PartitionSpec as P
 
-            from repro.parallel import sharding as rules
-
             cache_shapes = jax.eval_shape(lambda: api.init_cache(n_slots, max_len))
+            self._cache_sharding = rules.cache_shardings(cache_shapes, mesh)
             self.cache = jax.device_put(
-                api.init_cache(n_slots, max_len),
-                rules.cache_shardings(cache_shapes, mesh),
+                api.init_cache(n_slots, max_len), self._cache_sharding
             )
             self.key = jax.device_put(
                 jax.random.PRNGKey(seed), NamedSharding(mesh, P())
@@ -104,6 +137,9 @@ class ServingEngine:
         # the O(n) list.pop(0) under deep backlogs
         self.queue: Deque[Request] = deque()
         self._tick = 0  # monotonically increasing engine tick counter
+        self._clock = time.monotonic
+        self._lat = LatencyStats()
+        self._zero_prefix = None  # lazy B=1 zero cache (slot clearing)
 
         def _tick_fn(params, tokens, pos, cache, key):
             logits, cache = api.decode(params, tokens, pos, cache)
@@ -114,13 +150,26 @@ class ServingEngine:
         # donate the cache: the decode step's masked writes update it in
         # place instead of copying the whole (L, B, S, ...) buffer per tick
         self._decode_step = jax.jit(_tick_fn, donate_argnums=(3,))
+        if api.insert is not None:
+            jit_kw = {}
+            if self._cache_sharding is not None:
+                # pin the output layout so a donated sharded cache keeps the
+                # serving sharding across insert dispatches
+                jit_kw["out_shardings"] = self._cache_sharding
+            self._insert_step = jax.jit(
+                lambda cache, prefix, slot: api.insert(cache, prefix, slot),
+                donate_argnums=(0,),
+                **jit_kw,
+            )
+        else:
+            self._insert_step = None
 
     def _install_mesh(self, params):
         """Install ``self.mesh`` as the serving layout: params onto the
         serving sharding rules, and the per-tick token/pos shardings (batch
         over data axes when divisible).  The ambient activation mesh is NOT
-        mutated here -- each decode dispatch scopes it (``step``), so two
-        engines with different meshes coexist in one process."""
+        mutated here -- each decode dispatch scopes it (``_dispatch``), so
+        two engines with different meshes coexist in one process."""
         from repro.parallel import sharding as rules
 
         mesh = self.mesh
@@ -141,7 +190,7 @@ class ServingEngine:
         return params
 
     @classmethod
-    def from_artifact(cls, artifact_dir: str, **kwargs) -> "ServingEngine":
+    def from_artifact(cls, artifact_dir: str, **kwargs):
         """Cold-start an engine from a packed quantized artifact.
 
         The decode graph serves straight from the loaded QTensor tree under
@@ -165,27 +214,101 @@ class ServingEngine:
                 "during prefill and finish with truncated or empty output; "
                 "raise max_len or truncate the prompt"
             )
+        req.submit_t = self._clock()
         self.queue.append(req)
 
     def run(self, max_ticks: int = 1_000) -> List[Request]:
+        """Step until idle or the tick budget expires; returns FINISHED
+        requests only.  On budget expiry, in-flight and queued requests
+        stay inside the engine -- inspect them with ``leftover()`` or pull
+        them out with ``drain()``; they are never silently discarded."""
         finished: List[Request] = []
         ticks = 0
-        while (self.queue or any(self.slot_req)) and ticks < max_ticks:
+        while self._has_work() and ticks < max_ticks:
             finished.extend(self.step())
             ticks += 1
         return finished
 
-    # -- engine tick -------------------------------------------------------
-    def _admit(self) -> None:
-        for s in range(self.n_slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.popleft()
-                req.admitted_tick = self._tick
-                self.slot_req[s] = req
-                self.slot_pos[s] = 0
-                self.slot_cursor[s] = 1  # token 0 goes in this tick
-                self.next_token[s] = req.prompt[0]
+    def leftover(self) -> Dict[str, List[Request]]:
+        """Unfinished work still inside the engine, without removing it:
+        ``in_flight`` (requests holding or reserving a slot, prompt possibly
+        part-consumed, output possibly part-generated) and ``queued``
+        (never admitted).  All have ``done=False`` -- callers distinguish
+        starved requests from finished ones by this report, not by absence
+        from ``run()``'s return."""
+        in_flight = [r for r in self.slot_req if r is not None]
+        return {"in_flight": in_flight, "queued": list(self.queue)}
 
+    def drain(self) -> Dict[str, List[Request]]:
+        """Remove and return all unfinished requests (``leftover()`` shape),
+        resetting every slot.  After ``drain()`` the engine is empty and
+        reusable."""
+        report = self.leftover()
+        self._abort_inflight()
+        for s in range(self.n_slots):
+            if self.slot_req[s] is not None:
+                self._reset_slot(s)
+        self.queue.clear()
+        return report
+
+    # -- slot lifecycle (the ONE place slot state is reset) ----------------
+    def _reset_slot(self, s: int) -> None:
+        """Return slot ``s`` to the idle state: no request, position 0, pad
+        next-token.  Both completion and admission go through here, so a
+        dead request's ``next_token``/``slot_cursor`` can never leak into
+        the next occupant (or into the idle pad rows of the shared tick)."""
+        self.slot_req[s] = None
+        self.slot_pos[s] = 0
+        self.slot_cursor[s] = 0
+        self.next_token[s] = 0
+
+    def _occupy_slot(self, s: int, req: Request) -> None:
+        """Reserve slot ``s`` for ``req``: reset host state, clear the
+        slot's device cache row (stale SSM/recurrent state is NOT masked by
+        positions the way stale KV rows are), and stamp admission."""
+        self._reset_slot(s)
+        self._clear_slot_cache(s)
+        req.admitted_tick = self._tick
+        req.prefill_start_t = self._clock()
+        self.slot_req[s] = req
+
+    def _clear_slot_cache(self, s: int) -> None:
+        """Zero slot ``s``'s rows of the decode cache via the insert path.
+
+        Stale KV rows are masked to exact zeros by the attention valid-mask,
+        but recurrent state (ssm/hybrid families) carries the previous
+        occupant unmasked -- clearing through the same ``insert`` write
+        both engines use keeps slot reuse correct for every family."""
+        if self._insert_step is None:
+            return
+        if self._zero_prefix is None:
+            self._zero_prefix = self.api.init_cache(1, self.max_len)
+        with self._dispatch():
+            self.cache = self._insert_step(
+                self.cache, self._zero_prefix, jnp.int32(s)
+            )
+
+    def _free_slot(self) -> Optional[int]:
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None:
+                return s
+        return None
+
+    def _finish(self, s: int, req: Request) -> None:
+        req.done = True
+        req.finish_t = self._clock()
+        self._lat.record(req)
+        self._reset_slot(s)
+
+    def _check_done(self, s: int, tok: int, req: Request) -> bool:
+        hit_eos = req.eos_id is not None and tok == req.eos_id
+        return (
+            len(req.output) >= req.max_new_tokens
+            or hit_eos
+            or self.slot_pos[s] >= self.max_len - 1
+        )
+
+    # -- device plumbing ---------------------------------------------------
     def _device_operands(self):
         tokens = self.next_token[:, None]
         pos = self.slot_pos
@@ -196,57 +319,34 @@ class ServingEngine:
             jax.device_put(pos, self._pos_sharding),
         )
 
-    def step(self) -> List[Request]:
-        """One lockstep tick over all slots; returns requests finished."""
-        self._admit()
-        if not any(self.slot_req):
-            return []
-        self._tick += 1
-        tokens, pos = self._device_operands()
+    @contextlib.contextmanager
+    def _dispatch(self):
+        """Scope one device dispatch: the ambient activation mesh is set to
+        this engine's trace mesh (MoE dispatch constraints + the shard_map
+        EP path read it at trace time) and always restored, so engines
+        never leak their mesh into each other; the transfer guard turns
+        "no host sync inside a dispatch" from a convention into a runtime
+        assert -- any device->host readback (stray float(), logits fetch,
+        ...) raises."""
         from repro.parallel import sharding as rules
 
-        # scope the ambient activation mesh to this dispatch: the first call
-        # traces the decode graph (MoE dispatch constraints + the shard_map
-        # EP path read the mesh at trace time) and the previous value is
-        # always restored, so engines never leak their mesh into each other
         prev_mesh = rules._ACT_MESH[0]
         rules.set_activation_mesh(self._trace_mesh)
         try:
-            # the guard turns "no host sync per tick" from a convention into
-            # a runtime assert: any device->host readback inside the dispatch
-            # (stray float(), logits fetch, ...) raises
             with jax.transfer_guard_device_to_host("disallow"):
-                toks, self.key, self.cache = self._decode_step(
-                    self.params, tokens, pos, self.cache, self.key
-                )
+                yield
         finally:
             rules.set_activation_mesh(prev_mesh)
-        sampled = np.asarray(toks)  # the ONE host sync per tick
 
-        finished: List[Request] = []
-        for s, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            self.slot_pos[s] += 1
-            if self.slot_cursor[s] < len(req.prompt):  # still prefilling
-                self.next_token[s] = req.prompt[self.slot_cursor[s]]
-                self.slot_cursor[s] += 1
-                continue
-            tok = int(sampled[s])
-            req.output.append(tok)
-            hit_eos = req.eos_id is not None and tok == req.eos_id
-            if (
-                len(req.output) >= req.max_new_tokens
-                or hit_eos
-                or self.slot_pos[s] >= self.max_len - 1
-            ):
-                req.done = True
-                finished.append(req)
-                self.slot_req[s] = None
-                self.slot_pos[s] = 0
-            else:
-                self.next_token[s] = tok
-        return finished
+    # -- hooks -------------------------------------------------------------
+    def _has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+    def _abort_inflight(self) -> None:
+        """Engine-specific teardown of partially-prefilled state (drain)."""
+
+    def step(self) -> List[Request]:  # pragma: no cover - abstract
+        raise NotImplementedError
 
     # -- introspection ------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
@@ -260,4 +360,238 @@ class ServingEngine:
             ],
             "positions": self.slot_pos.tolist(),
             "mesh": None if self.mesh is None else dict(self.mesh.shape),
+            # per-request SLO percentiles over FINISHED requests (seconds):
+            # queue_wait (submit -> slot), ttft (submit -> first token),
+            # tpot (per output token after the first); None until recorded
+            "latency": self._lat.summary(),
         }
+
+
+class ServingEngine(_EngineBase):
+    """Lockstep tick loop (admission between ticks, prefill and decode in
+    one shared graph).  Kept as the bit-exact oracle for ``StagedEngine``
+    and as the simplest correct engine."""
+
+    # -- engine tick -------------------------------------------------------
+    def _admit(self) -> None:
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.popleft()
+                self._occupy_slot(s, req)
+                self.slot_cursor[s] = 1  # token 0 goes in this tick
+                self.next_token[s] = req.prompt[0]
+
+    def step(self) -> List[Request]:
+        """One lockstep tick over all slots; returns requests finished."""
+        self._admit()
+        if not any(r is not None for r in self.slot_req):
+            return []
+        self._tick += 1
+        tokens, pos = self._device_operands()
+        with self._dispatch():
+            toks, self.key, self.cache = self._decode_step(
+                self.params, tokens, pos, self.cache, self.key
+            )
+        sampled = np.asarray(toks)  # the ONE host sync per tick
+
+        finished: List[Request] = []
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.slot_pos[s] += 1
+            if self.slot_cursor[s] < len(req.prompt):  # still prefilling
+                self.next_token[s] = req.prompt[self.slot_cursor[s]]
+                self.slot_cursor[s] += 1
+                continue
+            tok = int(sampled[s])
+            if not req.output:
+                req.first_token_t = self._clock()
+            req.output.append(tok)
+            if self._check_done(s, tok, req):
+                finished.append(req)
+                self._finish(s, req)
+            else:
+                self.next_token[s] = tok
+        return finished
+
+
+class StagedEngine(_EngineBase):
+    """Staged continuous batching: prefill / insert / generate stages with
+    asynchronous admission, chunked prefill and per-request SLO stats.
+
+    Each ``step()`` dispatches exactly ONE stage -- a prefill chunk or a
+    generate tick -- chosen by the scheduler policy, so a long prompt costs
+    its running co-residents at most one chunk of extra latency between
+    ticks instead of stalling the batch for the whole prompt."""
+
+    def __init__(
+        self,
+        api,
+        params: Any,
+        *,
+        sched: SchedulerConfig = SchedulerConfig(),
+        **kwargs,
+    ):
+        super().__init__(api, params, **kwargs)
+        if self.api.insert is None:
+            raise ValueError(
+                f"model family {api.cfg.family!r} exposes no per-slot cache "
+                "insertion (ModelApi.insert); the staged engine cannot move "
+                "a finished prefill into the decode cache"
+            )
+        if sched.prefill_chunk >= self.max_len:
+            sched = dataclasses.replace(sched, prefill_chunk=self.max_len - 1)
+        self.sched = sched
+        self._pf: Optional[PrefillTask] = None
+        self._last_action = "generate"
+        self.counts = {"prefill_chunks": 0, "generate_ticks": 0, "inserts": 0}
+        if api.prefill_chunk is not None:
+            self._prefill_step = jax.jit(
+                lambda p, t, start, c: api.prefill_chunk(p, t, start, c),
+                donate_argnums=(3,),
+            )
+        else:
+            # fallback chunked prefill: budgeted per-token decode into the
+            # private B=1 cache (recurrent families have no chunk graph)
+            self._prefill_step = None
+            self._pf_decode = jax.jit(
+                lambda p, t, pos, c: api.decode(p, t, pos, c),
+                donate_argnums=(3,),
+            )
+
+        def _first_token(key, logits):
+            key, sub = jax.random.split(key)
+            return sample(sub, logits[:, -1, :], self.sampler), key
+
+        self._first_token = jax.jit(_first_token)
+
+    # -- scheduling --------------------------------------------------------
+    def _decode_ready(self) -> bool:
+        """Any slot actively generating (occupied and not merely reserved
+        by the in-flight prefill)?"""
+        reserved = self._pf.slot if self._pf is not None else None
+        return any(
+            r is not None and s != reserved for s, r in enumerate(self.slot_req)
+        )
+
+    def _start_prefill(self) -> None:
+        """Reserve a slot and open a PrefillTask for the queue head."""
+        if self._pf is not None or not self.queue:
+            return
+        s = self._free_slot()
+        if s is None:
+            return
+        req = self.queue.popleft()
+        self._occupy_slot(s, req)
+        self._pf = PrefillTask(
+            req=req,
+            slot=s,
+            chunks=chunk_plan(len(req.prompt), self.sched.prefill_chunk),
+            cache=self.api.init_cache(1, self.max_len),
+        )
+
+    def _abort_inflight(self) -> None:
+        self._pf = None
+
+    def step(self) -> List[Request]:
+        """Dispatch one stage (prefill chunk | generate tick); returns
+        requests finished by this dispatch."""
+        self._start_prefill()
+        action = next_action(
+            self.sched.policy,
+            prefill_ready=self._pf is not None,
+            decode_ready=self._decode_ready(),
+            last=self._last_action,
+        )
+        if action == "idle":
+            return []
+        self._tick += 1
+        self._last_action = action
+        if action == "prefill":
+            return self._prefill_dispatch()
+        return self._generate_dispatch()
+
+    # -- stages ------------------------------------------------------------
+    def _prefill_dispatch(self) -> List[Request]:
+        pf = self._pf
+        start, size = pf.next_chunk()
+        req = pf.req
+        chunk_toks = np.asarray([req.prompt[start : start + size]], np.int32)
+        tok_dev = None
+        with self._dispatch():
+            if self._prefill_step is not None:
+                logits, pf.cache = self._prefill_step(
+                    self.params, jnp.asarray(chunk_toks), jnp.int32(start),
+                    pf.cache,
+                )
+            else:
+                for j in range(size):
+                    logits, pf.cache = self._pf_decode(
+                        self.params, jnp.asarray(chunk_toks[:, j : j + 1]),
+                        jnp.int32(start + j), pf.cache,
+                    )
+            pf.advance(size)
+            self.counts["prefill_chunks"] += 1
+            if pf.complete:
+                # first generated token comes from the final chunk's logits;
+                # the finished prefix moves into the reserved decode slot
+                tok_dev, self.key = self._first_token(self.key, logits)
+                self.cache = self._insert_step(
+                    self.cache, pf.cache, jnp.int32(pf.slot)
+                )
+                self.counts["inserts"] += 1
+        if tok_dev is None:
+            return []
+        tok = int(np.asarray(tok_dev)[0])  # the one host sync
+        s = pf.slot
+        self._pf = None
+        self.slot_pos[s] = pf.done_tokens  # == len(prompt): next write pos
+        req.first_token_t = self._clock()
+        req.output.append(tok)
+        if self._check_done(s, tok, req):
+            self._finish(s, req)
+            return [req]
+        self.next_token[s] = tok
+        return []
+
+    def _generate_dispatch(self) -> List[Request]:
+        tokens, pos = self._device_operands()
+        with self._dispatch():
+            toks, self.key, self.cache = self._decode_step(
+                self.params, tokens, pos, self.cache, self.key
+            )
+        sampled = np.asarray(toks)  # the ONE host sync per tick
+        self.counts["generate_ticks"] += 1
+
+        finished: List[Request] = []
+        reserved = self._pf.slot if self._pf is not None else None
+        for s, req in enumerate(self.slot_req):
+            if req is None or s == reserved:
+                continue  # idle or mid-prefill: pad row, output discarded
+            self.slot_pos[s] += 1
+            tok = int(sampled[s])
+            req.output.append(tok)
+            if self._check_done(s, tok, req):
+                finished.append(req)
+                self._finish(s, req)
+            else:
+                self.next_token[s] = tok
+        return finished
+
+    # -- introspection ------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        out = super().stats()
+        pf = self._pf
+        out.update(
+            engine="staged",
+            policy=self.sched.policy,
+            prefill_chunk=self.sched.prefill_chunk,
+            counts=dict(self.counts),
+            inflight_prefill=None if pf is None else {
+                "uid": pf.req.uid,
+                "slot": pf.slot,
+                "done_tokens": pf.done_tokens,
+                "total_tokens": len(pf.req.prompt),
+            },
+        )
+        return out

@@ -1,0 +1,168 @@
+"""Staged-serving scheduler: chunked-prefill planning, stage arbitration,
+per-request SLO accounting.
+
+The staged engine (``repro.serving.engine.StagedEngine``) splits serving
+into three device stages -- ``prefill`` (whole-prompt chunks through a
+dedicated graph), ``insert`` (donated write of the finished prefix into a
+decode-cache slot) and ``generate`` (the donated one-dispatch decode tick).
+Everything host-side that decides *which* stage runs next, *how* a prompt
+is cut into chunks, and *what the user-visible latency was* lives here, so
+it unit-tests without touching a device:
+
+  * ``chunk_plan`` cuts an arbitrary-length prompt into a bounded set of
+    chunk shapes (full ``chunk``-sized pieces + a power-of-two remainder
+    decomposition), so the prefill graph compiles O(log chunk) variants
+    total instead of one per prompt length.
+  * ``next_action`` is the policy arbiter: decode-priority interleaves at
+    most one prefill chunk between consecutive generate ticks (decode
+    latency over admission latency); prefill-priority drains prefill work
+    first (time-to-first-token over time-per-output-token).
+  * ``PrefillTask`` tracks one in-flight prefill (request, reserved slot,
+    chunk cursor, its private B=1 cache).
+  * ``LatencyStats`` aggregates per-request queue-wait / TTFT / TPOT and
+    reports p50/p95/p99 for ``engine.stats()`` and the serving bench.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+POLICIES = ("decode", "prefill")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Knobs for the staged engine's stage arbitration.
+
+    prefill_chunk: token budget one prefill dispatch may consume.  Long
+        prompts are cut into pieces of at most this size, so a 10k-token
+        prompt never monopolizes the engine for 10k positions' worth of
+        work between two generate ticks.
+    policy: "decode" runs a generate tick between any two prefill chunks
+        whenever generation work exists (running requests never see more
+        than one chunk of added inter-token latency); "prefill" runs all
+        pending prefill work first (admissions reach their first token
+        sooner, at the cost of inter-token latency for running requests).
+    """
+
+    prefill_chunk: int = 32
+    policy: str = "decode"
+
+    def __post_init__(self):
+        if self.prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got {self.policy!r}")
+
+
+def chunk_plan(n_tokens: int, chunk: int) -> List[int]:
+    """Chunk sizes for an ``n_tokens`` prompt under a ``chunk`` budget.
+
+    Full ``chunk``-sized pieces first, then the remainder decomposed into
+    descending powers of two (13 -> [8, 4, 1]).  The prefill graph is
+    compiled per chunk LENGTH, so the reachable shape set is
+    {chunk} U {2^i < chunk} -- O(log chunk) compiles ever, instead of one
+    per distinct prompt length.
+    """
+    if n_tokens < 1:
+        raise ValueError(f"need at least one prompt token, got {n_tokens}")
+    sizes = [chunk] * (n_tokens // chunk)
+    rem = n_tokens % chunk
+    while rem:
+        p = 1 << (rem.bit_length() - 1)  # largest power of two <= rem
+        sizes.append(p)
+        rem -= p
+    return sizes
+
+
+def next_action(
+    policy: str, *, prefill_ready: bool, decode_ready: bool, last: str
+) -> str:
+    """Which stage the engine should dispatch next.
+
+    prefill_ready: a prefill chunk could run (in-flight task, or a queued
+        request with a free slot to reserve).
+    decode_ready: at least one slot is actively generating.
+    last: the previously dispatched stage ("prefill" | "generate"), used by
+        decode-priority to interleave instead of starving prefill outright.
+    """
+    if not prefill_ready and not decode_ready:
+        return "idle"
+    if not prefill_ready:
+        return "generate"
+    if not decode_ready:
+        return "prefill"
+    if policy == "prefill":
+        return "prefill"
+    # decode-priority: generate by default, but admit one prefill chunk
+    # after every generate tick so prefill still progresses under load
+    # (strict alternation G P G P ... while both kinds of work exist).
+    return "prefill" if last == "generate" else "generate"
+
+
+@dataclasses.dataclass
+class PrefillTask:
+    """One in-flight chunked prefill: a request bound to a reserved slot."""
+
+    req: Any  # Request
+    slot: int
+    chunks: List[int]
+    cache: Any  # private B=1 prefill cache (model cache pytree)
+    idx: int = 0  # next chunk to dispatch
+    done_tokens: int = 0  # prompt tokens already consumed
+
+    @property
+    def complete(self) -> bool:
+        return self.idx >= len(self.chunks)
+
+    def next_chunk(self) -> tuple:
+        """(start, size) of the next chunk to dispatch."""
+        return self.done_tokens, self.chunks[self.idx]
+
+    def advance(self, size: int) -> None:
+        self.done_tokens += size
+        self.idx += 1
+
+
+class LatencyStats:
+    """Per-request SLO aggregation: queue wait, TTFT, TPOT (seconds).
+
+    ``record`` is called once per finished request; requests drained
+    unfinished are never recorded (they have no final token).  TPOT is
+    only defined for requests with >= 2 output tokens.
+    """
+
+    def __init__(self):
+        self.queue_wait: List[float] = []
+        self.ttft: List[float] = []
+        self.tpot: List[float] = []
+
+    def record(self, req) -> None:
+        if req.submit_t is None:
+            return  # request never went through submit() timing
+        if req.prefill_start_t is not None:
+            self.queue_wait.append(req.prefill_start_t - req.submit_t)
+        if req.first_token_t is not None:
+            self.ttft.append(req.first_token_t - req.submit_t)
+            if req.finish_t is not None and len(req.output) > 1:
+                self.tpot.append(
+                    (req.finish_t - req.first_token_t) / (len(req.output) - 1)
+                )
+
+    @staticmethod
+    def _pcts(vals: List[float]) -> Optional[Dict[str, float]]:
+        if not vals:
+            return None
+        p50, p95, p99 = np.percentile(np.asarray(vals), [50, 95, 99])
+        return {"p50": float(p50), "p95": float(p95), "p99": float(p99),
+                "n": len(vals)}
+
+    def summary(self) -> Dict[str, Optional[Dict[str, float]]]:
+        """{"queue_wait"|"ttft"|"tpot": {"p50","p95","p99","n"} | None}."""
+        return {
+            "queue_wait": self._pcts(self.queue_wait),
+            "ttft": self._pcts(self.ttft),
+            "tpot": self._pcts(self.tpot),
+        }

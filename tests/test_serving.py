@@ -147,6 +147,45 @@ def test_queue_depth_and_admission_ticks():
     assert eng.stats()["queued"] == 0
 
 
+def test_lockstep_run_budget_reports_leftover():
+    """run(max_ticks) expiry must not silently abandon work: every
+    submitted request is accounted for in finished + leftover()."""
+    cfg = configs.get_smoke("qwen3-8b")
+    api = build_model(cfg)
+    params = api.init(KEY)
+    eng = ServingEngine(api, params, n_slots=1, max_len=32)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=[1, 2, 3, 4], max_new_tokens=8))
+    done = eng.run(max_ticks=2)
+    left = eng.leftover()
+    assert done == [] and len(left["in_flight"]) == 1 and len(left["queued"]) == 2
+    assert all(not r.done for r in left["in_flight"] + left["queued"])
+    drained = eng.drain()
+    assert {r.uid for r in drained["in_flight"] + drained["queued"]} == {0, 1, 2}
+    assert eng.leftover() == {"in_flight": [], "queued": []}
+    assert eng.stats()["active"] == 0 and eng.stats()["queued"] == 0
+
+
+def test_ssm_slot_reuse_no_stale_state():
+    """Recurrent state is NOT masked by cache positions the way stale KV
+    rows are: a reused slot must be cleared on admission, or the previous
+    occupant's SSM state leaks into the new request's tokens."""
+    cfg = configs.get_smoke("falcon-mamba-7b")
+    api = build_model(cfg)
+    params = api.init(KEY)
+    probe = [5, 9, 2]
+
+    fresh = ServingEngine(api, params, n_slots=1, max_len=16)
+    fresh.submit(Request(uid=0, prompt=list(probe), max_new_tokens=3))
+    want = fresh.run()[0].output
+
+    eng = ServingEngine(api, params, n_slots=1, max_len=16)
+    eng.submit(Request(uid=0, prompt=[13, 8, 8, 8, 1], max_new_tokens=4))
+    eng.submit(Request(uid=1, prompt=list(probe), max_new_tokens=3))
+    done = {r.uid: r.output for r in eng.run()}
+    assert done[1] == want
+
+
 def test_sampler_modes():
     logits = jnp.asarray([[0.0, 5.0, 1.0, -2.0]])
     assert int(sample(KEY, logits, SamplerConfig(temperature=0.0))[0]) == 1

@@ -1,0 +1,253 @@
+"""Staged engine: scheduler units, staged-vs-lockstep token parity, queue
+discipline, drain/leftover, slot-state hygiene, SLO stats."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serving import (
+    Request,
+    SchedulerConfig,
+    ServingEngine,
+    StagedEngine,
+    chunk_plan,
+    next_action,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# scheduler units (no device work)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "n,chunk",
+    [(1, 8), (7, 8), (8, 8), (9, 8), (31, 8), (64, 8), (13, 32), (5, 1)],
+)
+def test_chunk_plan_boundaries(n, chunk):
+    sizes = chunk_plan(n, chunk)
+    assert sum(sizes) == n
+    assert all(1 <= s <= chunk for s in sizes)
+    # remainder tail is strictly-descending powers of two -> the compiled
+    # shape set is {chunk} U {2^i < chunk}, O(log chunk) total
+    tail = [s for s in sizes if s != chunk]
+    assert tail == sorted(tail, reverse=True)
+    assert all(s & (s - 1) == 0 for s in tail)
+
+
+def test_chunk_plan_rejects_empty():
+    with pytest.raises(ValueError, match="at least one"):
+        chunk_plan(0, 8)
+
+
+def test_scheduler_config_validation():
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        SchedulerConfig(prefill_chunk=0)
+    with pytest.raises(ValueError, match="policy"):
+        SchedulerConfig(policy="fifo")
+    assert SchedulerConfig().policy == "decode"
+
+
+def test_next_action_policies():
+    for policy in ("decode", "prefill"):
+        assert next_action(policy, prefill_ready=False, decode_ready=False,
+                           last="generate") == "idle"
+        assert next_action(policy, prefill_ready=True, decode_ready=False,
+                           last="generate") == "prefill"
+        assert next_action(policy, prefill_ready=False, decode_ready=True,
+                           last="prefill") == "generate"
+    # contention: prefill-priority drains prefill; decode-priority strictly
+    # alternates so neither stage starves
+    assert next_action("prefill", prefill_ready=True, decode_ready=True,
+                       last="prefill") == "prefill"
+    assert next_action("decode", prefill_ready=True, decode_ready=True,
+                       last="generate") == "prefill"
+    assert next_action("decode", prefill_ready=True, decode_ready=True,
+                       last="prefill") == "generate"
+
+
+# ---------------------------------------------------------------------------
+# staged-vs-lockstep token parity (greedy oracle)
+# ---------------------------------------------------------------------------
+def _run(api, params, cls, prompts, max_new=4, n_slots=2, max_len=64, **kw):
+    eng = cls(api, params, n_slots=n_slots, max_len=max_len, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=max_new))
+    done = eng.run(max_ticks=4000)
+    left = eng.leftover()
+    assert not left["in_flight"] and not left["queued"]
+    return {r.uid: r.output for r in done}, eng
+
+
+def test_staged_matches_lockstep_transformer():
+    """Boundary prompt lengths (1, chunk-1, chunk, chunk+1, max_len-1)
+    through both policies produce bit-identical greedy tokens."""
+    cfg = configs.get_smoke("qwen3-8b")
+    api = build_model(cfg)
+    params = api.init(KEY)
+    chunk, max_len = 8, 32
+    lens = [1, chunk - 1, chunk, chunk + 1, max_len - 1]
+    prompts = [[(3 * j + i) % 50 + 1 for j in range(n)] for i, n in enumerate(lens)]
+    lock, _ = _run(api, params, ServingEngine, prompts, max_len=max_len)
+    for policy in ("decode", "prefill"):
+        stag, eng = _run(
+            api, params, StagedEngine, prompts, max_len=max_len,
+            sched=SchedulerConfig(prefill_chunk=chunk, policy=policy),
+        )
+        assert stag == lock, f"policy={policy}"
+        assert eng.counts["inserts"] == len(prompts)
+
+
+def test_staged_matches_lockstep_moe():
+    """MoE parity needs drop-free capacity: expert drops depend on which
+    tokens share a dispatch, and staged prefill batches tokens differently
+    from the lockstep tick."""
+    cfg = dataclasses.replace(configs.get_smoke("grok-1-314b"), capacity_factor=8.0)
+    api = build_model(cfg)
+    params = api.init(KEY)
+    prompts = [[5, 9, 2, 7, 11], [3, 1], [8] * 9]
+    lock, _ = _run(api, params, ServingEngine, prompts, max_len=32)
+    stag, _ = _run(api, params, StagedEngine, prompts, max_len=32,
+                   sched=SchedulerConfig(prefill_chunk=4))
+    assert stag == lock
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "zamba2-7b"])
+def test_staged_fallback_families(arch):
+    """Recurrent families have no chunk graph; the budgeted per-token
+    fallback prefill must still match the lockstep oracle."""
+    cfg = configs.get_smoke(arch)
+    api = build_model(cfg)
+    params = api.init(KEY)
+    assert api.prefill_chunk is None and api.insert is not None
+    prompts = [[5, 9, 2, 7, 11], [3, 1]]
+    lock, _ = _run(api, params, ServingEngine, prompts, max_len=32)
+    stag, _ = _run(api, params, StagedEngine, prompts, max_len=32,
+                   sched=SchedulerConfig(prefill_chunk=4))
+    assert stag == lock
+
+
+# ---------------------------------------------------------------------------
+# queue discipline / drain / slot hygiene / stats
+# ---------------------------------------------------------------------------
+def test_queue_discipline_under_backlog():
+    """More requests than slots: FIFO admission, everyone completes, later
+    submissions record later admission ticks."""
+    cfg = configs.get_smoke("qwen3-8b")
+    api = build_model(cfg)
+    params = api.init(KEY)
+    eng = StagedEngine(api, params, n_slots=1, max_len=16,
+                       sched=SchedulerConfig(prefill_chunk=4))
+    for i in range(4):
+        eng.submit(Request(uid=i, prompt=[i + 1, 2, 3], max_new_tokens=2))
+    done = eng.run(max_ticks=500)
+    assert sorted(r.uid for r in done) == [0, 1, 2, 3]
+    ticks = [r.admitted_tick for r in sorted(done, key=lambda r: r.uid)]
+    assert ticks == sorted(ticks)  # FIFO: uid order == admission order
+    assert all(len(r.output) == 2 for r in done)
+
+
+def test_run_budget_reports_leftover_then_drains():
+    """A tick budget too small to finish does NOT silently discard work:
+    leftover() names every in-flight/queued request, drain() hands them
+    back and leaves a reusable engine."""
+    cfg = configs.get_smoke("qwen3-8b")
+    api = build_model(cfg)
+    params = api.init(KEY)
+    eng = StagedEngine(api, params, n_slots=1, max_len=32,
+                       sched=SchedulerConfig(prefill_chunk=4))
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=[1, 2, 3, 4, 5, 6], max_new_tokens=8))
+    done = eng.run(max_ticks=2)  # enough for part of request 0's prefill
+    left = eng.leftover()
+    accounted = {r.uid for r in done} | {r.uid for r in left["in_flight"]} \
+        | {r.uid for r in left["queued"]}
+    assert accounted == {0, 1, 2}
+    assert all(not r.done for r in left["in_flight"] + left["queued"])
+
+    drained = eng.drain()
+    assert {r.uid for r in drained["in_flight"]} == {r.uid for r in left["in_flight"]}
+    assert eng.leftover() == {"in_flight": [], "queued": []}
+    # drained engine is reusable and produces clean output
+    eng.submit(Request(uid=9, prompt=[5, 9, 2], max_new_tokens=2))
+    redo = eng.run(max_ticks=200)
+    assert len(redo) == 1 and redo[0].uid == 9 and len(redo[0].output) == 2
+
+    fresh = StagedEngine(api, params, n_slots=1, max_len=32,
+                         sched=SchedulerConfig(prefill_chunk=4))
+    fresh.submit(Request(uid=9, prompt=[5, 9, 2], max_new_tokens=2))
+    assert fresh.run(max_ticks=200)[0].output == redo[0].output
+
+
+def test_slot_state_reset_on_completion():
+    """Completion returns the slot to the canonical idle state -- no stale
+    next_token/slot_cursor/slot_pos for the next occupant to inherit."""
+    cfg = configs.get_smoke("qwen3-8b")
+    api = build_model(cfg)
+    params = api.init(KEY)
+    for cls, kw in [(ServingEngine, {}),
+                    (StagedEngine, {"sched": SchedulerConfig(prefill_chunk=4)})]:
+        eng = cls(api, params, n_slots=2, max_len=16, **kw)
+        eng.submit(Request(uid=0, prompt=[5, 9, 2], max_new_tokens=2))
+        eng.run(max_ticks=200)
+        assert eng.slot_req == [None, None]
+        assert eng.slot_pos.tolist() == [0, 0]
+        assert eng.slot_cursor.tolist() == [0, 0]
+        assert eng.next_token.tolist() == [0, 0]
+
+
+def test_staged_stats_slo_fields():
+    cfg = configs.get_smoke("qwen3-8b")
+    api = build_model(cfg)
+    params = api.init(KEY)
+    eng = StagedEngine(api, params, n_slots=2, max_len=32,
+                       sched=SchedulerConfig(prefill_chunk=4, policy="prefill"))
+    for i in range(2):
+        eng.submit(Request(uid=i, prompt=[1, 2, 3, 4, 5], max_new_tokens=3))
+    eng.run(max_ticks=500)
+    s = eng.stats()
+    assert s["engine"] == "staged" and s["policy"] == "prefill"
+    assert s["prefill_chunk"] == 4
+    assert s["counts"]["inserts"] == 2 and s["counts"]["generate_ticks"] > 0
+    lat = s["latency"]
+    for field in ("queue_wait", "ttft", "tpot"):
+        assert lat[field] is not None and lat[field]["n"] == 2
+        assert lat[field]["p50"] <= lat[field]["p95"] <= lat[field]["p99"]
+
+
+def test_decode_policy_alternates_under_contention():
+    """With a running request and a backlog, decode-priority never runs two
+    prefill chunks back-to-back; prefill-priority drains the whole prompt."""
+    cfg = configs.get_smoke("qwen3-8b")
+    api = build_model(cfg)
+    params = api.init(KEY)
+
+    def trace(policy):
+        eng = StagedEngine(api, params, n_slots=2, max_len=64,
+                           sched=SchedulerConfig(prefill_chunk=4, policy=policy))
+        eng.submit(Request(uid=0, prompt=[7, 7], max_new_tokens=30))
+        for _ in range(3):  # request 0 prefilled + generating
+            eng.step()
+        eng.submit(Request(uid=1, prompt=[1] * 16, max_new_tokens=2))
+        actions = []
+        for _ in range(8):
+            eng.step()
+            actions.append(eng._last_action)
+        return actions
+
+    acts = trace("decode")
+    assert "prefill" in acts and "generate" in acts
+    assert not any(a == b == "prefill" for a, b in zip(acts, acts[1:]))
+    acts = trace("prefill")
+    assert acts[:4] == ["prefill"] * 4  # 16-token prompt = 4 chunks, drained first
+
+
+def test_staged_requires_insert():
+    cfg = configs.get_smoke("qwen3-8b")
+    api = build_model(cfg)
+    params = api.init(KEY)
+    api_no_insert = dataclasses.replace(api, insert=None)
+    with pytest.raises(ValueError, match="insert"):
+        StagedEngine(api_no_insert, params, n_slots=1, max_len=16)
