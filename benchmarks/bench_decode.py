@@ -11,7 +11,10 @@ Cells: {ternary, int4, int8, nf4, mx} x {fused, unfused, xla}, measuring
     output and the scaled/bias output through HBM separately.  (XLA may
     later fuse elementwise stages, but the kernel-boundary buffers are
     structural -- this is the count of *guaranteed* materializations.)
-  * ragged-batch recompiles after warmup (power-of-two bucketing: 0).
+  * ragged-batch recompiles after warmup (power-of-two bucketing: 0),
+  * KV-format long-context cells ({kv_bf16, kv_int8, kv_mx} at a
+    KV_BENCH_LEN cache): packed cache bytes, bits/value, traffic reduction
+    vs bf16, achieved GB/s/device vs the HBM roofline (docs/KV_CACHE.md).
 
 Wall-clock on the CPU container is regression tracking, not the perf claim
 (pallas cells run in interpret mode off-TPU; the op-count and recompile
@@ -187,6 +190,82 @@ def _bench_model(bits: int, mode: str, slots: int, seq: int, reps: int,
     }
 
 
+KV_FORMATS = ("kv_bf16", "kv_int8", "kv_mx")
+KV_BENCH_LEN = 2048  # long-context cell: cache reads dominate decode HBM
+
+
+def _bench_kv_cache(reps: int, mesh=None, mesh_tag: str = "1") -> List[Dict]:
+    """Per-KV-format long-context decode cells.
+
+    One B=1 slot against a KV_BENCH_LEN cache (the regime where cache
+    traffic, not weights, bounds the tick).  Columns:
+
+      * kv_cache_bytes / kv_bits_per_value -- the packed read set,
+      * cache_reduction_vs_bf16 -- the traffic claim (kv_int8 ~1.94x:
+        2hd/(hd+1) with hd=32, the per-token exponent column is the
+        asymptotic-2x overhead; kv_mx ~3.99x),
+      * achieved_gb_s_per_device vs roofline_gb_s -- cache bytes the tick
+        actually streamed against the HBM ceiling.  Meaningful on TPU;
+        on the CPU container wall-clock is regression tracking only, the
+        bytes columns are platform-independent.
+
+    Ticks run the XLA fold-the-scales path (the portable oracle); the
+    Pallas flash-decode kernel is parity-gated in CI (interpret mode) and
+    claims its traffic via the same bytes columns.
+    """
+    from repro.models import kv_cache
+    from repro.roofline.analysis import HBM_BW
+
+    slots, reps = 1, max(3, reps // 3)
+    rows: List[Dict] = []
+    bf16_bytes = None
+    for fmt in KV_FORMATS:
+        cfg = tiny_lm(QuantConfig(w_bits=8, group_size=16, mode="ptq"))
+        cfg = dataclasses.replace(cfg, kv_fmt=fmt)
+        api = build_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        qparams, plan, qapi = quantize_and_plan(api, params)
+        cache = qapi.init_cache(slots, KV_BENCH_LEN)
+        cbytes = kv_cache.cache_bytes(cache)
+        if bf16_bytes is None:
+            bf16_bytes = cbytes  # kv_bf16 runs first
+        n_values = (2 * cfg.n_layers * slots * KV_BENCH_LEN
+                    * cfg.n_kv_heads * cfg.hd())
+        tok = jnp.zeros((slots, 1), jnp.int32)
+        step = jax.jit(
+            lambda p, t, pos, c, _api=qapi: (
+                lambda lg, nc: (jnp.argmax(lg[:, -1, :], -1).astype(jnp.int32), nc)
+            )(*_api.decode(p, t, pos, c)),
+            donate_argnums=(3,),
+        )
+        state = {"c": cache, "i": KV_BENCH_LEN // 2}
+
+        def tick():
+            toks, state["c"] = step(
+                qparams, tok,
+                jnp.full((slots,), state["i"] % (KV_BENCH_LEN - 1), jnp.int32),
+                state["c"],
+            )
+            state["i"] += 1
+            return toks
+
+        decode_s = _timed_steps(tick, reps)
+        devices = 1 if mesh is None else mesh.devices.size
+        rows.append({
+            "format": fmt, "mode": "cache",
+            "mesh": mesh_tag, "devices": devices,
+            "seq_len": KV_BENCH_LEN,
+            "decode_tok_per_s": slots / decode_s,
+            "decode_step_us": decode_s * 1e6,
+            "kv_cache_bytes": cbytes,
+            "kv_bits_per_value": cbytes * 8 / n_values,
+            "cache_reduction_vs_bf16": bf16_bytes / cbytes,
+            "achieved_gb_s_per_device": cbytes / decode_s / 1e9 / devices,
+            "roofline_gb_s": HBM_BW / 1e9,
+        })
+    return rows
+
+
 def _ragged_recompiles() -> int:
     """Fused-path recompiles across ragged batch sizes after bucket warmup."""
     from repro.kernels.ternary_matmul import ternary_matmul_fused
@@ -231,6 +310,16 @@ def run(csv=print, *, slots: int = 4, seq: int = 16, reps: int = 15,
                 f"mesh={mesh_tag};"
                 f"tok_s_per_dev={r['decode_tok_per_s_per_device']:.1f}"
             )
+    for r in _bench_kv_cache(reps, mesh=mesh, mesh_tag=mesh_tag):
+        rows.append(r)
+        csv(
+            f"decode/kv_{r['format']}_T{r['seq_len']},{r['decode_step_us']:.1f},"
+            f"cache_mb={r['kv_cache_bytes'] / 1e6:.2f};"
+            f"bits_per_value={r['kv_bits_per_value']:.2f};"
+            f"reduction_vs_bf16={r['cache_reduction_vs_bf16']:.2f}x;"
+            f"achieved_gb_s_per_dev={r['achieved_gb_s_per_device']:.3f};"
+            f"roofline_gb_s={r['roofline_gb_s']:.0f}"
+        )
     rc = _ragged_recompiles()
     csv(f"decode/ragged_recompiles_after_warmup,{rc:.0f},want=0")
     rows.append({"ragged_recompiles_after_warmup": rc, "mesh": mesh_tag})

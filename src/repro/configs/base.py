@@ -77,6 +77,10 @@ class ArchConfig:
     # numerics / memory
     dtype: str = "bfloat16"
     kv_bits: int = 16  # 8 = DFP-quantized KV cache (per-token-head exponents)
+    # registered KV-cache format name (models/kv_cache.py); None defers to
+    # kv_bits back-compat: 8 -> 'kv_int8', else 'kv_bf16'
+    kv_fmt: Optional[str] = None
+    flash_decode: bool = False  # fused Pallas flash-decode kernel for S==1
     remat: bool = True
     norm_eps: float = 1e-6
     tie_embeddings: bool = False

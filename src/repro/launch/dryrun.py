@@ -63,11 +63,12 @@ def build_cell(
     kv_bits: int = 16,
     backend: str = "xla",
     accum_dtype: str = "float32",
+    kv_fmt: Optional[str] = None,
 ):
     """Returns (jitted_fn, example_args_as_specs)."""
     qc = QuantConfig(w_bits=w_bits, group_size=group_size, mode=quant_mode, backend=backend)
     cfg = configs.get_config(arch, qc)
-    cfg = dataclasses.replace(cfg, dtype=act_dtype, kv_bits=kv_bits)
+    cfg = dataclasses.replace(cfg, dtype=act_dtype, kv_bits=kv_bits, kv_fmt=kv_fmt)
     api = build_model(cfg)
     specs, kind = input_specs(cfg, shape)
     params_shapes = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
@@ -146,6 +147,7 @@ def run_cell(
     kv_bits: int = 16,
     backend: str = "xla",
     accum_dtype: str = "float32",
+    kv_fmt: Optional[str] = None,
 ) -> Dict[str, Any]:
     shape = configs.get_shape(shape_name)
     cfg = configs.get_config(arch)
@@ -165,7 +167,7 @@ def run_cell(
             fn, args = build_cell(
                 arch, shape, mesh, quant_mode, w_bits, group_size, seq_shard,
                 microbatches=microbatches, kv_bits=kv_bits, backend=backend,
-                accum_dtype=accum_dtype,
+                accum_dtype=accum_dtype, kv_fmt=kv_fmt,
             )
             lowered = fn.lower(*args)
             t_lower = time.time() - t0
@@ -188,6 +190,7 @@ def run_cell(
         "quant_mode": quant_mode,
         "microbatches": microbatches,
         "kv_bits": kv_bits,
+        "kv_fmt": kv_fmt,
         "n_params": n_total,
         "per_device": {
             "flops": roof.flops,
@@ -305,6 +308,9 @@ def main(argv=None) -> int:
     ap.add_argument("--no-seq-shard", action="store_true")
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--kv-bits", type=int, default=16, choices=[8, 16])
+    ap.add_argument("--kv-fmt", default=None,
+                    choices=["kv_bf16", "kv_int8", "kv_mx"],
+                    help="registered KV-cache format; overrides --kv-bits")
     ap.add_argument("--backend", default="xla", choices=["xla", "xla_int8"])
     ap.add_argument("--accum-dtype", default="float32",
                     choices=["float32", "bfloat16"])
@@ -364,6 +370,7 @@ def main(argv=None) -> int:
                 args.w_bits, args.group_size, not args.no_seq_shard,
                 microbatches=args.microbatches, kv_bits=args.kv_bits,
                 backend=args.backend, accum_dtype=args.accum_dtype,
+                kv_fmt=args.kv_fmt,
             )
         except Exception as e:  # a failing cell is a bug in the system
             failures += 1

@@ -132,6 +132,14 @@ def main():
                     help="registered weight format by name (e.g. nf4, mx); "
                          "overrides the --bits ladder for default sites")
     ap.add_argument("--group-size", type=int, default=16)
+    ap.add_argument("--kv-fmt", default=None, metavar="NAME",
+                    choices=["kv_bf16", "kv_int8", "kv_mx"],
+                    help="registered KV-cache format (models/kv_cache.py); "
+                         "overrides the config (and its kv_bits back-compat)")
+    ap.add_argument("--flash-decode", action="store_true",
+                    help="route single-token decode through the fused "
+                         "Pallas flash-decode kernel (reads the packed "
+                         "cache; interpreted off-TPU)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
@@ -173,6 +181,22 @@ def main():
         api, qparams, plan = boot_from_artifact(args.artifact, mesh=mesh)
     else:
         api, qparams, plan = boot_quantize(args, mesh=mesh)
+    if args.kv_fmt or args.flash_decode:
+        # rebind the api closures to the overridden cache config; weights
+        # and the compiled plan are untouched (the KV format is a pure
+        # serving-time choice)
+        import dataclasses
+
+        cfg2 = dataclasses.replace(
+            api.cfg,
+            kv_fmt=args.kv_fmt or api.cfg.kv_fmt,
+            flash_decode=args.flash_decode or api.cfg.flash_decode,
+        )
+        api = build_model(cfg2, api.ctx)
+        from repro.models import kv_cache as kv_fmt_lib
+
+        print(f"kv cache: fmt={kv_fmt_lib.resolve_kv_fmt(cfg2)} "
+              f"flash_decode={cfg2.flash_decode}")
     cfg = api.cfg
 
     eng_kw = dict(n_slots=args.slots, max_len=args.max_len,

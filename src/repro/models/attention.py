@@ -6,26 +6,28 @@ Training/prefill uses an online-softmax chunked formulation (flash-attention
 scheme at the XLA level): KV is scanned in blocks with running max/sum so the
 S x S score matrix is never materialized -- this is what keeps the roofline
 memory term linear in S.
+
+The decode KV cache is a registered block format (``models/kv_cache.py``:
+kv_bf16 / kv_int8 / kv_mx) quantized on write.  Two read paths exist:
+
+  * the XLA fold-the-scales path (``_attend_dense``): per-token power-of-two
+    scales fold into the score/probability tensors, so the dequantized
+    cache never materializes.  This is the oracle and the portable default.
+  * the Pallas flash-decode kernel (``kernels/flash_decode.py``, enabled by
+    ``cfg.flash_decode`` for S == 1 steps): loads the *packed* leaves and
+    dequantizes tile-by-tile in VMEM -- one HBM pass over the packed bytes.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import dfp
-from repro.models import layers
+from repro.models import kv_cache, layers
 from repro.models.layers import QuantCtx, dense
 
 NEG_INF = -1e30
-
-
-def _kv_quantize(x: jax.Array):
-    """(B,S,Kh,hd) -> (int8 mantissas, int8 exponents (B,S,Kh,1))."""
-    max_abs = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    e = dfp.choose_exponent(max_abs, 8)
-    return dfp.quantize(x.astype(jnp.float32), e, 8), e.astype(jnp.int8)
 
 
 def init_attention(key, cfg, dtype, cross: bool = False) -> dict:
@@ -67,25 +69,24 @@ def _mask_bias(
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
-def _attend_dense(q, k, v, bias, ke=None, ve=None):
+def _attend_dense(q, k, v, bias, kscale=None, vscale=None):
     """q (B,S,Kh,G,hd), k/v (B,T,Kh,hd), bias broadcastable to (B,Kh,G,S,T).
 
     Grouped-KV layout: used on the decode path where the score tensor is
     (..., 1, T) and repeating KV would blow up cache traffic.
 
-    ke/ve: optional int8-KV-cache DFP exponents (B,T,Kh,1).  Scales are
-    folded into the score/probability tensors so the dequantized cache is
-    never materialized -- the cache streams from HBM at 1 byte/elem.
+    kscale/vscale: optional per-token cache scales (B,T,Kh) -- exact powers
+    of two from the kv format's exponent planes.  They are folded into the
+    score/probability tensors so the dequantized cache is never
+    materialized (``kv_cache.attend_view`` supplies integer codes).
     """
     scale = q.shape[-1] ** -0.5
     s = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32), k.astype(jnp.float32))
-    if ke is not None:  # fold per-(token, head) key scales into the scores
-        kscale = dfp.exp2i(ke[..., 0])  # (B,T,Kh), exact power of two
+    if kscale is not None:  # fold key scales into the scores
         s = s * kscale.transpose(0, 2, 1)[:, :, None, None, :]
     s = s * scale + bias
     p = jax.nn.softmax(s, axis=-1)
-    if ve is not None:  # fold value scales into the probabilities
-        vscale = dfp.exp2i(ve[..., 0])
+    if vscale is not None:  # fold value scales into the probabilities
         p = p * vscale.transpose(0, 2, 1)[:, :, None, None, :]
     out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
     return out
@@ -107,38 +108,78 @@ def _attend_chunked(q, k, v, q_pos, causal, window, chunk: int):
 
     q (B,S,H,hd); k/v (B,T,H,hd) (KV pre-repeated to full heads).  Only the
     (m, l, acc) carries survive a chunk; scores/probs are recomputed in the
-    backward pass (jax.checkpoint)."""
+    backward pass (jax.checkpoint).  T need not divide the chunk size: the
+    trailing T % chunk tokens run as one final partial chunk instead of
+    silently falling back to the O(S*T)-materializing dense path.
+    """
     b, s, h, hd = q.shape
     t = k.shape[1]
     scale = hd**-0.5
     qf = q.astype(jnp.float32) * scale
-    n_chunks = t // chunk
+    n_full, rem = divmod(t, chunk)
 
-    def body(carry, idx):
+    def step(carry, ks, vs, k_pos):
         m, l, acc = carry
-        ks = jax.lax.dynamic_slice_in_dim(k, idx * chunk, chunk, 1)
-        vs = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, 1)
-        k_pos = idx * chunk + jnp.arange(chunk)
-        bias = _mask_bias(q_pos, k_pos, causal, window)  # (S, chunk) or (B,S,chunk)
+        bias = _mask_bias(q_pos, k_pos, causal, window)  # (S, c) or (B,S,c)
         bias = bias[None] if bias.ndim == 2 else bias[:, None]
         sc = jnp.einsum("bshd,bthd->bhst", qf, ks.astype(jnp.float32))
-        sc = sc + bias  # (B,H,S,chunk)
+        sc = sc + bias  # (B,H,S,c)
         m_new = jnp.maximum(m, sc.max(-1))
         p = jnp.exp(sc - m_new[..., None])
         corr = jnp.exp(m - m_new)
         l_new = l * corr + p.sum(-1)
         upd = jnp.einsum("bhst,bthd->bshd", p, vs.astype(jnp.float32))
         acc_new = acc * corr.transpose(0, 2, 1)[..., None] + upd
-        return (m_new, l_new, acc_new), None
+        return m_new, l_new, acc_new
 
-    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((b, h, s), jnp.float32)
-    a0 = jnp.zeros((b, s, h, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(
-        jax.checkpoint(body), (m0, l0, a0), jnp.arange(n_chunks)
+    def body(carry, idx):
+        ks = jax.lax.dynamic_slice_in_dim(k, idx * chunk, chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, 1)
+        k_pos = idx * chunk + jnp.arange(chunk)
+        return step(carry, ks, vs, k_pos), None
+
+    carry = (
+        jnp.full((b, h, s), NEG_INF, jnp.float32),
+        jnp.zeros((b, h, s), jnp.float32),
+        jnp.zeros((b, s, h, hd), jnp.float32),
     )
+    if n_full:
+        carry, _ = jax.lax.scan(
+            jax.checkpoint(body), carry, jnp.arange(n_full)
+        )
+    if rem:  # final partial chunk (static shape: compiled once per length)
+        carry = step(
+            carry, k[:, n_full * chunk:], v[:, n_full * chunk:],
+            n_full * chunk + jnp.arange(rem),
+        )
+    m, l, acc = carry
     denom = jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
     return acc / denom
+
+
+def _flash_decode_path(q, cache, fmt, q_pos, valid, window, cfg):
+    """Route one S == 1 step through the packed-cache Pallas kernel."""
+    from repro.kernels.flash_decode import flash_decode
+
+    b = q.shape[0]
+    hd = cfg.hd()
+    kh = cfg.n_kv_heads
+    g = cfg.n_heads // kh
+    qf = q[:, 0].reshape(b, kh, g, hd).astype(jnp.float32)
+    if q_pos.ndim == 2:
+        qp = q_pos[:, -1]
+    else:  # (1,) traced position shared by every row
+        qp = jnp.broadcast_to(q_pos.reshape(-1)[-1], (b,))
+    win = jnp.asarray(
+        2**30 if window is None else window, jnp.int32
+    ).reshape(1, 1)
+    out = flash_decode(
+        qf, cache["k"], cache["v"], cache.get("ke"), cache.get("ve"),
+        qp.astype(jnp.int32).reshape(b, 1),
+        valid.astype(jnp.int32).reshape(b, 1),
+        win, fmt=fmt,
+    )
+    return out.reshape(b, 1, cfg.n_heads * hd)
 
 
 def attention(
@@ -152,13 +193,17 @@ def attention(
     causal: bool = True,
     window: Optional[int] = None,
     kv_src: Optional[jax.Array] = None,  # cross-attention source (B, T, d)
-    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (k, v) (B, Smax, Kh, hd)
+    cache: Optional[Dict[str, jax.Array]] = None,  # kv leaves (B, Smax, ...)
     cache_index: Optional[jax.Array] = None,  # scalar write position
     chunk: int = 1024,
     rope: bool = True,
     attend_cache: bool = False,  # S>1 chunk attends over the whole cache
-) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
-    """Returns (output (B,S,d), updated cache or None).
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Returns (output (B,S,d), updated cache dict or None).
+
+    ``cache`` is a kv-format leaf dict ({"k","v"} plus {"ke","ve"} exponent
+    planes for quantized formats) as allocated by ``kv_cache.init_cache``;
+    the format itself resolves from ``cfg`` (``kv_fmt`` / ``kv_bits``).
 
     ``attend_cache`` forces the cache-attend (decode) path for S > 1: after
     the chunk's K/V are written at ``cache_index``, scores run against the
@@ -194,48 +239,29 @@ def attention(
     new_cache = None
     decode = cache is not None and (x.shape[1] == 1 or attend_cache)
     if cache is not None:
-        quantized_kv = len(cache) == 4
-        if quantized_kv:  # int8 DFP cache: quantize on write
-            ck, cv, cke, cve = cache
-            kw, kew = _kv_quantize(k)
-            vw, vew = _kv_quantize(v)
-            writes = [(ck, kw), (cv, vw), (cke, kew), (cve, vew)]
-        else:
-            ck, cv = cache
-            writes = [(ck, k.astype(ck.dtype)), (cv, v.astype(cv.dtype))]
-        written = []
-        if jnp.ndim(cache_index) == 0:  # aligned batch: cheap slice write
-            for buf, val in writes:
-                written.append(
-                    jax.lax.dynamic_update_slice_in_dim(
-                        buf, val.astype(buf.dtype), cache_index, 1
-                    )
-                )
-            valid = jnp.broadcast_to(cache_index + x.shape[1], (x.shape[0],))
-        else:  # per-slot positions (continuous batching): masked write, S==1
-            iota = jnp.arange(ck.shape[1])
-            m = (iota[None, :, None, None] == cache_index[:, None, None, None])
-            for buf, val in writes:
-                written.append(jnp.where(m, val.astype(buf.dtype), buf))
-            valid = cache_index + 1
-        new_cache = tuple(written)
+        fmt = kv_cache.resolve_kv_fmt(cfg)
+        new_cache, valid = kv_cache.write(fmt, cache, k, v, cache_index)
 
     if decode:
-        # grouped-KV layout over the whole cache: (..., 1, T) scores
-        if len(new_cache) == 4:
-            k, v, cke, cve = new_cache
+        if x.shape[1] == 1 and getattr(cfg, "flash_decode", False):
+            out = _flash_decode_path(
+                q, new_cache, fmt, q_pos, valid, window, cfg
+            )
         else:
-            (k, v), cke, cve = new_cache, None, None
-        t = k.shape[1]
-        k_pos = jnp.arange(t)
-        bias = _mask_bias(q_pos, k_pos, causal, window, valid)
-        if bias.ndim == 2:
-            bias = bias[None, None, None]  # (1,1,1,S,T)
-        else:
-            bias = bias[:, None, None]  # (B,1,1,S,T)
-        qh = q.reshape(*q.shape[:2], cfg.n_kv_heads, g, hd)
-        out = _attend_dense(qh, k, v, bias, ke=cke, ve=cve)
-        out = out.reshape(*x.shape[:2], cfg.n_heads * hd).astype(x.dtype)
+            # XLA fold-the-scales oracle: grouped-KV layout over the whole
+            # cache, (..., S, T) scores, per-token scales folded in
+            ck, cv, kscale, vscale = kv_cache.attend_view(fmt, new_cache)
+            t = ck.shape[1]
+            k_pos = jnp.arange(t)
+            bias = _mask_bias(q_pos, k_pos, causal, window, valid)
+            if bias.ndim == 2:
+                bias = bias[None, None, None]  # (1,1,1,S,T)
+            else:
+                bias = bias[:, None, None]  # (B,1,1,S,T)
+            qh = q.reshape(*q.shape[:2], cfg.n_kv_heads, g, hd)
+            out = _attend_dense(qh, ck, cv, bias, kscale=kscale, vscale=vscale)
+            out = out.reshape(*x.shape[:2], cfg.n_heads * hd)
+        out = out.astype(x.dtype)
         return dense(p["wo"], out, f"{path}/wo", ctx), new_cache
 
     # training / prefill: repeat KV to full heads so the head axis shards
@@ -249,7 +275,7 @@ def attention(
     k = _sh.constrain(k, ("batch", None, "heads", None))
     v = _sh.constrain(v, ("batch", None, "heads", None))
     t = k.shape[1]
-    if t > chunk and t % chunk == 0:
+    if t > chunk:
         out = _attend_chunked(q, k, v, q_pos, causal, window, chunk)
     else:
         k_pos = jnp.arange(t)

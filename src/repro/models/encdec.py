@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn_lib
-from repro.models import layers
+from repro.models import kv_cache, layers
 from repro.models.layers import QuantCtx, dense
 from repro.parallel import sharding
 
@@ -146,14 +146,30 @@ def loss_fn(params, batch, cfg, ctx: QuantCtx) -> jax.Array:
     )
 
 
+KV_LEAF_NAMES = ("k", "v", "ke", "ve")
+
+
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
-    hd = cfg.hd()
-    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
-    return {
-        "k": jnp.zeros(shape, dtype),
-        "v": jnp.zeros(shape, dtype),
-        "enc_out": jnp.zeros((batch, cfg.n_audio_frames, cfg.d_model), dtype),
-    }
+    # decoder self-attn KV through the registered formats; cross-attn reads
+    # enc_out densely (re-projected per step, no cache)
+    cache = kv_cache.init_cache(cfg, (cfg.n_layers, batch), max_len, dtype)
+    cache["enc_out"] = jnp.zeros((batch, cfg.n_audio_frames, cfg.d_model), dtype)
+    return cache
+
+
+def _dec_scan(params, x, enc_out, positions, cfg, ctx, cache, cache_index):
+    kv_keys = [n for n in KV_LEAF_NAMES if n in cache]
+
+    def body(h, sc):
+        c = {n: sc[n] for n in kv_keys}
+        h, new = _dec_block(
+            sc["p"], h, enc_out, positions, cfg, ctx, c, cache_index
+        )
+        return h, {n: new[n] for n in kv_keys}
+
+    scanned = {"p": params["dec_blocks"], **{n: cache[n] for n in kv_keys}}
+    x, upd = jax.lax.scan(body, x, scanned)
+    return x, upd
 
 
 def prefill(params, batch, cfg, ctx: QuantCtx, cache):
@@ -163,16 +179,7 @@ def prefill(params, batch, cfg, ctx: QuantCtx, cache):
     s = tokens.shape[1]
     x = layers.embed(params["embed"], tokens) + _pos_embed(params["dec_pos"], 0, s)[None]
     positions = jnp.arange(s)
-
-    def body(h, sc):
-        h, new = _dec_block(
-            sc["p"], h, enc_out, positions, cfg, ctx, (sc["k"], sc["v"]), jnp.int32(0)
-        )
-        return h, {"k": new[0], "v": new[1]}
-
-    x, upd = jax.lax.scan(
-        body, x, {"p": params["dec_blocks"], "k": cache["k"], "v": cache["v"]}
-    )
+    x, upd = _dec_scan(params, x, enc_out, positions, cfg, ctx, cache, jnp.int32(0))
     cache.update(upd)
     x = layers.layernorm(params["dec_norm"], x[:, -1:])
     return dense(params["lm_head"], x, "lm_head", ctx), cache
@@ -187,15 +194,8 @@ def decode_step(params, token, pos, cfg, ctx: QuantCtx, cache):
         positions = pos[:, None].astype(jnp.int32)
     else:
         positions = jnp.full((token.shape[0], 1), pos, jnp.int32)
-
-    def body(h, sc):
-        h, new = _dec_block(
-            sc["p"], h, cache["enc_out"], positions, cfg, ctx, (sc["k"], sc["v"]), pos
-        )
-        return h, {"k": new[0], "v": new[1]}
-
-    x, upd = jax.lax.scan(
-        body, x, {"p": params["dec_blocks"], "k": cache["k"], "v": cache["v"]}
+    x, upd = _dec_scan(
+        params, x, cache["enc_out"], positions, cfg, ctx, cache, pos
     )
     new_cache = dict(cache)
     new_cache.update(upd)

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn_lib
-from repro.models import layers, ssm
+from repro.models import kv_cache, layers, ssm
 from repro.models.layers import QuantCtx
 from repro.parallel import sharding
 
@@ -153,15 +153,13 @@ def loss_fn(params, batch, cfg, ctx: QuantCtx) -> jax.Array:
 # ---------------------------------------------------------------------------
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     n_super, p, tail = plan(cfg)
-    hd = cfg.hd()
     sstate = ssm.init_ssm_state(cfg, batch)
     def stacked(n):
         return jax.tree.map(lambda l: jnp.zeros((n, *l.shape), l.dtype), sstate)
-    cache = {
-        "ssm": stacked(n_super * p),
-        "k": jnp.zeros((n_super, batch, max_len, cfg.n_kv_heads, hd), dtype),
-        "v": jnp.zeros((n_super, batch, max_len, cfg.n_kv_heads, hd), dtype),
-    }
+    cache = {"ssm": stacked(n_super * p)}
+    # per-superblock KV through the same registered formats as transformer
+    # (kv_bits / kv_fmt were silently ignored here before the registry)
+    cache.update(kv_cache.init_cache(cfg, (n_super, batch), max_len, dtype))
     if tail:
         cache["ssm_tail"] = stacked(tail)
     return cache
@@ -178,11 +176,11 @@ def decode_step(params, token, pos, cfg, ctx: QuantCtx, cache):
     def reshaped(stack, n, per):
         return jax.tree.map(lambda l: l.reshape(n, per, *l.shape[1:]), stack)
 
+    kv_keys = [n for n in ("k", "v", "ke", "ve") if n in cache]
+
     def super_body(carry, scanned):
         x = carry
-        mp, states, ck, cv, idx = (
-            scanned["m"], scanned["s"], scanned["k"], scanned["v"], scanned["i"],
-        )
+        mp, states, idx = scanned["m"], scanned["s"], scanned["i"]
 
         def inner(h, sc):
             bp, st = sc
@@ -192,23 +190,24 @@ def decode_step(params, token, pos, cfg, ctx: QuantCtx, cache):
 
         x, new_states = jax.lax.scan(inner, x, (mp, states))
         sp = _select_shared(params["shared"], idx)
-        x, new_kv = _shared_block(sp, x, positions, cfg, ctx, (ck, cv), pos)
-        return x, {"s": new_states, "k": new_kv[0], "v": new_kv[1]}
+        c = {n: scanned[n] for n in kv_keys}
+        x, new_kv = _shared_block(sp, x, positions, cfg, ctx, c, pos)
+        return x, {"s": new_states, **{n: new_kv[n] for n in kv_keys}}
 
     if n_super:
         scanned = {
             "m": reshaped(params["mamba_stack"], n_super, p),
             "s": reshaped(cache["ssm"], n_super, p),
-            "k": cache["k"],
-            "v": cache["v"],
             "i": jnp.arange(n_super),
+            **{n: cache[n] for n in kv_keys},
         }
         x, upd = jax.lax.scan(super_body, x, scanned)
         cache = dict(cache)
         cache["ssm"] = jax.tree.map(
             lambda l: l.reshape(n_super * p, *l.shape[2:]), upd["s"]
         )
-        cache["k"], cache["v"] = upd["k"], upd["v"]
+        for n in kv_keys:
+            cache[n] = upd[n]
 
     if tail:
         def tail_body(h, sc):

@@ -1,0 +1,393 @@
+"""First-class KV-cache formats: registered block layouts for decode state.
+
+The paper's thesis -- integer mantissas sharing power-of-two exponents --
+applied to the KV cache, which at long context dominates decode HBM traffic.
+Three formats ship (the registry is open, like ``repro.quant.formats``):
+
+  * ``kv_bf16``  raw bf16 mantissas, no exponents (the fp baseline).
+  * ``kv_int8``  int8 mantissas + one int8 DFP exponent per (token, kv-head)
+                 -- subsumes the old ``kv_bits == 8`` special case.
+                 ~1.94x fewer cache bytes than bf16 at hd=32 (2hd/(hd+1):
+                 the per-token exponent column is the only overhead).
+  * ``kv_mx``    int4 mantissas packed two-per-byte along head_dim + one
+                 int8 exponent shared by a 32-token block along the
+                 sequence axis (mx-style microscaling: all-shift dequant)
+                 -- ~3.99x fewer cache bytes than bf16 at hd=32.
+
+A cache for one attention layer is a dict of leaves with the sequence axis
+at position 1: ``{"k", "v"}`` plus ``{"ke", "ve"}`` exponent planes for the
+quantized formats.  Families stack these on a leading layer axis and scan.
+
+Write semantics
+---------------
+``write(fmt, cache, k, v, cache_index)`` quantizes on write and supports the
+two shapes the serving engines produce:
+
+  * aligned slice write  -- scalar (possibly traced) ``cache_index``; the
+    S incoming tokens land at [idx, idx+S) (prefill / chunked prefill).
+  * per-slot masked write -- (B,) ``cache_index`` with S == 1 (continuous
+    batching: every slot decodes at its own position).
+
+For ``kv_mx`` a write may raise a block's shared exponent (running max);
+previously-stored mantissas of that block are then re-scaled (arithmetic
+shift toward the new exponent) so every resident token dequantizes with the
+block's single exponent.  That is exactly the value each token would have
+been given had it been quantized at the final exponent, so block contents
+are write-order consistent.  Only blocks the write touches can change
+exponent.
+
+Read semantics
+--------------
+``attend_view(fmt, cache)`` returns ``(k, v, kscale, vscale)`` where k/v are
+integer codes (mx nibbles unpacked) and kscale/vscale are exact
+power-of-two per-token scales (B, T, Kh) -- the XLA oracle folds these into
+the score/probability tensors so a dequantized cache never materializes.
+The Pallas flash-decode kernel (``kernels/flash_decode.py``) instead loads
+the *packed* leaves and dequantizes tile-by-tile in VMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfp
+
+MX_KV_BLOCK = 32  # tokens sharing one exponent along the sequence axis
+_MX_QMAX = 7  # int4 symmetric range [-7, 7]
+# empty-block exponent sentinel: any real token's exponent wins the running
+# max (0 would act as a floor -- tokens with |x| < qmax would round to 0)
+_MX_E_EMPTY = -127
+
+
+# ---------------------------------------------------------------------------
+# shared write helpers
+# ---------------------------------------------------------------------------
+def _slice_write(buf: jax.Array, val: jax.Array, idx) -> jax.Array:
+    """Aligned S-token write at (traced) scalar ``idx`` along axis 1."""
+    return jax.lax.dynamic_update_slice_in_dim(buf, val.astype(buf.dtype), idx, 1)
+
+
+def _mask_write(buf: jax.Array, val: jax.Array, pos: jax.Array) -> jax.Array:
+    """Per-slot single-token write at per-batch positions ``pos`` (B,)."""
+    iota = jnp.arange(buf.shape[1])
+    m = iota[None, :, None, None] == pos[:, None, None, None]
+    return jnp.where(m, val.astype(buf.dtype), buf)
+
+
+def _dfp_tokens(x: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
+    """(B,S,Kh,hd) -> (int8 mantissas, int32 per-(token, head) exponents)."""
+    xf = x.astype(jnp.float32)
+    max_abs = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    e = dfp.choose_exponent(max_abs, bits)
+    return dfp.quantize(xf, e, bits), e
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing (mx mantissas: two head_dim channels per byte)
+# ---------------------------------------------------------------------------
+def pack_i4(codes: jax.Array) -> jax.Array:
+    """(..., hd) int codes in [-8, 7] -> (..., hd//2) uint8 nibble pairs."""
+    c = codes.astype(jnp.int32) & 0xF
+    return (c[..., 0::2] | (c[..., 1::2] << 4)).astype(jnp.uint8)
+
+
+def unpack_i4(packed: jax.Array) -> jax.Array:
+    """(..., hd//2) uint8 -> (..., hd) int8 codes in [-8, 7]."""
+    b = packed.astype(jnp.int32)
+    lo, hi = b & 0xF, (b >> 4) & 0xF
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    pair = jnp.stack([lo, hi], axis=-1).astype(jnp.int8)
+    return pair.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+# ---------------------------------------------------------------------------
+# format registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class KVFormat:
+    """One registered cache layout.
+
+    ``init`` allocates the leaves for ``lead + (max_len, kh, hd)`` caches
+    (``lead`` carries the stacked-layer and batch axes, e.g. ``(L, B)``);
+    ``write_aligned`` / ``write_masked`` return the updated kv leaves;
+    ``attend_view`` exposes (k, v, kscale, vscale) for the XLA fold path;
+    ``bytes_per_token`` is k+v cache bytes per token per layer (exponent
+    planes included) -- the bench's traffic accounting.
+    """
+
+    name: str
+    mant_bits: int  # stored mantissa bits per value (16 = unquantized bf16)
+    seq_block: int  # tokens sharing one exponent (0 = none, 1 = per-token)
+    init: Callable
+    write_aligned: Callable
+    write_masked: Callable
+    attend_view: Callable
+    bytes_per_token: Callable
+
+    @property
+    def quantized(self) -> bool:
+        return self.seq_block > 0
+
+
+_KV_FORMATS: Dict[str, KVFormat] = {}
+
+
+def register_kv_format(fmt: KVFormat) -> KVFormat:
+    if fmt.name in _KV_FORMATS:
+        raise ValueError(f"kv format {fmt.name!r} already registered")
+    _KV_FORMATS[fmt.name] = fmt
+    return fmt
+
+
+def get_kv_format(name: str) -> KVFormat:
+    try:
+        return _KV_FORMATS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kv cache format {name!r}; registered: "
+            f"{kv_format_names()}"
+        ) from None
+
+
+def kv_format_names() -> Tuple[str, ...]:
+    return tuple(sorted(_KV_FORMATS))
+
+
+def resolve_kv_fmt(cfg) -> str:
+    """Config knob -> format name, with ``kv_bits`` back-compat.
+
+    ``cfg.kv_fmt`` wins when set; otherwise ``kv_bits == 8`` maps to
+    ``kv_int8`` (the pre-registry spelling) and anything else to the bf16
+    baseline.  Unknown names fail loudly here, at cache-allocation time,
+    not deep inside a jitted decode step.
+    """
+    name = getattr(cfg, "kv_fmt", None)
+    if name is None:
+        name = "kv_int8" if getattr(cfg, "kv_bits", 16) == 8 else "kv_bf16"
+    get_kv_format(name)  # loud KeyError on a typo
+    return name
+
+
+# ---------------------------------------------------------------------------
+# kv_bf16
+# ---------------------------------------------------------------------------
+def _bf16_init(lead, max_len, kh, hd, dtype):
+    shape = (*lead, max_len, kh, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _bf16_write_aligned(cache, k, v, idx):
+    return {"k": _slice_write(cache["k"], k, idx),
+            "v": _slice_write(cache["v"], v, idx)}
+
+
+def _bf16_write_masked(cache, k, v, pos):
+    return {"k": _mask_write(cache["k"], k, pos),
+            "v": _mask_write(cache["v"], v, pos)}
+
+
+def _bf16_view(cache):
+    return cache["k"], cache["v"], None, None
+
+
+# ---------------------------------------------------------------------------
+# kv_int8: per-(token, head) DFP exponents
+# ---------------------------------------------------------------------------
+def _int8_init(lead, max_len, kh, hd, dtype):
+    shape = (*lead, max_len, kh, hd)
+    eshape = shape[:-1] + (1,)
+    return {
+        "k": jnp.zeros(shape, jnp.int8),
+        "v": jnp.zeros(shape, jnp.int8),
+        "ke": jnp.zeros(eshape, jnp.int8),
+        "ve": jnp.zeros(eshape, jnp.int8),
+    }
+
+
+def _int8_write(cache, k, v, idx, write_fn):
+    kq, ke = _dfp_tokens(k, 8)
+    vq, ve = _dfp_tokens(v, 8)
+    return {
+        "k": write_fn(cache["k"], kq, idx),
+        "v": write_fn(cache["v"], vq, idx),
+        "ke": write_fn(cache["ke"], ke.astype(jnp.int8), idx),
+        "ve": write_fn(cache["ve"], ve.astype(jnp.int8), idx),
+    }
+
+
+def _int8_view(cache):
+    kscale = dfp.exp2i(cache["ke"][..., 0])  # (B, T, Kh), exact 2**e
+    vscale = dfp.exp2i(cache["ve"][..., 0])
+    return cache["k"], cache["v"], kscale, vscale
+
+
+# ---------------------------------------------------------------------------
+# kv_mx: int4 mantissas, one exponent per 32-token block per head
+# ---------------------------------------------------------------------------
+def _mx_init(lead, max_len, kh, hd, dtype):
+    if max_len % MX_KV_BLOCK:
+        raise ValueError(
+            f"kv_mx needs max_len % {MX_KV_BLOCK} == 0, got {max_len}"
+        )
+    if hd % 2:
+        raise ValueError(f"kv_mx packs head_dim nibble pairs; hd={hd} is odd")
+    shape = (*lead, max_len, kh, hd // 2)
+    eshape = (*lead, max_len // MX_KV_BLOCK, kh, 1)
+    return {
+        "k": jnp.zeros(shape, jnp.uint8),
+        "v": jnp.zeros(shape, jnp.uint8),
+        "ke": jnp.full(eshape, _MX_E_EMPTY, jnp.int8),
+        "ve": jnp.full(eshape, _MX_E_EMPTY, jnp.int8),
+    }
+
+
+def _mx_token_exponent(x):
+    """Per-token int4 exponent; all-zero tokens yield the empty sentinel so
+    they never raise a block's shared exponent."""
+    xf = x.astype(jnp.float32)
+    max_abs = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    e = dfp.choose_exponent(max_abs, 4)
+    return jnp.where(max_abs > 0, e, jnp.full_like(e, _MX_E_EMPTY))
+
+
+def _mx_rescale(buf, e_old, e_new, smax):
+    """Shift resident block mantissas to the (possibly raised) exponents."""
+    shift = e_new - e_old  # (B, nb, Kh, 1) >= 0; 0 for untouched blocks
+    blk_full = jnp.arange(smax) // MX_KV_BLOCK
+    shift_pos = jnp.take(shift, blk_full, axis=1)  # (B, Smax, Kh, 1)
+    codes = unpack_i4(buf).astype(jnp.float32)
+    codes = codes * dfp.exp2i(-shift_pos)
+    return jnp.clip(jnp.round(codes), -_MX_QMAX, _MX_QMAX)
+
+
+def _mx_quantize_at(x, e_use):
+    scaled = x.astype(jnp.float32) * dfp.exp2i(-e_use)
+    return jnp.clip(jnp.round(scaled), -_MX_QMAX, _MX_QMAX)
+
+
+def _mx_write_one_aligned(buf, ebuf, x, idx):
+    b, smax = buf.shape[0], buf.shape[1]
+    nb, s = ebuf.shape[1], x.shape[1]
+    e_tok = _mx_token_exponent(x)  # (B, S, Kh, 1) int32
+    gblk = ((idx + jnp.arange(s)) // MX_KV_BLOCK).astype(jnp.int32)  # (S,)
+    # per-block running-max exponent: empty blocks come back iinfo.min from
+    # segment_max and lose to the stored exponent
+    e_in = jax.ops.segment_max(
+        jnp.moveaxis(e_tok[..., 0], 1, 0), gblk, num_segments=nb
+    )  # (nb, B, Kh)
+    e_in = jnp.moveaxis(e_in, 0, 1)[..., None]
+    e_old = ebuf.astype(jnp.int32)
+    e_new = jnp.maximum(e_old, e_in)
+    codes = _mx_rescale(buf, e_old, e_new, smax)
+    e_use = jnp.take(e_new, gblk, axis=1)  # (B, S, Kh, 1)
+    codes = jax.lax.dynamic_update_slice_in_dim(
+        codes, _mx_quantize_at(x, e_use), idx, 1
+    )
+    return pack_i4(codes), e_new.astype(jnp.int8)
+
+
+def _mx_write_one_masked(buf, ebuf, x, pos):
+    b, smax = buf.shape[0], buf.shape[1]
+    nb = ebuf.shape[1]
+    e_tok = _mx_token_exponent(x)  # (B, 1, Kh, 1)
+    blk = (pos // MX_KV_BLOCK).astype(jnp.int32)  # (B,)
+    bmask = jnp.arange(nb)[None, :, None, None] == blk[:, None, None, None]
+    e_old = ebuf.astype(jnp.int32)
+    e_new = jnp.where(bmask, jnp.maximum(e_old, e_tok), e_old)
+    codes = _mx_rescale(buf, e_old, e_new, smax)
+    e_use = jnp.take_along_axis(e_new, blk[:, None, None, None], axis=1)
+    smask = jnp.arange(smax)[None, :, None, None] == pos[:, None, None, None]
+    codes = jnp.where(smask, _mx_quantize_at(x, e_use), codes)
+    return pack_i4(codes), e_new.astype(jnp.int8)
+
+
+def _mx_write_aligned(cache, k, v, idx):
+    kb, ke = _mx_write_one_aligned(cache["k"], cache["ke"], k, idx)
+    vb, ve = _mx_write_one_aligned(cache["v"], cache["ve"], v, idx)
+    return {"k": kb, "v": vb, "ke": ke, "ve": ve}
+
+
+def _mx_write_masked(cache, k, v, pos):
+    kb, ke = _mx_write_one_masked(cache["k"], cache["ke"], k, pos)
+    vb, ve = _mx_write_one_masked(cache["v"], cache["ve"], v, pos)
+    return {"k": kb, "v": vb, "ke": ke, "ve": ve}
+
+
+def _mx_view(cache):
+    kscale = jnp.repeat(dfp.exp2i(cache["ke"][..., 0]), MX_KV_BLOCK, axis=1)
+    vscale = jnp.repeat(dfp.exp2i(cache["ve"][..., 0]), MX_KV_BLOCK, axis=1)
+    return unpack_i4(cache["k"]), unpack_i4(cache["v"]), kscale, vscale
+
+
+register_kv_format(KVFormat(
+    name="kv_bf16", mant_bits=16, seq_block=0,
+    init=_bf16_init,
+    write_aligned=_bf16_write_aligned, write_masked=_bf16_write_masked,
+    attend_view=_bf16_view,
+    bytes_per_token=lambda kh, hd: 2 * kh * hd * 2.0,
+))
+
+register_kv_format(KVFormat(
+    name="kv_int8", mant_bits=8, seq_block=1,
+    init=_int8_init,
+    write_aligned=lambda c, k, v, i: _int8_write(c, k, v, i, _slice_write),
+    write_masked=lambda c, k, v, p: _int8_write(c, k, v, p, _mask_write),
+    attend_view=_int8_view,
+    bytes_per_token=lambda kh, hd: 2 * (kh * hd + kh) * 1.0,
+))
+
+register_kv_format(KVFormat(
+    name="kv_mx", mant_bits=4, seq_block=MX_KV_BLOCK,
+    init=_mx_init,
+    write_aligned=_mx_write_aligned, write_masked=_mx_write_masked,
+    attend_view=_mx_view,
+    bytes_per_token=lambda kh, hd: 2 * (kh * hd / 2 + kh / MX_KV_BLOCK),
+))
+
+
+# ---------------------------------------------------------------------------
+# public entry points (what models/attention and the families call)
+# ---------------------------------------------------------------------------
+def init_cache(cfg, lead: Tuple[int, ...], max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Allocate the kv leaves for one cache stack (``lead`` = (L, B) axes)."""
+    fmt = get_kv_format(resolve_kv_fmt(cfg))
+    return fmt.init(lead, max_len, cfg.n_kv_heads, cfg.hd(), dtype)
+
+
+def write(fmt_name: str, cache: Dict[str, jax.Array], k: jax.Array,
+          v: jax.Array, cache_index) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Quantize-on-write; returns (updated cache dict, valid lengths (B,))."""
+    fmt = get_kv_format(fmt_name)
+    b, s = k.shape[0], k.shape[1]
+    if jnp.ndim(cache_index) == 0:
+        new = fmt.write_aligned(cache, k, v, cache_index)
+        valid = jnp.broadcast_to(cache_index + s, (b,))
+    else:  # per-slot positions (continuous batching): S == 1
+        new = fmt.write_masked(cache, k, v, cache_index)
+        valid = cache_index + 1
+    out = dict(cache)
+    out.update(new)
+    return out, valid
+
+
+def attend_view(fmt_name: str, cache: Dict[str, jax.Array]):
+    """(k codes, v codes, kscale, vscale) for the XLA fold-the-scales path."""
+    return get_kv_format(fmt_name).attend_view(cache)
+
+
+def cache_bytes(cache) -> int:
+    """Total bytes of all kv leaves (the flash-decode read set per tick).
+
+    Works on concrete arrays and ShapeDtypeStructs alike."""
+    total = 0
+    for leaf in jax.tree.leaves(cache):
+        n = 1
+        for d in leaf.shape:
+            n *= int(d)
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn_lib
-from repro.models import layers, moe
+from repro.models import kv_cache, layers, moe
 from repro.models.layers import QuantCtx
 from repro.parallel import sharding
 
@@ -143,38 +143,28 @@ def loss_fn(params, batch, cfg, ctx: QuantCtx) -> jax.Array:
 # KV-cache serving path
 # ---------------------------------------------------------------------------
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
-    hd = cfg.hd()
-    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
-    if cfg.kv_bits == 8:  # DFP cache: int8 mantissas + per-(token, head) exp
-        eshape = shape[:-1] + (1,)
-        return {
-            "k": jnp.zeros(shape, jnp.int8),
-            "v": jnp.zeros(shape, jnp.int8),
-            "ke": jnp.zeros(eshape, jnp.int8),
-            "ve": jnp.zeros(eshape, jnp.int8),
-        }
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    """Registered kv-format leaves stacked (L, B, Smax, ...); see
+    ``models/kv_cache.py`` (``cfg.kv_fmt`` knob, ``kv_bits==8`` back-compat)."""
+    return kv_cache.init_cache(cfg, (cfg.n_layers, batch), max_len, dtype)
+
+
+# leaf names the kv formats may allocate, in scan-carry order
+KV_LEAF_NAMES = ("k", "v", "ke", "ve")
 
 
 def _cache_scan(params, x, positions, cfg, ctx, cache, cache_index, win,
                 attend_cache=False):
-    quantized = "ke" in cache
+    kv_keys = [n for n in KV_LEAF_NAMES if n in cache]
 
     def body(h, scanned):
         bp = scanned["p"]
         w = scanned.get("w")
-        if quantized:
-            c = (scanned["k"], scanned["v"], scanned["ke"], scanned["ve"])
-        else:
-            c = (scanned["k"], scanned["v"])
+        c = {n: scanned[n] for n in kv_keys}
         h, new = _block_apply(
             bp, h, positions, cfg, ctx, w, cache=c, cache_index=cache_index,
             attend_cache=attend_cache,
         )
-        out = {"k": new[0], "v": new[1]}
-        if quantized:
-            out["ke"], out["ve"] = new[2], new[3]
-        return h, out
+        return h, {n: new[n] for n in kv_keys}
 
     scanned = {"p": params["blocks"]}
     scanned.update({k: v for k, v in cache.items()})

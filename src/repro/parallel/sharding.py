@@ -357,6 +357,13 @@ def cache_shardings(cache_shapes: Any, mesh: Mesh):
         p = _path_str(path)
         if p.endswith("enc_out") and len(shape) == 3:  # (B, T, d)
             return NamedSharding(mesh, P(baxes if divisible(shape[0]) else None, None, None))
+        if (p.endswith("ke") or p.endswith("ve")) and len(shape) == 5:
+            # exponent planes (L, B, S|S/32, Kh, 1): follow the mantissa
+            # buffer on batch + kv-heads, keep seq replicated (tiny leaves;
+            # kv_mx's S/32 seq axis rarely divides the data axes anyway)
+            bax = baxes if divisible(shape[1]) else None
+            kh = _fit(mesh, shape[3], "model")
+            return NamedSharding(mesh, P(None, bax, None, kh, None))
         if len(shape) == 5:  # (L, B, S, Kh, hd)
             bax = baxes if divisible(shape[1]) else None
             # batch=1 long-context: shard the sequence over the data axes

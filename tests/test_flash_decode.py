@@ -1,0 +1,159 @@
+"""Flash-decode kernel vs the XLA fold-the-scales oracle.
+
+Parity matrix: {kv_bf16, kv_int8, kv_mx} x {aligned slice write, per-slot
+masked write} x {GQA, MHA, sliding-window}.  Both paths read the SAME cache
+(written through the registered format), so format quantization error
+cancels and the comparison isolates the kernel's online-softmax math; only
+float sum-order differences remain (atol 5e-5).
+
+Plus: model-level routing (``cfg.flash_decode`` toggles the kernel under a
+real transformer decode_step, logits must agree) and block-size selection.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels.flash_decode import flash_decode, pick_kv_block
+from repro.models import build_model, kv_cache
+from repro.models.attention import _attend_dense, _mask_bias
+
+FORMATS = ("kv_bf16", "kv_int8", "kv_mx")
+
+
+class _Cfg:
+    kv_bits = 16
+
+    def __init__(self, kh, hd, fmt):
+        self.n_kv_heads = kh
+        self.kv_fmt = fmt
+        self._hd = hd
+
+    def hd(self):
+        return self._hd
+
+
+def _filled_cache(fmt, b, t, kh, hd, mode, seed=0):
+    """A cache with real history plus a final write in ``mode``.
+
+    aligned: 24 tokens at [0, 24) via the traced-scalar slice write.
+    masked:  the same, then one per-slot token at positions [24, 9, ...]
+             (continuous batching: every row decodes at its own offset).
+    Returns (cache, q_pos (B,), valid (B,)).
+    """
+    rng = np.random.default_rng(seed)
+    hist = 24
+    k = jnp.asarray(rng.normal(size=(b, hist, kh, hd)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hist, kh, hd)) * 0.5, jnp.float32)
+    cache = kv_cache.init_cache(_Cfg(kh, hd, fmt), (b,), t)
+    cache, valid = kv_cache.write(fmt, cache, k, v, jnp.int32(0))
+    if mode == "masked":
+        pos = jnp.asarray([(24 + 7 * i) % (t - 1) for i in range(b)], jnp.int32)
+        k1 = jnp.asarray(rng.normal(size=(b, 1, kh, hd)) * 0.5, jnp.float32)
+        v1 = jnp.asarray(rng.normal(size=(b, 1, kh, hd)) * 0.5, jnp.float32)
+        cache, valid = kv_cache.write(fmt, cache, k1, v1, pos)
+    q_pos = valid - 1
+    return cache, q_pos, valid
+
+
+def _oracle(q, cache, fmt, q_pos, valid, window):
+    b, kh, g, hd = q.shape
+    t = cache["k"].shape[1]
+    ck, cv, ks, vs = kv_cache.attend_view(fmt, cache)
+    bias = _mask_bias(q_pos[:, None], jnp.arange(t), True, window, valid)
+    out = _attend_dense(
+        q.reshape(b, 1, kh, g, hd), ck, cv, bias[:, None, None],
+        kscale=ks, vscale=vs,
+    )
+    return out.reshape(b, kh, g, hd)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("mode", ["aligned", "masked"])
+@pytest.mark.parametrize(
+    "kh,g,window", [(2, 2, None), (4, 1, None), (2, 2, 8)],
+    ids=["gqa", "mha", "window"],
+)
+def test_flash_decode_parity(fmt, mode, kh, g, window):
+    b, hd, t = 3, 16, 64
+    cache, q_pos, valid = _filled_cache(fmt, b, t, kh, hd, mode)
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(b, kh, g, hd)), jnp.float32)
+    got = flash_decode(
+        q, cache["k"], cache["v"], cache.get("ke"), cache.get("ve"),
+        q_pos.reshape(b, 1).astype(jnp.int32),
+        valid.reshape(b, 1).astype(jnp.int32),
+        jnp.asarray(2**30 if window is None else window, jnp.int32).reshape(1, 1),
+        fmt=fmt, block_k=32, interpret=True,
+    )
+    want = _oracle(q, cache, fmt, q_pos, valid, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_flash_decode_small_kv_block(fmt):
+    """KV tile smaller than the history (multiple grid steps per head)."""
+    b, kh, g, hd, t = 2, 2, 2, 8, 128
+    cache, q_pos, valid = _filled_cache(fmt, b, t, kh, hd, "aligned")
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(b, kh, g, hd)), jnp.float32)
+    bk = 32 if fmt == "kv_mx" else 16
+    got = flash_decode(
+        q, cache["k"], cache["v"], cache.get("ke"), cache.get("ve"),
+        q_pos.reshape(b, 1).astype(jnp.int32),
+        valid.reshape(b, 1).astype(jnp.int32),
+        jnp.full((1, 1), 2**30, jnp.int32), fmt=fmt, block_k=bk,
+        interpret=True,
+    )
+    want = _oracle(q, cache, fmt, q_pos, valid, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5)
+
+
+def test_pick_kv_block():
+    assert pick_kv_block(256, "kv_bf16") == 128
+    assert pick_kv_block(96, "kv_int8") == 96
+    assert pick_kv_block(48, "kv_bf16", want=32) == 24
+    # mx blocks stay 32-token aligned
+    assert pick_kv_block(64, "kv_mx") == 64
+    assert pick_kv_block(96, "kv_mx", want=64) == 32
+    assert pick_kv_block(256, "kv_mx") == 128
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_model_level_flash_routing(fmt):
+    """cfg.flash_decode toggles the kernel under a real decode_step; the
+    logits must match the oracle path on the SAME cache state."""
+    base = configs.get_smoke("gemma3-12b")  # sliding-window + GQA coverage
+    outs = {}
+    for flash in (False, True):
+        cfg = dataclasses.replace(base, kv_fmt=fmt, flash_decode=flash)
+        api = build_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        cache = api.init_cache(2, 64)
+        batch = {"tokens": jnp.arange(16, dtype=jnp.int32).reshape(2, 8) % cfg.vocab}
+        _, cache = api.prefill(params, batch, cache)
+        logits = None
+        for i in range(8, 12):
+            logits, cache = api.decode(
+                params, jnp.full((2, 1), 3, jnp.int32), jnp.int32(i), cache
+            )
+        outs[flash] = np.asarray(logits)
+    np.testing.assert_allclose(outs[True], outs[False], atol=1e-4)
+
+
+@pytest.mark.parametrize("fmt", ["kv_int8", "kv_mx"])
+def test_quantized_formats_track_bf16(fmt):
+    """Quantized caches approximate the bf16 attention output (accuracy,
+    not parity): int8 tight, mx within 4-bit block-quantization error."""
+    b, kh, g, hd, t = 2, 2, 2, 16, 64
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(b, kh, g, hd)), jnp.float32)
+    ref_cache, q_pos, valid = _filled_cache("kv_bf16", b, t, kh, hd, "aligned")
+    cache, _, _ = _filled_cache(fmt, b, t, kh, hd, "aligned")
+    want = _oracle(q, ref_cache, "kv_bf16", q_pos, valid, None)
+    got = _oracle(q, cache, fmt, q_pos, valid, None)
+    atol = 0.02 if fmt == "kv_int8" else 0.2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=atol)

@@ -217,3 +217,88 @@ def test_mx_qtensor_shift_only_scales(w):
     g, c = loud
     step = 2.0 ** eff[g, c]
     assert np.abs(blocks[g, :, c] - rblocks[g, :, c]).max() <= step / 2 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# KV-cache formats: nibble packing + quantize-on-write error bounds.
+# ---------------------------------------------------------------------------
+@given(hnp.arrays(np.int64, st.tuples(st.integers(1, 4), st.integers(1, 8)),
+                  elements=st.integers(-8, 7)))
+@settings(max_examples=30, deadline=None)
+def test_kv_pack_i4_roundtrip(codes):
+    """pack_i4/unpack_i4 is an exact bijection on [-8, 7] codes."""
+    from repro.models import kv_cache
+
+    c = jnp.asarray(np.repeat(codes, 2, axis=-1), jnp.int8)  # even head_dim
+    packed = kv_cache.pack_i4(c)
+    assert packed.dtype == jnp.uint8 and packed.shape[-1] == c.shape[-1] // 2
+    assert np.array_equal(np.asarray(kv_cache.unpack_i4(packed)), np.asarray(c))
+
+
+KV_TOKENS = hnp.arrays(
+    np.float32,
+    st.tuples(st.integers(1, 2), st.integers(1, 3).map(lambda x: x * 8)),
+    elements=st.floats(-30, 30, width=32),
+)
+
+
+@given(KV_TOKENS)
+@settings(max_examples=20, deadline=None)
+def test_kv_int8_write_error_bound(x):
+    """kv_int8 quantize-on-write: each token reconstructs within half a step
+    of its own per-(token, head) exponent (round-to-nearest DFP)."""
+    from repro.models import kv_cache
+
+    b, hd = x.shape
+    kv = jnp.asarray(x).reshape(1, b, 1, hd)  # (B=1, S=b, Kh=1, hd)
+    cache = kv_cache.get_kv_format("kv_int8").init((1,), 32, 1, hd, jnp.bfloat16)
+    cache, _ = kv_cache.write("kv_int8", cache, kv, kv, jnp.int32(0))
+    ck, _, ks, _ = kv_cache.attend_view("kv_int8", cache)
+    rec = np.asarray(ck, np.float32)[0, :b, 0] * np.asarray(ks)[0, :b, 0, None]
+    step = np.asarray(ks)[0, :b, 0, None]  # scale == 2**e == one code step
+    assert (np.abs(rec - x) <= step / 2 + 1e-6).all()
+
+
+@given(hnp.arrays(np.float32, (40, 8), elements=st.floats(-30, 30, width=32)))
+@settings(max_examples=20, deadline=None)
+def test_kv_mx_write_error_bound(x):
+    """kv_mx: every token reconstructs within half a step of its BLOCK's
+    shared exponent (the running max over the block's tokens), and stored
+    nibbles stay in the symmetric int4 range."""
+    from repro.models import kv_cache
+
+    s, hd = x.shape
+    kv = jnp.asarray(x).reshape(1, s, 1, hd)
+    cache = kv_cache.get_kv_format("kv_mx").init((1,), 64, 1, hd, jnp.bfloat16)
+    cache, _ = kv_cache.write("kv_mx", cache, kv, kv, jnp.int32(0))
+    codes = np.asarray(kv_cache.unpack_i4(cache["k"]))[0, :s, 0]
+    assert np.abs(codes).max() <= 7
+    ck, _, ks, _ = kv_cache.attend_view("kv_mx", cache)
+    rec = np.asarray(ck, np.float32)[0, :s, 0] * np.asarray(ks)[0, :s, 0, None]
+    step = np.asarray(ks)[0, :s, 0, None]
+    assert (np.abs(rec - x) <= step / 2 + 1e-6).all()
+
+
+@given(hnp.arrays(np.float32, (4, 8), elements=st.floats(-30, 30, width=32)),
+       st.integers(0, 31))
+@settings(max_examples=20, deadline=None)
+def test_kv_mx_running_max_rescale(x, pos0):
+    """Masked single-token writes into one block: earlier tokens re-scale
+    when a later, louder token raises the block exponent -- every resident
+    token still reconstructs within half the FINAL block step."""
+    from repro.models import kv_cache
+
+    hd = x.shape[1]
+    cache = kv_cache.get_kv_format("kv_mx").init((1,), 32, 1, hd, jnp.bfloat16)
+    positions = [(pos0 + i) % 32 for i in range(4)]
+    for i, p in enumerate(positions):
+        kv = jnp.asarray(x[i]).reshape(1, 1, 1, hd)
+        cache, _ = kv_cache.write(
+            "kv_mx", cache, kv, kv, jnp.asarray([p], jnp.int32)
+        )
+    ck, _, ks, _ = kv_cache.attend_view("kv_mx", cache)
+    step = float(np.asarray(ks)[0, 0, 0])  # one block -> one shared scale
+    rec = np.asarray(ck, np.float32)[0, :, 0] * step
+    for i, p in enumerate(positions):
+        # rescale of residents rounds twice; allow one extra half-step
+        assert np.abs(rec[p] - x[i]).max() <= step + 1e-6
