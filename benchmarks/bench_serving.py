@@ -23,6 +23,19 @@ asserts the two engines emit BIT-IDENTICAL greedy tokens per request
 ``--json out.json`` dumps rows for the BENCH trajectory
 (``benchmarks/BENCH_serving.json`` is the committed baseline, made via
 ``run.py --serving-json``).
+
+Fault tolerance rides the same harness:
+
+  * the default table gains a GOODPUT-UNDER-FAULT cell: the staged engine
+    under overload (open-loop arrivals past capacity, bounded queue,
+    per-request deadlines) with a seeded 1% per-dispatch fault rate --
+    reported as goodput tok/s (finished requests only) plus shed / expired
+    / quarantined / retried / failed rates.
+  * ``--chaos --smoke`` is the CI containment matrix, and is CLOSED-loop
+    (all requests submitted upfront, armed one-shot faults) so it cannot
+    flap on machine speed: for every fault kind it asserts exactly the
+    afflicted request fails (or retries to a bit-identical recovery) while
+    every other request matches the fault-free baseline bit for bit.
 """
 from __future__ import annotations
 
@@ -36,10 +49,19 @@ import numpy as np
 from benchmarks.common import tiny_lm
 from repro.configs.base import QuantConfig
 from repro.models import build_model, quantize_and_plan
-from repro.serving import Request, SchedulerConfig, ServingEngine, StagedEngine
+from repro.serving import (
+    AdmissionConfig,
+    FaultInjector,
+    HealthConfig,
+    Request,
+    SchedulerConfig,
+    ServingEngine,
+    StagedEngine,
+)
 
 FORMATS = {"ternary": 2, "int8": 8}
 CHUNK = 16
+CHAOS_RATE = 0.05  # per-dispatch fault probability for the goodput cell
 
 
 def _workload(seed: int, n_requests: int, vocab: int, rate_hz: float,
@@ -139,6 +161,151 @@ def _quantized_lm(bits: int):
     return qapi, qparams, cfg.vocab
 
 
+# ---------------------------------------------------------------------------
+# Goodput under fault: overload + deadlines + 1% seeded chaos.
+# ---------------------------------------------------------------------------
+def _chaos_goodput_cell(api, qparams, vocab, *, n_slots: int, max_len: int,
+                        n_requests: int, rate_hz: float) -> Dict:
+    """Staged engine driven PAST capacity with a bounded queue, per-request
+    deadlines, retry budget 1, and a seeded ``CHAOS_RATE`` fault stream
+    (nan_logits | kv_corrupt).  Goodput counts FINISHED requests' tokens
+    only; shed/expired/failed work is the cost being measured."""
+    inj = FaultInjector(rate=CHAOS_RATE, kinds=("nan_logits", "kv_corrupt"),
+                        seed=1)
+    eng = StagedEngine(
+        api, qparams, n_slots=n_slots, max_len=max_len,
+        sched=SchedulerConfig(prefill_chunk=CHUNK),
+        admission=AdmissionConfig(max_queue=2 * n_slots, deadline_ms=4000.0,
+                                  retry_backoff_ms=1.0),
+        health=HealthConfig(overload_queue=n_slots),
+        faults=inj,
+    )
+    warm, warm_at = _workload(99, 4, vocab, 1e6)
+    _drive_open_loop(eng, warm, warm_at)
+
+    reqs, arrivals = _workload(0, n_requests, vocab, rate_hz)
+    for r in reqs:
+        r.max_retries = 1
+    done, wall = _drive_open_loop(eng, reqs, arrivals)
+    by_status: Dict[str, int] = {}
+    for r in reqs:
+        by_status[r.status] = by_status.get(r.status, 0) + 1
+    good_toks = sum(len(r.output) for r in done if r.status == "finished")
+    ev = eng.stats()["health"]["events"]
+    return {
+        "bench": "serving_chaos_goodput", "engine": "staged",
+        "fault_rate": CHAOS_RATE,
+        "goodput_tok_s": good_toks / wall,
+        "wall_s": wall,
+        "n_offered": len(reqs),
+        "n_finished": by_status.get("finished", 0),
+        "shed_rate": by_status.get("shed", 0) / len(reqs),
+        "expired_rate": by_status.get("expired", 0) / len(reqs),
+        "failed_rate": by_status.get("failed", 0) / len(reqs),
+        "quarantined": ev["quarantined"], "retried": ev["retried"],
+        "faults_injected": ev["faults_injected"],
+        "overload_entered": eng.stats()["health"]["overload_entered"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Containment matrix (--chaos --smoke): closed-loop, armed, non-flapping.
+# ---------------------------------------------------------------------------
+def _containment_matrix(csv=print, *, n_slots: int = 4,
+                        max_len: int = 64) -> List[Dict]:
+    """For each fault kind, CI-grade containment proof on the staged
+    engine: exactly the afflicted request fails (or, with a retry budget,
+    recovers bit-identical), all others match the fault-free baseline bit
+    for bit.  Closed loop + armed one-shots: nothing here depends on wall
+    clock, so the step cannot flap on runner speed.
+
+    Runs on UNQUANTIZED fp params deliberately: the matrix proves the
+    ENGINE's quarantine machinery, which needs faults to reach the logits.
+    Under PTQ the DFP activation quantizer launders a NaN-poisoned KV read
+    into finite values (``jnp.round(nan) -> nan`` but the int8 mantissa
+    cast maps NaN to 0, core/dfp.py), so kv_corrupt would be silently
+    swallowed -- the quantized-path behavior is measured separately by the
+    goodput-under-fault cells above."""
+    cfg = tiny_lm()
+    api = build_model(cfg)
+    qparams = api.init(jax.random.PRNGKey(0))
+    vocab = cfg.vocab
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, vocab, n).tolist() for n in (6, 3, 9, 4)]
+
+    def closed_loop(faults=None, arm=None, max_retries=0, health=None):
+        kw = {"health": health} if health is not None else {}
+        eng = StagedEngine(api, qparams, n_slots=n_slots, max_len=max_len,
+                           sched=SchedulerConfig(prefill_chunk=4),
+                           faults=faults,
+                           admission=AdmissionConfig(retry_backoff_ms=1.0),
+                           **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=6,
+                               max_retries=max_retries))
+        done = []
+        # two healthy ticks first so the armed slot has live KV rows --
+        # kv_corrupt behind position 0 is fully masked and proves nothing
+        done.extend(eng.step())
+        done.extend(eng.step())
+        if arm is not None:
+            faults.arm(arm, slot=0)
+        done.extend(eng.run(max_ticks=4000))
+        return eng, {r.uid: r for r in done}
+
+    _, base = closed_loop()
+    assert all(r.status == "finished" for r in base.values())
+    rows: List[Dict] = []
+
+    def emit(case: str, ok: bool, detail: str):
+        csv(f"serving/chaos_{case},{0 if ok else 1:.0f},{detail}")
+        rows.append({"bench": "serving_chaos_matrix", "case": case, "ok": ok})
+        if not ok:
+            raise AssertionError(f"chaos containment violated [{case}]: "
+                                 f"{detail}")
+
+    for kind in ("nan_logits", "inf_logits", "sat_logits", "kv_corrupt"):
+        inj = FaultInjector()
+        _, got = closed_loop(faults=inj, arm=kind)
+        victim = inj.log[0].uid
+        others_identical = all(
+            r.status == "finished" and r.output == base[u].output
+            for u, r in got.items() if u != victim
+        )
+        ok = (victim is not None and len(got) == len(base)
+              and got[victim].status == "failed" and others_identical)
+        emit(kind, ok,
+             f"victim_uid={victim};victim_status={got[victim].status};"
+             f"others_bit_identical={str(others_identical).lower()}")
+
+    # retry budget: the victim recovers and the WHOLE run matches baseline
+    inj = FaultInjector()
+    eng, got = closed_loop(faults=inj, arm="nan_logits", max_retries=1)
+    recovered = (
+        {u: r.output for u, r in got.items()}
+        == {u: r.output for u, r in base.items()}
+        and all(r.status == "finished" for r in got.values())
+        and eng.stats()["health"]["events"]["retried"] == 1
+    )
+    emit("retry_recovers", recovered,
+         f"bit_identical_after_retry={str(recovered).lower()}")
+
+    # stall: watchdog flags it, tokens unaffected
+    inj = FaultInjector(stall_s=0.12)
+    eng, got = closed_loop(faults=inj, arm="stall_tick",
+                           health=HealthConfig(tick_slow_s=0.1))
+    h = eng.stats()["health"]
+    stall_ok = (
+        h["slow_ticks"] + h["hung_ticks"] >= 1
+        and {u: r.output for u, r in got.items()}
+        == {u: r.output for u, r in base.items()}
+    )
+    emit("stall_tick", stall_ok,
+         f"slow_ticks={h['slow_ticks']};tokens_unaffected="
+         f"{str(stall_ok).lower()}")
+    return rows
+
+
 def run(csv=print, *, n_slots: int = 4, max_len: int = 96,
         n_requests: int = 12, rate_hz: float = 200.0,
         json_path: str = None, smoke: bool = False) -> List[Dict]:
@@ -175,6 +342,24 @@ def run(csv=print, *, n_slots: int = 4, max_len: int = 96,
                 f"staged/lockstep token divergence on {fmt}: "
                 f"{outs['staged']} vs {outs['lockstep']}"
             )
+        if not smoke:
+            # goodput under fault: overload + deadlines + 1% seeded chaos
+            row = _chaos_goodput_cell(
+                api, qparams, vocab, n_slots=n_slots, max_len=max_len,
+                n_requests=2 * n_requests, rate_hz=2 * rate_hz,
+            )
+            row["format"] = fmt
+            rows.append(row)
+            csv(
+                f"serving/{fmt}_chaos_goodput,"
+                f"{1e6 / max(row['goodput_tok_s'], 1e-9):.1f},"
+                f"goodput_tok_s={row['goodput_tok_s']:.1f};"
+                f"shed_rate={row['shed_rate']:.2f};"
+                f"expired_rate={row['expired_rate']:.2f};"
+                f"failed_rate={row['failed_rate']:.2f};"
+                f"retried={row['retried']};"
+                f"faults={row['faults_injected']}"
+            )
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rows, f, indent=2)
@@ -189,11 +374,21 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: ternary only, small workload, parity "
                          "asserted, wall-clock never judged")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-containment matrix instead of the "
+                         "throughput table; with --smoke this is the CI "
+                         "chaos step (closed-loop, armed, non-flapping)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--rate", type=float, default=200.0,
                     help="Poisson arrival rate (req/s) of the open loop")
     a = ap.parse_args()
-    run(n_slots=a.slots, max_len=a.max_len, n_requests=a.requests,
-        rate_hz=a.rate, json_path=a.json, smoke=a.smoke)
+    if a.chaos:
+        chaos_rows = _containment_matrix(csv=print, max_len=a.max_len)
+        if a.json:
+            with open(a.json, "w") as f:
+                json.dump(chaos_rows, f, indent=2)
+    else:
+        run(n_slots=a.slots, max_len=a.max_len, n_requests=a.requests,
+            rate_hz=a.rate, json_path=a.json, smoke=a.smoke)

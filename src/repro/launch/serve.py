@@ -26,8 +26,11 @@ carries the "pallas_ep" backend.
 Serving runs the staged engine by default (prefill / insert / generate
 stages, chunked prefill, SLO percentiles in the run report); ``--engine
 lockstep`` selects the shared-tick oracle, ``--prefill-chunk`` and
-``--policy {decode,prefill}`` tune the staged scheduler.  See
-docs/SERVING.md.
+``--policy {decode,prefill}`` tune the staged scheduler.  Fault tolerance:
+``--deadline-ms / --max-queue / --ttft-slo-ms`` gate admission,
+``--tpot-slo-ms`` arms overload degradation, ``--retries`` budgets
+quarantine retries, and ``--chaos "rate=0.01,kinds=nan_logits|kv_corrupt"``
+injects seeded faults to demonstrate containment.  See docs/SERVING.md.
 """
 from __future__ import annotations
 
@@ -55,6 +58,9 @@ from repro.models import (
     save_servable,
 )
 from repro.serving import (
+    AdmissionConfig,
+    FaultInjector,
+    HealthConfig,
     Request,
     SamplerConfig,
     SchedulerConfig,
@@ -172,6 +178,24 @@ def main():
                     help="qmatmul backend the compiled plan carries "
                          "(pallas_ep routes MoE expert sites through the "
                          "shard_map fused path under --mesh)")
+    # fault tolerance: deadlines, load shedding, overload SLOs, chaos
+    ap.add_argument("--deadline-ms", type=float, default=None, metavar="MS",
+                    help="default per-request deadline; past it a request "
+                         "is expired wherever it is (queued or in flight)")
+    ap.add_argument("--max-queue", type=int, default=None, metavar="N",
+                    help="shed submissions once the queue holds N requests")
+    ap.add_argument("--ttft-slo-ms", type=float, default=None, metavar="MS",
+                    help="shed submissions whose estimated TTFT exceeds MS")
+    ap.add_argument("--tpot-slo-ms", type=float, default=None, metavar="MS",
+                    help="enter overload mode (smaller prefill chunks, "
+                         "decode-priority) when recent TPOT p95 exceeds MS")
+    ap.add_argument("--retries", type=int, default=1, metavar="N",
+                    help="retry budget for fault-quarantined requests "
+                         "(re-queued with exponential backoff)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="inject faults, e.g. 'rate=0.01,kinds=nan_logits|"
+                         "kv_corrupt|stall_tick,seed=0' -- seeded and "
+                         "deterministic; see repro/serving/faults.py")
     args = ap.parse_args()
     if bool(args.artifact) == bool(args.arch):
         ap.error("exactly one of --arch or --artifact is required")
@@ -199,9 +223,18 @@ def main():
               f"flash_decode={cfg2.flash_decode}")
     cfg = api.cfg
 
+    faults = FaultInjector.from_spec(args.chaos) if args.chaos else None
+    if faults is not None:
+        print(f"chaos: rate={faults.rate} kinds={'|'.join(faults.kinds)}")
     eng_kw = dict(n_slots=args.slots, max_len=args.max_len,
                   sampler=SamplerConfig(temperature=args.temperature),
-                  mesh=mesh)
+                  mesh=mesh,
+                  admission=AdmissionConfig(
+                      max_queue=args.max_queue,
+                      ttft_slo_ms=args.ttft_slo_ms,
+                      deadline_ms=args.deadline_ms),
+                  health=HealthConfig(overload_tpot_ms=args.tpot_slo_ms),
+                  faults=faults)
     if args.engine == "staged":
         eng = StagedEngine(api, qparams, sched=SchedulerConfig(
             prefill_chunk=args.prefill_chunk, policy=args.policy), **eng_kw)
@@ -211,16 +244,36 @@ def main():
         eng = ServingEngine(api, qparams, **eng_kw)
         print("engine=lockstep (shared-tick oracle)")
     rng = np.random.default_rng(0)
+    not_admitted = []
     for i in range(args.requests):
-        eng.submit(Request(
+        r = eng.submit(Request(
             uid=i, prompt=rng.integers(0, cfg.vocab, 6).tolist(),
-            max_new_tokens=8,
+            max_new_tokens=8, max_retries=args.retries,
         ))
+        if r.status != "queued":
+            not_admitted.append(r)
     t0 = time.time()
     done = eng.run()
     dt = time.time() - t0
-    toks = sum(len(r.output) for r in done)
-    print(f"{len(done)} requests / {toks} tokens in {dt:.1f}s ({toks / dt:.1f} tok/s)")
+    finished = [r for r in done if r.status == "finished"]
+    toks = sum(len(r.output) for r in finished)
+    print(f"{len(finished)} finished / {toks} tokens in {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s)")
+    health = eng.stats()["health"]
+    ev = health["events"]
+    if not_admitted or any(ev[k] for k in
+                           ("expired", "failed", "quarantined", "retried")):
+        print(f"  fault tolerance: shed={ev['shed']} rejected={ev['rejected']} "
+              f"expired={ev['expired']} quarantined={ev['quarantined']} "
+              f"retried={ev['retried']} failed={ev['failed']}")
+        for r in not_admitted[:4]:
+            print(f"    req {r.uid} {r.status}: {r.reason}")
+    print(f"  ticks={health['ticks']} slow={health['slow_ticks']} "
+          f"hung={health['hung_ticks']} "
+          f"tick_ewma={health['tick_ms_ewma']:.1f}ms "
+          f"overload_entered={health['overload_entered']}")
+    if health["faults"]:
+        print(f"  chaos injected: {health['faults']}")
     left = eng.leftover()
     if left["in_flight"] or left["queued"]:
         print(f"UNFINISHED: {len(left['in_flight'])} in flight, "

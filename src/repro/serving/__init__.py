@@ -1,10 +1,22 @@
 """Serving substrate: lockstep + staged continuous-batching engines,
-samplers, chunked-prefill scheduler, KV caches."""
+samplers, chunked-prefill scheduler, KV caches, and the fault-tolerance
+layer (admission control, numerical guardrails, watchdog, chaos harness)."""
 from repro.serving.engine import Request, ServingEngine, StagedEngine
+from repro.serving.faults import FaultInjector, FlakyIO, corrupt_payload
+from repro.serving.health import (
+    HealthConfig,
+    OverloadController,
+    TickWatchdog,
+    describe_poison,
+)
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.scheduler import (
+    AdmissionConfig,
     LatencyStats,
     SchedulerConfig,
+    admission_decision,
     chunk_plan,
+    degraded_chunk,
+    estimate_ttft_ms,
     next_action,
 )

@@ -55,14 +55,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving import health as health_mod
+from repro.serving.faults import FaultInjector
+from repro.serving.health import HealthConfig, OverloadController, TickWatchdog
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.scheduler import (
+    AdmissionConfig,
     LatencyStats,
     PrefillTask,
     SchedulerConfig,
+    admission_decision,
     chunk_plan,
+    degraded_chunk,
+    estimate_ttft_ms,
     next_action,
 )
+
+# terminal request statuses: the request has left the engine for good
+TERMINAL_STATUSES = ("finished", "expired", "shed", "rejected", "failed",
+                     "cancelled")
 
 
 @dataclasses.dataclass
@@ -71,9 +82,23 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    # fault-tolerance contract (caller-set):
+    #   deadline_ms -- wall-clock budget from submit; past it the request is
+    #       expired wherever it is (queued or in flight).  None = the
+    #       engine's AdmissionConfig default (which may also be None).
+    #   max_retries -- how many times a fault-quarantined request may be
+    #       re-queued (exponential backoff) before it is failed for good.
+    deadline_ms: Optional[float] = None
+    max_retries: int = 0
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # lifecycle: pending -> queued -> running -> finished, with the
+    # fault-path terminals expired | shed | rejected | failed | cancelled
+    status: str = "pending"
+    reason: Optional[str] = None  # why shed/rejected/expired/failed/cancelled
+    retries: int = 0  # quarantine retries consumed
+    not_before: float = 0.0  # backoff gate: not re-admitted before this time
     admitted_tick: Optional[int] = None  # engine tick this request got a slot
     # wall-clock SLO trace (time.monotonic seconds), filled by the engine:
     # submit -> prefill_start (queue wait) -> first_token (TTFT) -> finish
@@ -81,6 +106,10 @@ class Request:
     prefill_start_t: Optional[float] = None
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
+
+    @property
+    def terminal(self) -> bool:
+        return self.status in TERMINAL_STATUSES
 
 
 class _EngineBase:
@@ -96,6 +125,9 @@ class _EngineBase:
         sampler: SamplerConfig = SamplerConfig(),
         seed: int = 0,
         mesh: Optional[jax.sharding.Mesh] = None,
+        admission: AdmissionConfig = AdmissionConfig(),
+        health: HealthConfig = HealthConfig(),
+        faults: Optional[FaultInjector] = None,
     ):
         from repro.parallel import sharding as rules
 
@@ -104,6 +136,17 @@ class _EngineBase:
         self.max_len = max_len
         self.sampler = sampler
         self.mesh = mesh
+        self.admission = admission
+        self.health = health
+        self.faults = faults
+        self.watchdog = TickWatchdog(health)
+        self._overload_ctl = OverloadController(health)
+        # fault-tolerance event counters, surfaced via stats()["health"]
+        self.events = {
+            "rejected": 0, "shed": 0, "expired": 0, "cancelled": 0,
+            "quarantined": 0, "retried": 0, "failed": 0,
+            "faults_injected": 0,
+        }
         self._tok_sharding = None
         self._pos_sharding = None
         self._cache_sharding = None
@@ -140,12 +183,28 @@ class _EngineBase:
         self._clock = time.monotonic
         self._lat = LatencyStats()
         self._zero_prefix = None  # lazy B=1 zero cache (slot clearing)
+        self._poison_prefix = None  # lazy B=1 NaN cache (chaos kv_corrupt)
 
-        def _tick_fn(params, tokens, pos, cache, key):
+        guardrails = health.guardrails
+        sat_limit = float(2.0 ** health.sat_exponent)
+
+        def _tick_fn(params, tokens, pos, cache, key, fault_slot, fault_val):
             logits, cache = api.decode(params, tokens, pos, cache)
+            last = logits[:, -1, :].astype(jnp.float32)
+            # chaos hook: overwrite ONE slot's logit row in-graph
+            # (fault_slot == -1 selects nothing -- the fault-free path)
+            rows = jnp.arange(last.shape[0], dtype=jnp.int32)[:, None]
+            last = jnp.where(rows == fault_slot, fault_val, last)
             key, sub = jax.random.split(key)
-            toks = sample(sub, logits[:, -1, :], sampler)
-            return toks, key, cache
+            toks = sample(sub, last, sampler)
+            # numerical guardrail: ONE fused reduction over the tick's
+            # logits -> per-slot poison bitflags, stacked with the sampled
+            # tokens so flags ride the existing single host sync
+            if guardrails:
+                flags = health_mod.poison_flags(last, sat_limit)
+            else:
+                flags = jnp.zeros_like(toks)
+            return jnp.stack([toks, flags]), key, cache
 
         # donate the cache: the decode step's masked writes update it in
         # place instead of copying the whole (L, B, S, ...) buffer per tick
@@ -204,30 +263,106 @@ class _EngineBase:
         return cls(api, qparams, **kwargs)
 
     # -- client API --------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, *, strict: bool = False) -> Request:
+        """Admit, reject, or shed one request; returns it with ``status``
+        set (``queued`` | ``rejected`` | ``shed``).
+
+        Malformed requests (empty prompt, prompt that cannot fit
+        ``max_len``) come back ``rejected`` with a reason instead of
+        raising -- one bad client must not take the serve loop down.
+        ``strict=True`` restores the old raise-on-malformed behavior for
+        callers that want submission bugs loud.  Load shedding
+        (``AdmissionConfig``: queue depth / estimated-TTFT SLO) returns
+        ``shed`` in both modes -- overload is the server's fault, not a
+        client bug, so it is never an exception.
+        """
+        req.submit_t = self._clock()
+        reject = None
         if not req.prompt:
-            raise ValueError("empty prompt")
-        if len(req.prompt) >= self.max_len:
-            raise ValueError(
+            reject = "empty prompt"
+        elif len(req.prompt) >= self.max_len:
+            reject = (
                 f"prompt of {len(req.prompt)} tokens cannot fit engine "
                 f"max_len={self.max_len}: the slot would hit the cache cap "
                 "during prefill and finish with truncated or empty output; "
                 "raise max_len or truncate the prompt"
             )
-        req.submit_t = self._clock()
+        if reject is not None:
+            if strict:
+                raise ValueError(reject)
+            req.status, req.reason = "rejected", reject
+            self.events["rejected"] += 1
+            return req
+        if req.deadline_ms is None:
+            req.deadline_ms = self.admission.deadline_ms
+        shed = admission_decision(
+            self.admission,
+            queue_depth=len(self.queue),
+            est_ttft_ms=self._est_ttft_ms(),
+            deadline_ms=req.deadline_ms,
+        )
+        if shed is not None:
+            req.status, req.reason = "shed", shed
+            self.events["shed"] += 1
+            return req
+        req.status = "queued"
         self.queue.append(req)
+        return req
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel request ``uid`` wherever it is -- queued or holding a
+        slot (mid-prefill included).  Returns False if no live request with
+        that uid is inside the engine."""
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                del self.queue[i]
+                r.status, r.reason = "cancelled", "cancelled by client"
+                self.events["cancelled"] += 1
+                return True
+        for s, r in enumerate(self.slot_req):
+            if r is not None and r.uid == uid:
+                self._abort_slot(s)
+                r.status, r.reason = "cancelled", "cancelled by client"
+                self.events["cancelled"] += 1
+                return True
+        return False
 
     def run(self, max_ticks: int = 1_000) -> List[Request]:
-        """Step until idle or the tick budget expires; returns FINISHED
-        requests only.  On budget expiry, in-flight and queued requests
+        """Step until idle or the tick budget expires; returns COMPLETED
+        requests -- finished ones plus any that reached a terminal fault
+        status (expired / failed) while running.  Check ``req.status``;
+        without deadlines or faults every returned request is finished,
+        exactly as before.  On budget expiry, in-flight and queued requests
         stay inside the engine -- inspect them with ``leftover()`` or pull
         them out with ``drain()``; they are never silently discarded."""
-        finished: List[Request] = []
+        completed: List[Request] = []
         ticks = 0
         while self._has_work() and ticks < max_ticks:
-            finished.extend(self.step())
+            tick0 = self._tick
+            out = self.step()
+            completed.extend(out)
+            if self._tick == tick0 and not out and self.queue:
+                # nothing dispatched and nothing completed: every queued
+                # request is gated by retry backoff -- wait it out instead
+                # of burning the tick budget on idle spins
+                wait = min(r.not_before for r in self.queue) - self._clock()
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
             ticks += 1
-        return finished
+        return completed
+
+    def step(self) -> List[Request]:
+        """One engine step: sweep deadlines, dispatch one stage/tick, feed
+        the watchdog and overload controller.  Returns requests completed
+        by this step (finished, expired, or failed)."""
+        t0 = self._clock()
+        completed = self._expire_deadlines()
+        tick0 = self._tick
+        completed.extend(self._step_impl())
+        if self._tick != tick0:  # a real dispatch happened: time it
+            self.watchdog.observe(self._clock() - t0)
+        self._overload_ctl.update(queue_depth=len(self.queue))
+        return completed
 
     def leftover(self) -> Dict[str, List[Request]]:
         """Unfinished work still inside the engine, without removing it:
@@ -296,9 +431,148 @@ class _EngineBase:
 
     def _finish(self, s: int, req: Request) -> None:
         req.done = True
+        req.status = "finished"
         req.finish_t = self._clock()
         self._lat.record(req)
+        if req.first_token_t is not None and len(req.output) > 1:
+            self._overload_ctl.note_tpot_ms(
+                (req.finish_t - req.first_token_t) / (len(req.output) - 1)
+                * 1e3
+            )
         self._reset_slot(s)
+
+    def _abort_slot(self, s: int) -> None:
+        """Tear one slot down mid-request (cancel / expiry / quarantine):
+        host state reset AND device cache row scrubbed through the
+        zero-prefix insert, so a poisoned or half-written row can never
+        outlive its request."""
+        self._reset_slot(s)
+        self._clear_slot_cache(s)
+
+    def _quarantine(self, s: int, req: Request, flag: int) -> Optional[Request]:
+        """Contain a poisoned slot: abort it, scrub its cache, and either
+        re-queue the request with exponential backoff (retry budget left)
+        or fail it for good.  Returns the request when it terminated."""
+        self.events["quarantined"] += 1
+        self._abort_slot(s)
+        reason = health_mod.describe_poison(flag)
+        if req.retries < req.max_retries:
+            req.retries += 1
+            self.events["retried"] += 1
+            backoff_s = (
+                self.admission.retry_backoff_ms
+                * (2 ** (req.retries - 1)) / 1e3
+            )
+            req.not_before = self._clock() + backoff_s
+            # restart from the prompt: partial output came from (or fed
+            # into) a poisoned cache and cannot be trusted
+            req.output.clear()
+            req.first_token_t = None
+            req.status, req.reason = "queued", f"retrying after {reason}"
+            self.queue.append(req)
+            return None
+        req.status = "failed"
+        req.reason = f"{reason} (retry budget exhausted)" if req.max_retries \
+            else reason
+        req.finish_t = self._clock()
+        self.events["failed"] += 1
+        return req
+
+    # -- deadlines / admission ---------------------------------------------
+    def _deadline_passed(self, req: Request, now: float) -> bool:
+        return (
+            req.deadline_ms is not None
+            and req.submit_t is not None
+            and (now - req.submit_t) * 1e3 > req.deadline_ms
+        )
+
+    def _expire_deadlines(self) -> List[Request]:
+        """Expire queued and in-flight requests past their deadline; frees
+        their slots so live requests take them.  Returns the expired."""
+        now = self._clock()
+        expired: List[Request] = []
+        if any(self._deadline_passed(r, now) for r in self.queue):
+            keep: Deque[Request] = deque()
+            for r in self.queue:
+                if self._deadline_passed(r, now):
+                    expired.append(r)
+                else:
+                    keep.append(r)
+            self.queue = keep
+        for s, r in enumerate(self.slot_req):
+            if r is not None and self._deadline_passed(r, now):
+                self._abort_slot(s)
+                expired.append(r)
+        for r in expired:
+            r.status = "expired"
+            r.reason = f"deadline {r.deadline_ms:.0f}ms exceeded"
+            r.finish_t = now
+            self.events["expired"] += 1
+        return expired
+
+    def _pop_eligible(self) -> Optional[Request]:
+        """Oldest queued request not gated by retry backoff (FIFO among the
+        eligible)."""
+        now = self._clock()
+        for i, r in enumerate(self.queue):
+            if r.not_before <= now:
+                del self.queue[i]
+                return r
+        return None
+
+    def _est_ttft_ms(self) -> float:
+        return estimate_ttft_ms(
+            queued_tokens=sum(len(r.prompt) for r in self.queue),
+            n_queued=len(self.queue),
+            tick_ms=self.watchdog.ewma_ms,
+            chunk=self._prefill_chunk_hint(),
+        )
+
+    def _prefill_chunk_hint(self) -> Optional[int]:
+        """Tokens one dispatch consumes during prefill (None = one per
+        tick, the lockstep model); the staged engine overrides."""
+        return None
+
+    # -- chaos -------------------------------------------------------------
+    def _draw_fault(self):
+        """Consume one injector decision for this dispatch.  Logit faults
+        return in-graph operands (slot, value); cache/stall faults are
+        applied here.  Fault-free: (-1, 0.0) -- the graph's no-op path."""
+        no_fault = (jnp.int32(-1), jnp.float32(0.0))
+        if self.faults is None:
+            return no_fault
+        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        ev = self.faults.draw(self._tick, active)
+        if ev is None:
+            return no_fault
+        self.events["faults_injected"] += 1
+        victim = self.slot_req[ev.slot] if 0 <= ev.slot < self.n_slots \
+            else None
+        ev.uid = victim.uid if victim is not None else None
+        if ev.kind in ("nan_logits", "inf_logits", "sat_logits"):
+            return jnp.int32(ev.slot), jnp.float32(ev.payload)
+        if ev.kind == "kv_corrupt":
+            self._corrupt_slot_cache(ev.slot)
+        elif ev.kind == "stall_tick":
+            time.sleep(float(ev.payload))
+        return no_fault
+
+    def _corrupt_slot_cache(self, s: int) -> None:
+        """Chaos: NaN-fill every float leaf of slot ``s``'s decode-cache
+        row via the same donated insert the engine scrubs with."""
+        if self._insert_step is None:
+            return
+        if self._poison_prefix is None:
+            zero = self.api.init_cache(1, self.max_len)
+            self._poison_prefix = jax.tree.map(
+                lambda x: jnp.full_like(x, jnp.nan)
+                if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) else x,
+                zero,
+            )
+        with self._dispatch():
+            self.cache = self._insert_step(
+                self.cache, self._poison_prefix, jnp.int32(s)
+            )
 
     def _check_done(self, s: int, tok: int, req: Request) -> bool:
         hit_eos = req.eos_id is not None and tok == req.eos_id
@@ -345,7 +619,7 @@ class _EngineBase:
     def _abort_inflight(self) -> None:
         """Engine-specific teardown of partially-prefilled state (drain)."""
 
-    def step(self) -> List[Request]:  # pragma: no cover - abstract
+    def _step_impl(self) -> List[Request]:  # pragma: no cover - abstract
         raise NotImplementedError
 
     # -- introspection ------------------------------------------------------
@@ -364,7 +638,21 @@ class _EngineBase:
             # queue_wait (submit -> slot), ttft (submit -> first token),
             # tpot (per output token after the first); None until recorded
             "latency": self._lat.summary(),
+            # fault-tolerance: watchdog tick timing, overload mode, and the
+            # shed/expired/quarantine/retry event counters
+            "health": {
+                **self.watchdog.summary(),
+                **self._overload_ctl.summary(),
+                "events": dict(self.events),
+                "faults": None if self.faults is None
+                else self.faults.summary(),
+            },
         }
+
+    @property
+    def overload(self) -> bool:
+        """Is the engine currently in degraded (overload) mode?"""
+        return self._overload_ctl.overload
 
 
 class ServingEngine(_EngineBase):
@@ -376,27 +664,37 @@ class ServingEngine(_EngineBase):
     def _admit(self) -> None:
         for s in range(self.n_slots):
             if self.slot_req[s] is None and self.queue:
-                req = self.queue.popleft()
+                req = self._pop_eligible()
+                if req is None:  # whole queue gated by retry backoff
+                    return
                 self._occupy_slot(s, req)
                 self.slot_cursor[s] = 1  # token 0 goes in this tick
                 self.next_token[s] = req.prompt[0]
 
-    def step(self) -> List[Request]:
-        """One lockstep tick over all slots; returns requests finished."""
+    def _step_impl(self) -> List[Request]:
+        """One lockstep tick over all slots; returns requests completed."""
         self._admit()
         if not any(r is not None for r in self.slot_req):
             return []
         self._tick += 1
+        fault_slot, fault_val = self._draw_fault()
         tokens, pos = self._device_operands()
         with self._dispatch():
-            toks, self.key, self.cache = self._decode_step(
-                self.params, tokens, pos, self.cache, self.key
+            out, self.key, self.cache = self._decode_step(
+                self.params, tokens, pos, self.cache, self.key,
+                fault_slot, fault_val,
             )
-        sampled = np.asarray(toks)  # the ONE host sync per tick
+        out = np.asarray(out)  # the ONE host sync per tick
+        sampled, flags = out[0], out[1]
 
-        finished: List[Request] = []
+        completed: List[Request] = []
         for s, req in enumerate(self.slot_req):
             if req is None:
+                continue
+            if flags[s]:  # guardrail tripped: contain before consuming
+                dead = self._quarantine(s, req, int(flags[s]))
+                if dead is not None:
+                    completed.append(dead)
                 continue
             self.slot_pos[s] += 1
             if self.slot_cursor[s] < len(req.prompt):  # still prefilling
@@ -408,11 +706,11 @@ class ServingEngine(_EngineBase):
                 req.first_token_t = self._clock()
             req.output.append(tok)
             if self._check_done(s, tok, req):
-                finished.append(req)
+                completed.append(req)
                 self._finish(s, req)
             else:
                 self.next_token[s] = tok
-        return finished
+        return completed
 
 
 class StagedEngine(_EngineBase):
@@ -459,9 +757,20 @@ class StagedEngine(_EngineBase):
                 donate_argnums=(3,),
             )
 
+        guardrails = self.health.guardrails
+        sat_limit = float(2.0 ** self.health.sat_exponent)
+
         def _first_token(key, logits):
             key, sub = jax.random.split(key)
-            return sample(sub, logits[:, -1, :], self.sampler), key
+            last = logits[:, -1, :].astype(jnp.float32)
+            toks = sample(sub, last, self.sampler)
+            # same fused guardrail as the decode tick: a poisoned prefill
+            # must be caught before its first token is served
+            if guardrails:
+                flags = health_mod.poison_flags(last, sat_limit)
+            else:
+                flags = jnp.zeros_like(toks)
+            return jnp.stack([toks, flags]), key
 
         self._first_token = jax.jit(_first_token)
 
@@ -474,6 +783,16 @@ class StagedEngine(_EngineBase):
             r is not None and s != reserved for s, r in enumerate(self.slot_req)
         )
 
+    def _effective_chunk(self) -> int:
+        """Prefill chunk budget for NEW tasks: the configured chunk, or the
+        degraded power-of-two half under overload (already in the compiled
+        remainder-shape set, so degradation never compiles)."""
+        chunk = self.sched.prefill_chunk
+        return degraded_chunk(chunk) if self._overload_ctl.overload else chunk
+
+    def _prefill_chunk_hint(self) -> Optional[int]:
+        return self._effective_chunk()
+
     def _start_prefill(self) -> None:
         """Reserve a slot and open a PrefillTask for the queue head."""
         if self._pf is not None or not self.queue:
@@ -481,24 +800,36 @@ class StagedEngine(_EngineBase):
         s = self._free_slot()
         if s is None:
             return
-        req = self.queue.popleft()
+        req = self._pop_eligible()
+        if req is None:  # whole queue gated by retry backoff
+            return
         self._occupy_slot(s, req)
         self._pf = PrefillTask(
             req=req,
             slot=s,
-            chunks=chunk_plan(len(req.prompt), self.sched.prefill_chunk),
+            chunks=chunk_plan(len(req.prompt), self._effective_chunk()),
             cache=self.api.init_cache(1, self.max_len),
         )
 
     def _abort_inflight(self) -> None:
         self._pf = None
 
-    def step(self) -> List[Request]:
+    def _abort_slot(self, s: int) -> None:
+        # slot may be reserved by the in-flight prefill (cancel / expiry /
+        # quarantine mid-prefill): drop the task with it
+        if self._pf is not None and self._pf.slot == s:
+            self._pf = None
+        super()._abort_slot(s)
+
+    def _step_impl(self) -> List[Request]:
         """Dispatch one stage (prefill chunk | generate tick); returns
-        requests finished by this dispatch."""
+        requests completed by this dispatch."""
         self._start_prefill()
+        # graceful degradation: under overload, protect running requests'
+        # TPOT -- force decode-priority regardless of the configured policy
+        policy = "decode" if self._overload_ctl.overload else self.sched.policy
         action = next_action(
-            self.sched.policy,
+            policy,
             prefill_ready=self._pf is not None,
             decode_ready=self._decode_ready(),
             last=self._last_action,
@@ -517,7 +848,7 @@ class StagedEngine(_EngineBase):
         start, size = pf.next_chunk()
         req = pf.req
         chunk_toks = np.asarray([req.prompt[start : start + size]], np.int32)
-        tok_dev = None
+        out_dev = None
         with self._dispatch():
             if self._prefill_step is not None:
                 logits, pf.cache = self._prefill_step(
@@ -535,16 +866,20 @@ class StagedEngine(_EngineBase):
             if pf.complete:
                 # first generated token comes from the final chunk's logits;
                 # the finished prefix moves into the reserved decode slot
-                tok_dev, self.key = self._first_token(self.key, logits)
+                out_dev, self.key = self._first_token(self.key, logits)
                 self.cache = self._insert_step(
                     self.cache, pf.cache, jnp.int32(pf.slot)
                 )
                 self.counts["inserts"] += 1
-        if tok_dev is None:
+        if out_dev is None:
             return []
-        tok = int(np.asarray(tok_dev)[0])  # the one host sync
+        out = np.asarray(out_dev)  # the one host sync
+        tok, flag = int(out[0, 0]), int(out[1, 0])
         s = pf.slot
         self._pf = None
+        if flag:  # poisoned prefill: contain before serving its first token
+            dead = self._quarantine(s, req, flag)
+            return [] if dead is None else [dead]
         self.slot_pos[s] = pf.done_tokens  # == len(prompt): next write pos
         req.first_token_t = self._clock()
         req.output.append(tok)
@@ -555,28 +890,36 @@ class StagedEngine(_EngineBase):
         return []
 
     def _generate_dispatch(self) -> List[Request]:
+        fault_slot, fault_val = self._draw_fault()
         tokens, pos = self._device_operands()
         with self._dispatch():
-            toks, self.key, self.cache = self._decode_step(
-                self.params, tokens, pos, self.cache, self.key
+            out, self.key, self.cache = self._decode_step(
+                self.params, tokens, pos, self.cache, self.key,
+                fault_slot, fault_val,
             )
-        sampled = np.asarray(toks)  # the ONE host sync per tick
+        out = np.asarray(out)  # the ONE host sync per tick
+        sampled, flags = out[0], out[1]
         self.counts["generate_ticks"] += 1
 
-        finished: List[Request] = []
+        completed: List[Request] = []
         reserved = self._pf.slot if self._pf is not None else None
         for s, req in enumerate(self.slot_req):
             if req is None or s == reserved:
                 continue  # idle or mid-prefill: pad row, output discarded
+            if flags[s]:  # guardrail tripped: contain before consuming
+                dead = self._quarantine(s, req, int(flags[s]))
+                if dead is not None:
+                    completed.append(dead)
+                continue
             self.slot_pos[s] += 1
             tok = int(sampled[s])
             req.output.append(tok)
             if self._check_done(s, tok, req):
-                finished.append(req)
+                completed.append(req)
                 self._finish(s, req)
             else:
                 self.next_token[s] = tok
-        return finished
+        return completed
 
     # -- introspection ------------------------------------------------------
     def stats(self) -> Dict[str, Any]:

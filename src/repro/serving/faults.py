@@ -1,0 +1,229 @@
+"""Chaos harness: seeded, deterministic fault injection for serving.
+
+The point of the harness is a provable containment story: for every fault
+kind the engine claims to survive, CI injects it and asserts that exactly
+the afflicted request fails (or retries), while every other concurrent
+request finishes bit-identical to a fault-free run and the engine keeps
+serving.  Determinism is load-bearing -- the injector owns a seeded
+generator and a one-shot arming queue, never wall-clock, so a chaos run
+replays exactly.
+
+Engine-tick fault kinds (consumed by ``FaultInjector.draw`` once per
+decode dispatch; see ``_EngineBase._draw_fault``):
+
+  * ``nan_logits`` / ``inf_logits`` / ``sat_logits`` -- overwrite one
+    slot's logit row in-graph with NaN / Inf / a finite value beyond the
+    DFP saturation horizon.  Exercises all guardrail bits.
+  * ``kv_corrupt`` -- NaN-fill every float leaf of one slot's decode-cache
+    row (via the same donated insert the engine uses to scrub), modeling a
+    corrupted KV block; the next tick's guardrail must catch it.
+  * ``stall_tick`` -- host-side sleep before the dispatch, modeling a hung
+    device tick; the watchdog must flag it and tokens must be unaffected.
+
+Artifact-load fault kinds (applied around ``load_artifact``):
+
+  * ``FlakyIO`` -- an io-fault hook for ``repro.training.checkpoint`` that
+    raises ``OSError`` on the first N payload reads, modeling a transient
+    filesystem flake; the loader's retry-with-backoff must absorb it.
+  * ``corrupt_payload`` -- flips bytes inside a payload file (an integrity
+    fault, NOT transient): verification must fail closed, never retry it
+    into service.
+
+CLI: ``repro.launch.serve --chaos "rate=0.01,kinds=nan_logits|kv_corrupt,
+seed=0"`` injects at a sustained rate; ``benchmarks/bench_serving.py
+--chaos --smoke`` is the CI containment matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from collections import deque
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+# kinds drawn per engine dispatch
+TICK_FAULT_KINDS = (
+    "nan_logits",
+    "inf_logits",
+    "sat_logits",
+    "kv_corrupt",
+    "stall_tick",
+)
+# kinds exercised around artifact load (not drawn per tick)
+ARTIFACT_FAULT_KINDS = ("io_flake", "shard_corrupt")
+
+_DEFAULT_PAYLOAD = {
+    "nan_logits": float("nan"),
+    "inf_logits": float("inf"),
+    "sat_logits": float(2.0 ** 30),  # finite, but past any sane DFP horizon
+}
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One injected fault: what, where, with which payload.
+
+    ``tick`` and ``uid`` are stamped when the event fires (engine tick it
+    hit, uid of the request occupying the target slot) so a chaos run's log
+    names its victims exactly.
+    """
+
+    kind: str
+    slot: int = 0
+    payload: Optional[float] = None
+    tick: Optional[int] = None
+    uid: Optional[int] = None
+
+
+class FaultInjector:
+    """Deterministic fault source for the serving engines.
+
+    Two modes, composable:
+
+      * armed one-shots: ``arm(kind, slot=...)`` queues exactly one fault
+        for the next decode dispatch -- what the chaos-matrix tests use to
+        hit a known victim at a known point.
+      * seeded rate: with ``rate`` > 0, each dispatch draws from a private
+        ``np.random.Generator(seed)``; with probability ``rate`` one fault
+        of a random ``kinds`` entry hits a random ACTIVE slot.  The draw
+        sequence depends only on (seed, dispatch ordinal), never on wall
+        clock, so a fixed submission order replays identically.
+
+    ``log`` records every fired event (kind, slot, tick, victim uid) --
+    the containment assertions read it to learn who was afflicted.
+    """
+
+    def __init__(
+        self,
+        *,
+        rate: float = 0.0,
+        kinds: Sequence[str] = ("nan_logits",),
+        seed: int = 0,
+        stall_s: float = 0.25,
+    ):
+        for k in kinds:
+            if k not in TICK_FAULT_KINDS:
+                raise ValueError(
+                    f"unknown tick fault kind {k!r}; known: {TICK_FAULT_KINDS}"
+                )
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {rate}")
+        self.rate = rate
+        self.kinds = tuple(kinds)
+        self.stall_s = stall_s
+        self._rng = np.random.default_rng(seed)
+        self._armed: deque = deque()
+        self.log: List[FaultEvent] = []
+
+    def arm(self, kind: str, slot: int = 0, payload: Optional[float] = None):
+        """Queue a one-shot fault for the next decode dispatch."""
+        if kind not in TICK_FAULT_KINDS:
+            raise ValueError(
+                f"unknown tick fault kind {kind!r}; known: {TICK_FAULT_KINDS}"
+            )
+        self._armed.append(FaultEvent(kind=kind, slot=slot, payload=payload))
+        return self
+
+    def draw(self, tick: int, active_slots: Sequence[int]) -> Optional[FaultEvent]:
+        """One injection decision for the dispatch at ``tick``.
+
+        Armed one-shots fire first (regardless of activity); the seeded
+        rate only targets slots that actually hold a request -- injecting
+        into an empty slot proves nothing.
+        """
+        ev: Optional[FaultEvent] = None
+        if self._armed:
+            ev = self._armed.popleft()
+        elif self.rate > 0.0 and active_slots:
+            # one generator call per dispatch whether or not a fault fires,
+            # so the decision sequence is a pure function of the ordinal
+            u = self._rng.random()
+            if u < self.rate:
+                kind = self.kinds[int(self._rng.integers(len(self.kinds)))]
+                slot = active_slots[
+                    int(self._rng.integers(len(active_slots)))
+                ]
+                ev = FaultEvent(kind=kind, slot=int(slot))
+        if ev is None:
+            return None
+        if ev.payload is None:
+            ev.payload = _DEFAULT_PAYLOAD.get(ev.kind, self.stall_s)
+        ev.tick = tick
+        self.log.append(ev)
+        return ev
+
+    @classmethod
+    def from_spec(cls, spec: str) -> "FaultInjector":
+        """Parse a CLI spec: ``rate=0.01,kinds=nan_logits|kv_corrupt,seed=0,
+        stall=0.25``.  Unknown keys raise."""
+        kw = {}
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            k, _, v = part.partition("=")
+            if k == "rate":
+                kw["rate"] = float(v)
+            elif k == "kinds":
+                kw["kinds"] = tuple(filter(None, v.split("|")))
+            elif k == "seed":
+                kw["seed"] = int(v)
+            elif k == "stall":
+                kw["stall_s"] = float(v)
+            else:
+                raise ValueError(
+                    f"unknown --chaos key {k!r} (known: rate, kinds, seed, stall)"
+                )
+        return cls(**kw)
+
+    def summary(self) -> dict:
+        by_kind: dict = {}
+        for ev in self.log:
+            by_kind[ev.kind] = by_kind.get(ev.kind, 0) + 1
+        return {"injected": len(self.log), "by_kind": by_kind}
+
+
+# ---------------------------------------------------------------------------
+# Artifact-load faults.
+# ---------------------------------------------------------------------------
+class FlakyIO:
+    """Transient-IO fault hook for ``checkpoint.io_fault_hook``.
+
+    Raises ``OSError`` on the first ``n_failures`` reads whose path contains
+    ``match`` (empty matches everything), then passes everything through --
+    the model of a filesystem flake that heals on retry.  ``raised`` counts
+    injected failures so tests can assert the retry loop actually absorbed
+    them rather than never hitting them.
+    """
+
+    def __init__(self, n_failures: int, match: str = ""):
+        self.remaining = n_failures
+        self.match = match
+        self.raised = 0
+
+    def __call__(self, path: str) -> None:
+        if self.remaining > 0 and self.match in os.path.basename(path):
+            self.remaining -= 1
+            self.raised += 1
+            raise OSError(f"injected transient IO failure reading {path}")
+
+
+def corrupt_payload(step_dir: str, seed: int = 0) -> str:
+    """Flip bytes inside one payload file of a checkpoint step directory.
+
+    Deterministic victim choice (sorted file list + seeded offset).  This
+    is an INTEGRITY fault: the sha256 gate must fail the whole step closed
+    (fall back to an older intact step or raise) -- retrying it would serve
+    corrupt weights.  Returns the corrupted file's path.
+    """
+    victims = sorted(
+        f for f in os.listdir(step_dir)
+        if f.endswith(".npy")
+    )
+    if not victims:
+        raise ValueError(f"no payload files under {step_dir}")
+    rng = np.random.default_rng(seed)
+    target = os.path.join(step_dir, victims[int(rng.integers(len(victims)))])
+    size = os.path.getsize(target)
+    with open(target, "r+b") as f:
+        f.seek(int(rng.integers(max(1, size))))
+        f.write(b"\xde\xad\xbe\xef")
+    return target

@@ -1,0 +1,199 @@
+"""Serving-side health: numerical guardrails, tick watchdog, overload mode.
+
+Why guardrails live in the SERVING layer (not just in tests): dynamic fixed
+point deliberately runs activations on a narrow 8-bit grid under shared
+power-of-two exponents (the paper's design), and fine-grained cluster
+scaling multiplies the number of scale sites.  One corrupt scale, one
+saturated accumulation, or one NaN-ed KV row silently poisons every token a
+slot emits from then on -- and with a shared decode batch, an undetected
+poisoned slot is one donated cache insert away from being recycled into the
+next request.  The engine therefore checks every decode dispatch:
+
+  * ``poison_flags`` is ONE fused reduction over the tick's logits, traced
+    into the jitted decode graph -- per-slot bitflags for non-finite values
+    and for magnitudes beyond the DFP saturation horizon
+    (``2**sat_exponent``: past it, an 8-bit dynamic-fixed-point grid at any
+    calibrated exponent the plan could carry is pure clipping).  The flags
+    ride back in the SAME (2, B) device array as the sampled tokens, so
+    guardrails add zero extra host syncs per tick.
+  * ``TickWatchdog`` times every dispatch wall-clock and counts slow/hung
+    ticks (it cannot preempt a wedged XLA dispatch from the same thread --
+    it FLAGS, so operators and the chaos harness can assert on it).
+  * ``OverloadController`` watches recent TPOT p95 and queue depth and
+    flips the engine into degraded mode (smaller prefill chunks,
+    decode-priority arbitration) with hysteresis, so an overloaded engine
+    sheds latency tax instead of collapsing.
+
+Poisoned slots are quarantined by the engine: the slot is aborted, its
+cache rows scrubbed through the zero-prefix insert, and the request
+re-queued with exponential backoff up to its retry budget (see
+``docs/SERVING.md``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+# poison bitflags returned per slot by the fused guardrail reduction
+POISON_NONE = 0
+POISON_NONFINITE = 1  # NaN/Inf anywhere in the slot's logit row
+POISON_SATURATED = 2  # finite but beyond the DFP saturation horizon
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Knobs for guardrails, the tick watchdog and overload degradation.
+
+    guardrails: fold the per-slot poison check into the decode tick.  On by
+        default -- it is one fused reduction and changes no tokens unless a
+        slot is actually poisoned (greedy parity is regression-tested with
+        it enabled).
+    sat_exponent: |logit| >= 2**sat_exponent counts as DFP saturation.  The
+        default (24) is far above anything a healthy smoke/serving model
+        emits but far below overflow -- a corrupt shared exponent shows up
+        here before it NaNs.
+    tick_slow_s / tick_hang_s: wall-clock thresholds the watchdog counts
+        against every dispatch (first-compile ticks will typically count as
+        slow; the watchdog flags, it never kills).
+    overload_tpot_ms / overload_queue: breach of either (recent TPOT p95,
+        queue depth) flips the engine into overload mode; ``None`` disables
+        that trigger.  Recovery needs both back under 80% of the threshold
+        (hysteresis, so the mode cannot flap every tick).
+    window: sliding sample window for the recent-TPOT estimate.
+    """
+
+    guardrails: bool = True
+    sat_exponent: int = 24
+    tick_slow_s: float = 1.0
+    tick_hang_s: float = 10.0
+    overload_tpot_ms: Optional[float] = None
+    overload_queue: Optional[int] = None
+    window: int = 32
+
+
+def poison_flags(logits, sat_limit: float):
+    """Per-slot poison bitflags over a (B, V) logit block -- ONE fused
+    reduction, meant to be traced into the jitted decode tick.
+
+    bit 0 (POISON_NONFINITE): any NaN/Inf in the row.
+    bit 1 (POISON_SATURATED): any finite magnitude >= ``sat_limit``.
+    """
+    x = logits.astype(jnp.float32)
+    finite = jnp.isfinite(x)
+    nonfinite = jnp.any(~finite, axis=-1)
+    sat = jnp.any(jnp.where(finite, jnp.abs(x), 0.0) >= sat_limit, axis=-1)
+    return (
+        nonfinite.astype(jnp.int32) * POISON_NONFINITE
+        + sat.astype(jnp.int32) * POISON_SATURATED
+    )
+
+
+def describe_poison(flag: int) -> str:
+    """Human-readable reason string for a poison bitflag."""
+    parts = []
+    if flag & POISON_NONFINITE:
+        parts.append("non-finite logits")
+    if flag & POISON_SATURATED:
+        parts.append("DFP-saturated logits")
+    return " + ".join(parts) or f"poison flag {flag}"
+
+
+class TickWatchdog:
+    """Wall-clock accounting of every engine dispatch.
+
+    A hung XLA dispatch cannot be preempted from the dispatching thread, so
+    the watchdog's contract is detection: it counts slow/hung ticks, keeps
+    an EWMA tick time (the admission controller's TTFT estimator reads it),
+    and remembers the worst tick.
+    """
+
+    def __init__(self, cfg: HealthConfig):
+        self.cfg = cfg
+        self.n = 0
+        self.slow = 0
+        self.hung = 0
+        self.ewma_ms = 0.0
+        self.last_ms = 0.0
+        self.worst_ms = 0.0
+
+    def observe(self, dt_s: float) -> Optional[str]:
+        """Record one dispatch duration; returns "hung"/"slow"/None."""
+        ms = dt_s * 1e3
+        self.n += 1
+        self.last_ms = ms
+        self.worst_ms = max(self.worst_ms, ms)
+        # EWMA seeded by the first sample; 0.2 step so one compile tick
+        # doesn't dominate the TTFT estimate for long
+        self.ewma_ms = ms if self.n == 1 else 0.8 * self.ewma_ms + 0.2 * ms
+        if dt_s >= self.cfg.tick_hang_s:
+            self.hung += 1
+            return "hung"
+        if dt_s >= self.cfg.tick_slow_s:
+            self.slow += 1
+            return "slow"
+        return None
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "ticks": self.n,
+            "slow_ticks": self.slow,
+            "hung_ticks": self.hung,
+            "tick_ms_ewma": self.ewma_ms,
+            "tick_ms_last": self.last_ms,
+            "tick_ms_worst": self.worst_ms,
+        }
+
+
+class OverloadController:
+    """Hysteretic overload detector driving graceful degradation.
+
+    Enter overload when recent TPOT p95 breaches ``overload_tpot_ms`` or
+    queue depth breaches ``overload_queue``; leave only when every enabled
+    metric is back under 80% of its threshold.  The staged engine reads
+    ``overload`` to shrink prefill chunks and force decode-priority
+    arbitration (see ``StagedEngine``).
+    """
+
+    def __init__(self, cfg: HealthConfig):
+        self.cfg = cfg
+        self.overload = False
+        self.entered = 0  # times overload mode was entered
+        self._tpot_ms = deque(maxlen=cfg.window)
+
+    def note_tpot_ms(self, ms: float) -> None:
+        self._tpot_ms.append(ms)
+
+    def tpot_p95_ms(self) -> Optional[float]:
+        if not self._tpot_ms:
+            return None
+        return float(np.percentile(np.asarray(self._tpot_ms), 95))
+
+    def update(self, *, queue_depth: int) -> bool:
+        cfg = self.cfg
+        p95 = self.tpot_p95_ms()
+
+        def _state(scale: float) -> bool:
+            breach = False
+            if cfg.overload_tpot_ms is not None and p95 is not None:
+                breach |= p95 > cfg.overload_tpot_ms * scale
+            if cfg.overload_queue is not None:
+                breach |= queue_depth > cfg.overload_queue * scale
+            return breach
+
+        if not self.overload and _state(1.0):
+            self.overload = True
+            self.entered += 1
+        elif self.overload and not _state(0.8):
+            self.overload = False
+        return self.overload
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "overload": self.overload,
+            "overload_entered": self.entered,
+            "tpot_p95_ms_recent": self.tpot_p95_ms(),
+        }

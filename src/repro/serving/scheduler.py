@@ -1,5 +1,5 @@
 """Staged-serving scheduler: chunked-prefill planning, stage arbitration,
-per-request SLO accounting.
+admission control, per-request SLO accounting.
 
 The staged engine (``repro.serving.engine.StagedEngine``) splits serving
 into three device stages -- ``prefill`` (whole-prompt chunks through a
@@ -19,6 +19,14 @@ it unit-tests without touching a device:
     first (time-to-first-token over time-per-output-token).
   * ``PrefillTask`` tracks one in-flight prefill (request, reserved slot,
     chunk cursor, its private B=1 cache).
+  * ``AdmissionConfig`` + ``admission_decision`` are the load-shedding
+    policy: a request whose queue would be too deep, or whose estimated
+    TTFT (``estimate_ttft_ms``) already blows its SLO/deadline, is shed AT
+    SUBMIT -- a structured ``shed`` status instead of queueing work the
+    engine provably cannot serve in time.
+  * ``degraded_chunk`` is the overload fallback chunk size: the largest
+    power of two <= chunk/2, so degraded prefill reuses already-compiled
+    remainder shapes instead of adding new ones.
   * ``LatencyStats`` aggregates per-request queue-wait / TTFT / TPOT and
     reports p50/p95/p99 for ``engine.stats()`` and the serving bench.
 """
@@ -75,6 +83,90 @@ def chunk_plan(n_tokens: int, chunk: int) -> List[int]:
         sizes.append(p)
         rem -= p
     return sizes
+
+
+def degraded_chunk(chunk: int) -> int:
+    """Overload-mode prefill chunk: largest power of two <= max(1, chunk/2).
+
+    Power-of-two by construction so every degraded chunk size is already in
+    the compiled remainder-shape set ({2^i < chunk}) -- entering overload
+    mode never triggers a fresh prefill compile.
+    """
+    half = max(1, chunk // 2)
+    return 1 << (half.bit_length() - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Load-shedding and deadline policy applied at ``engine.submit``.
+
+    max_queue: shed when the queue already holds this many requests
+        (``None`` disables depth shedding).
+    ttft_slo_ms: shed when the estimated time to first token already
+        exceeds this budget (``None`` disables SLO shedding).
+    deadline_ms: default per-request deadline (a request's own
+        ``deadline_ms`` wins); past it the request is EXPIRED wherever it
+        is -- queued or in flight.  ``None`` = no default deadline.
+    retry_backoff_ms: base of the exponential backoff a quarantined
+        request waits before re-admission (doubles per retry).
+    """
+
+    max_queue: Optional[int] = None
+    ttft_slo_ms: Optional[float] = None
+    deadline_ms: Optional[float] = None
+    retry_backoff_ms: float = 20.0
+
+
+def estimate_ttft_ms(
+    *,
+    queued_tokens: int,
+    n_queued: int,
+    tick_ms: float,
+    chunk: Optional[int] = None,
+) -> float:
+    """Crude-but-monotone TTFT estimate for a request submitted NOW.
+
+    Counts the dispatches that must happen before its first token: every
+    queued prompt's prefill work (``ceil(tokens / chunk)`` chunk dispatches
+    staged, one tick per token lockstep when ``chunk`` is None) plus one
+    first-token dispatch per queued request, priced at the engine's recent
+    EWMA tick time.  Deliberately ignores decode interleaving -- it is an
+    admission-control floor, not a simulator: if even the floor blows the
+    SLO, queueing the request just manufactures a guaranteed deadline miss.
+    """
+    if tick_ms <= 0.0:
+        return 0.0  # no dispatch history yet: admit and learn
+    if chunk is not None and chunk > 0:
+        prefill_dispatches = (queued_tokens + chunk - 1) // chunk
+    else:
+        prefill_dispatches = queued_tokens
+    return (prefill_dispatches + n_queued) * tick_ms
+
+
+def admission_decision(
+    adm: AdmissionConfig,
+    *,
+    queue_depth: int,
+    est_ttft_ms: float,
+    deadline_ms: Optional[float] = None,
+) -> Optional[str]:
+    """Shed reason for a submission, or None to admit.
+
+    A request is shed when the queue is at ``max_queue``, or when the
+    estimated TTFT already exceeds the tighter of the global TTFT SLO and
+    the request's own deadline.
+    """
+    if adm.max_queue is not None and queue_depth >= adm.max_queue:
+        return (
+            f"queue depth {queue_depth} >= max_queue {adm.max_queue}"
+        )
+    budgets = [b for b in (adm.ttft_slo_ms, deadline_ms) if b is not None]
+    if budgets and est_ttft_ms > min(budgets):
+        return (
+            f"estimated TTFT {est_ttft_ms:.0f}ms exceeds budget "
+            f"{min(budgets):.0f}ms"
+        )
+    return None
 
 
 def next_action(

@@ -66,11 +66,13 @@ contract:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
 import os
 import shutil
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -225,9 +227,64 @@ def _payload_name(name: str) -> str:
     return hashlib.sha1(name.encode()).hexdigest()[:16] + ".npy"
 
 
-def _file_sha256(fpath: str) -> str:
+# ---------------------------------------------------------------------------
+# Transient-IO retry.  Payload READS (np.load, sha256 hashing) retry OSError
+# with exponential backoff -- a filesystem flake during a serving cold start
+# should cost milliseconds, not the boot.  Integrity failures (sha256
+# mismatch, malformed manifest) are NOT OSErrors and are never retried:
+# corrupt data must fail closed (``_verify`` -> None), because retrying it
+# would serve corrupt weights.  ``io_fault_hook`` is the chaos harness's
+# injection point (``repro.serving.faults.FlakyIO``).
+# ---------------------------------------------------------------------------
+IO_RETRIES = 3  # retry attempts AFTER the first failure
+IO_BACKOFF_S = 0.05  # first backoff; doubles per retry
+
+_IO_FAULT_HOOK: List[Optional[Callable[[str], None]]] = [None]
+
+
+def set_io_fault_hook(hook: Optional[Callable[[str], None]]) -> None:
+    """Install a callable invoked with every payload path about to be read
+    (``None`` uninstalls).  Raising ``OSError`` from it models a transient
+    read failure; the retry loop must absorb it."""
+    _IO_FAULT_HOOK[0] = hook
+
+
+@contextlib.contextmanager
+def io_fault_hook(hook: Callable[[str], None]):
+    """Scoped ``set_io_fault_hook`` -- the hook never outlives the test."""
+    set_io_fault_hook(hook)
+    try:
+        yield hook
+    finally:
+        set_io_fault_hook(None)
+
+
+def _read_retry(read: Callable[[str], Any], fpath: str) -> Any:
+    """``read(fpath)`` with OSError retry + exponential backoff."""
+    delay = IO_BACKOFF_S
+    for attempt in range(IO_RETRIES + 1):
+        try:
+            if _IO_FAULT_HOOK[0] is not None:
+                _IO_FAULT_HOOK[0](fpath)
+            return read(fpath)
+        except OSError:
+            if attempt == IO_RETRIES:
+                raise
+            time.sleep(delay)
+            delay *= 2
+
+
+def _np_load(fpath: str) -> np.ndarray:
+    return _read_retry(np.load, fpath)
+
+
+def _sha256_once(fpath: str) -> str:
     with open(fpath, "rb") as f:
         return hashlib.sha256(f.read()).hexdigest()
+
+
+def _file_sha256(fpath: str) -> str:
+    return _read_retry(_sha256_once, fpath)
 
 
 def _norm_index(idx, shape) -> Tuple[Tuple[int, int], ...]:
@@ -484,11 +541,11 @@ def _load_payload(d: str, meta: Dict[str, Any]) -> np.ndarray:
     """Host-side load of one payload; sharded payloads concatenate into a
     single host array (the mesh-free / template-``restore`` path)."""
     if "shards" not in meta:
-        return np.load(os.path.join(d, meta["file"]))
+        return _np_load(os.path.join(d, meta["file"]))
     out = np.empty(tuple(meta["shape"]), np.dtype(meta["dtype"]))
     for s in meta["shards"]:
         sl = tuple(slice(a, b) for a, b in s["index"])
-        out[sl] = np.load(os.path.join(d, s["file"]))
+        out[sl] = _np_load(os.path.join(d, s["file"]))
     return out
 
 
@@ -516,7 +573,7 @@ def _load_payload_on_mesh(d: str, meta: Dict[str, Any], sharding) -> jax.Array:
             for dev, idx in imap.items():
                 fname = saved[_norm_index(idx, shape)]
                 if fname not in cache:
-                    cache[fname] = np.load(os.path.join(d, fname))
+                    cache[fname] = _np_load(os.path.join(d, fname))
                 pieces.append(jax.device_put(cache[fname], dev))
             return jax.make_array_from_single_device_arrays(
                 shape, sharding, pieces
@@ -573,7 +630,7 @@ def restore(
         meta = manifest["arrays"].get(name)
         if meta is None:
             raise KeyError(f"checkpoint missing array {name!r}")
-        arr = np.load(os.path.join(d, meta["file"]))
+        arr = _np_load(os.path.join(d, meta["file"]))
         if list(arr.shape) != list(leaf.shape):
             raise ValueError(f"{name}: shape {arr.shape} != template {leaf.shape}")
         if shard is not None:

@@ -302,3 +302,94 @@ def test_kv_mx_running_max_rescale(x, pos0):
     for i, p in enumerate(positions):
         # rescale of residents rounds twice; allow one extra half-step
         assert np.abs(rec[p] - x[i]).max() <= step + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# serving scheduler: chunk planning and latency aggregation invariants.
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 4096), st.integers(1, 256))
+@settings(max_examples=60, deadline=None)
+def test_chunk_plan_properties(n_tokens, chunk):
+    """Every plan (a) sums to exactly n_tokens, (b) never exceeds the chunk
+    budget, (c) decomposes the remainder into strictly-descending powers of
+    two -- so the compiled shape set stays {chunk} U {2^i < chunk}."""
+    from repro.serving import chunk_plan
+
+    sizes = chunk_plan(n_tokens, chunk)
+    assert sum(sizes) == n_tokens
+    assert all(1 <= s <= chunk for s in sizes)
+    tail = [s for s in sizes if s != chunk]
+    assert all(s & (s - 1) == 0 for s in tail)  # powers of two
+    assert tail == sorted(tail, reverse=True)
+    assert len(set(tail)) == len(tail)  # strictly descending: no repeats
+    full = [s for s in sizes if s == chunk]
+    assert sizes[: len(full)] == full  # full chunks lead the plan
+
+
+@given(st.integers(1, 1024), st.integers(1, 256))
+@settings(max_examples=40, deadline=None)
+def test_degraded_chunk_plan_nests(n_tokens, chunk):
+    """Overload degradation introduces no new compiled prefill shape: every
+    size a degraded plan uses is already reachable under the normal chunk."""
+    from repro.serving import chunk_plan, degraded_chunk
+
+    normal_shapes = {chunk} | {1 << i for i in range((chunk).bit_length())
+                               if (1 << i) < chunk} | {1}
+    degraded_shapes = set(chunk_plan(n_tokens, degraded_chunk(chunk)))
+    assert degraded_shapes <= normal_shapes
+
+
+class _Req:
+    """Minimal Request stand-in: just the timing fields LatencyStats reads."""
+
+    def __init__(self, submit_t=None, prefill_start_t=None, first_token_t=None,
+                 finish_t=None, n_out=0):
+        self.submit_t = submit_t
+        self.prefill_start_t = prefill_start_t
+        self.first_token_t = first_token_t
+        self.finish_t = finish_t
+        self.output = [0] * n_out
+
+
+def test_latency_stats_empty_and_untimed():
+    """No samples (or only never-submitted requests) -> every percentile
+    block is None, never a numpy empty-slice crash."""
+    from repro.serving import LatencyStats
+
+    stats = LatencyStats()
+    assert stats.summary() == {"queue_wait": None, "ttft": None, "tpot": None}
+    stats.record(_Req())  # submit_t None: ignored entirely
+    assert stats.summary() == {"queue_wait": None, "ttft": None, "tpot": None}
+
+
+@given(st.floats(0.0, 10.0), st.floats(0.001, 5.0), st.floats(0.001, 5.0),
+       st.integers(2, 50))
+@settings(max_examples=40, deadline=None)
+def test_latency_stats_single_sample(t0, wait, gen, n_out):
+    """One finished request: p50 == p95 == p99 == the one sample, and TPOT
+    is (finish - first_token) / (n_out - 1)."""
+    from repro.serving import LatencyStats
+
+    stats = LatencyStats()
+    first = t0 + wait
+    finish = first + gen
+    stats.record(_Req(submit_t=t0, prefill_start_t=t0, first_token_t=first,
+                      finish_t=finish, n_out=n_out))
+    s = stats.summary()
+    for block, want in (("queue_wait", 0.0), ("ttft", wait),
+                        ("tpot", gen / (n_out - 1))):
+        p = s[block]
+        assert p["n"] == 1
+        assert abs(p["p50"] - want) < 1e-9 + 1e-6 * abs(want)
+        assert p["p50"] == p["p95"] == p["p99"]
+
+
+def test_latency_stats_single_token_has_no_tpot():
+    """A 1-token request defines TTFT but not TPOT (no inter-token gap)."""
+    from repro.serving import LatencyStats
+
+    stats = LatencyStats()
+    stats.record(_Req(submit_t=0.0, prefill_start_t=0.1, first_token_t=0.2,
+                      finish_t=0.2, n_out=1))
+    s = stats.summary()
+    assert s["ttft"]["n"] == 1 and s["tpot"] is None

@@ -1,0 +1,377 @@
+"""Fault-tolerance: the chaos containment matrix, deadlines/shedding,
+quarantine-and-retry, watchdog/overload degradation, IO flake retry.
+
+The central contract (the chaos matrix): for every injected fault kind,
+exactly the afflicted request fails (or retries), every OTHER concurrent
+request finishes bit-identical to a fault-free run, and the engine keeps
+serving.  Injection is seeded/armed (repro.serving.faults), never
+wall-clock-random, so each case replays deterministically.
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serving import (
+    AdmissionConfig,
+    FaultInjector,
+    FlakyIO,
+    HealthConfig,
+    Request,
+    SchedulerConfig,
+    ServingEngine,
+    StagedEngine,
+    corrupt_payload,
+)
+from repro.serving.health import (
+    POISON_NONFINITE,
+    POISON_SATURATED,
+    OverloadController,
+    describe_poison,
+    poison_flags,
+)
+from repro.serving.scheduler import (
+    admission_decision,
+    degraded_chunk,
+    estimate_ttft_ms,
+)
+from repro.training import checkpoint as ck
+
+KEY = jax.random.PRNGKey(0)
+
+PROMPTS = ([5, 6, 7], [11, 3], [2, 9, 4, 1])
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = configs.get_smoke("qwen3-8b")
+    api = build_model(cfg)
+    return api, api.init(KEY)
+
+
+def _run(api, params, cls, *, faults=None, max_retries=0, health=None,
+         admission=None, n_slots=4, max_new=5, prompts=PROMPTS):
+    kw = {}
+    if health is not None:
+        kw["health"] = health
+    if admission is not None:
+        kw["admission"] = admission
+    if cls is StagedEngine:
+        kw["sched"] = SchedulerConfig(prefill_chunk=2)
+    eng = cls(api, params, n_slots=n_slots, max_len=32, faults=faults, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=max_new,
+                           max_retries=max_retries))
+    done = eng.run(max_ticks=4000)
+    return eng, {r.uid: r for r in done}
+
+
+# ---------------------------------------------------------------------------
+# guardrail unit: the fused poison reduction
+# ---------------------------------------------------------------------------
+def test_poison_flags_bits():
+    import jax.numpy as jnp
+
+    logits = jnp.asarray([
+        [1.0, -2.0, 3.0],          # healthy
+        [1.0, jnp.nan, 0.0],       # NaN row
+        [jnp.inf, 0.0, 0.0],       # Inf row
+        [2.0 ** 30, 0.0, 0.0],     # finite but saturated
+        [jnp.nan, 2.0 ** 30, 0.0],  # both
+    ])
+    flags = np.asarray(poison_flags(logits, sat_limit=2.0 ** 24))
+    assert flags.tolist() == [
+        0, POISON_NONFINITE, POISON_NONFINITE, POISON_SATURATED,
+        POISON_NONFINITE | POISON_SATURATED,
+    ]
+    assert "non-finite" in describe_poison(POISON_NONFINITE)
+    assert "saturated" in describe_poison(POISON_SATURATED)
+
+
+def test_guardrails_do_not_change_tokens(smoke):
+    """Greedy outputs with guardrails on == guardrails off, bit for bit:
+    the check is observation-only on healthy traffic."""
+    api, params = smoke
+    _, on = _run(api, params, ServingEngine)
+    _, off = _run(api, params, ServingEngine,
+                  health=HealthConfig(guardrails=False))
+    assert {u: r.output for u, r in on.items()} == \
+        {u: r.output for u, r in off.items()}
+
+
+# ---------------------------------------------------------------------------
+# THE chaos matrix: one fault -> one victim, everyone else bit-identical
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine_cls", [ServingEngine, StagedEngine])
+@pytest.mark.parametrize(
+    "kind", ["nan_logits", "inf_logits", "sat_logits", "kv_corrupt"]
+)
+def test_chaos_matrix_containment(smoke, engine_cls, kind):
+    """For each fault kind: exactly the afflicted request fails (retry
+    budget 0), every other request finishes bit-identical to the fault-free
+    baseline, and the engine serves to completion."""
+    api, params = smoke
+    _, base = _run(api, params, engine_cls)
+    assert all(r.status == "finished" for r in base.values())
+
+    inj = FaultInjector()
+    kw = {"sched": SchedulerConfig(prefill_chunk=2)} \
+        if engine_cls is StagedEngine else {}
+    eng = engine_cls(api, params, n_slots=4, max_len=32, faults=inj, **kw)
+    for i, p in enumerate(PROMPTS):
+        eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=5))
+    done = []
+    # a couple of healthy ticks first, so slot 0 has live KV rows for
+    # kv_corrupt to poison (a corrupt row behind position 0 is fully
+    # masked and proves nothing)
+    done.extend(eng.step())
+    done.extend(eng.step())
+    inj.arm(kind, slot=0)
+    done.extend(eng.run(max_ticks=4000))
+    got = {r.uid: r for r in done}
+
+    assert len(inj.log) == 1
+    victim_uid = inj.log[0].uid
+    assert victim_uid is not None  # the armed slot held a live request
+    assert len(got) == len(base)
+    for uid, r in got.items():
+        if uid == victim_uid:
+            assert r.status == "failed" and not r.done
+            assert r.reason  # names the poison kind
+        else:
+            assert r.status == "finished"
+            assert r.output == base[uid].output  # bit-identical
+    ev = eng.stats()["health"]["events"]
+    assert ev["quarantined"] == 1 and ev["failed"] == 1
+    assert ev["faults_injected"] == 1
+
+
+@pytest.mark.parametrize("engine_cls", [ServingEngine, StagedEngine])
+def test_quarantine_retry_recovers_bit_identical(smoke, engine_cls):
+    """With retry budget, the victim is re-queued (backoff), restarted from
+    its prompt, and its SECOND run matches the fault-free output exactly --
+    no poisoned partial output survives."""
+    api, params = smoke
+    _, base = _run(api, params, engine_cls)
+
+    inj = FaultInjector().arm("nan_logits", slot=0)
+    eng, got = _run(api, params, engine_cls, faults=inj, max_retries=1)
+
+    assert all(r.status == "finished" for r in got.values())
+    assert {u: r.output for u, r in got.items()} == \
+        {u: r.output for u, r in base.items()}
+    ev = eng.stats()["health"]["events"]
+    assert ev["quarantined"] == 1 and ev["retried"] == 1
+    assert ev["failed"] == 0
+    victim = got[inj.log[0].uid]
+    assert victim.retries == 1
+
+
+def test_stall_tick_flags_watchdog_not_tokens(smoke):
+    """A stalled tick is detected (slow/hung counters) but never corrupts:
+    all outputs stay bit-identical to the baseline."""
+    api, params = smoke
+    _, base = _run(api, params, ServingEngine)
+    inj = FaultInjector(stall_s=0.12).arm("stall_tick")
+    eng, got = _run(api, params, ServingEngine, faults=inj,
+                    health=HealthConfig(tick_slow_s=0.1))
+    assert {u: r.output for u, r in got.items()} == \
+        {u: r.output for u, r in base.items()}
+    h = eng.stats()["health"]
+    assert h["slow_ticks"] + h["hung_ticks"] >= 1
+    assert h["tick_ms_worst"] >= 100.0
+
+
+def test_seeded_rate_injection_replays(smoke):
+    """Rate-mode chaos is a pure function of (seed, dispatch ordinal): two
+    identical runs inject the same faults and serve the same tokens."""
+    api, params = smoke
+
+    def once():
+        inj = FaultInjector(rate=0.3, kinds=("nan_logits",), seed=7)
+        # zero backoff so re-admission order is pure FIFO, independent of
+        # wall clock -- determinism must not hinge on tick timing
+        eng, got = _run(api, params, ServingEngine, faults=inj, max_retries=2,
+                        admission=AdmissionConfig(retry_backoff_ms=0.0))
+        return ([(e.kind, e.slot, e.tick) for e in inj.log],
+                {u: (r.status, tuple(r.output)) for u, r in got.items()})
+
+    assert once() == once()
+
+
+# ---------------------------------------------------------------------------
+# deadlines, shedding, rejection, cancel
+# ---------------------------------------------------------------------------
+def test_admission_sheds_on_queue_depth(smoke):
+    api, params = smoke
+    eng = ServingEngine(api, params, n_slots=1, max_len=32,
+                        admission=AdmissionConfig(max_queue=2))
+    rs = [eng.submit(Request(uid=i, prompt=[3, 4], max_new_tokens=2))
+          for i in range(4)]
+    assert [r.status for r in rs] == ["queued", "queued", "shed", "shed"]
+    assert "max_queue" in rs[2].reason
+    assert eng.stats()["health"]["events"]["shed"] == 2
+    done = eng.run()
+    assert sorted(r.uid for r in done) == [0, 1]  # shed never entered
+
+
+def test_deadline_expires_everywhere(smoke):
+    """A request past its deadline is expired whether queued or in flight;
+    live requests keep their slots and finish."""
+    api, params = smoke
+    eng = ServingEngine(api, params, n_slots=1, max_len=32)
+    doomed = eng.submit(Request(uid=0, prompt=[5, 6], max_new_tokens=4,
+                                deadline_ms=0.0))
+    alive = eng.submit(Request(uid=1, prompt=[5, 6], max_new_tokens=4))
+    done = {r.uid: r for r in eng.run()}
+    assert done[0] is doomed and doomed.status == "expired"
+    assert not doomed.done and "deadline" in doomed.reason
+    assert done[1] is alive and alive.status == "finished"
+
+
+def test_cancel_queued_and_inflight(smoke):
+    api, params = smoke
+    eng = ServingEngine(api, params, n_slots=1, max_len=32)
+    a = eng.submit(Request(uid=0, prompt=[5, 6], max_new_tokens=8))
+    b = eng.submit(Request(uid=1, prompt=[7, 8], max_new_tokens=8))
+    eng.step()  # admits a into the slot
+    assert eng.cancel(0) and a.status == "cancelled"  # in flight
+    assert eng.cancel(1) and b.status == "cancelled"  # still queued
+    assert not eng.cancel(99)
+    assert eng.run() == []  # nothing left
+    assert eng.stats()["health"]["events"]["cancelled"] == 2
+
+
+def test_estimate_and_admission_units():
+    assert estimate_ttft_ms(queued_tokens=10, n_queued=2, tick_ms=0.0) == 0.0
+    # lockstep: one tick per token + one first-token tick per request
+    assert estimate_ttft_ms(queued_tokens=10, n_queued=2, tick_ms=2.0) == 24.0
+    # staged: ceil(10/4)=3 chunk dispatches
+    assert estimate_ttft_ms(queued_tokens=10, n_queued=2, tick_ms=2.0,
+                            chunk=4) == 10.0
+    adm = AdmissionConfig(max_queue=2, ttft_slo_ms=50.0)
+    assert admission_decision(adm, queue_depth=1, est_ttft_ms=10.0) is None
+    assert "max_queue" in admission_decision(adm, queue_depth=2,
+                                             est_ttft_ms=0.0)
+    assert "TTFT" in admission_decision(adm, queue_depth=0, est_ttft_ms=51.0)
+    # the request's own deadline tightens the budget
+    assert "TTFT" in admission_decision(
+        AdmissionConfig(), queue_depth=0, est_ttft_ms=30.0, deadline_ms=20.0)
+
+
+# ---------------------------------------------------------------------------
+# overload degradation
+# ---------------------------------------------------------------------------
+def test_degraded_chunk_is_compiled_shape():
+    for chunk in (1, 2, 3, 8, 13, 32, 100):
+        d = degraded_chunk(chunk)
+        assert d & (d - 1) == 0  # power of two...
+        assert d <= max(1, chunk // 2)  # ...at most half the budget
+        assert 2 * d > max(1, chunk // 2)  # the LARGEST such
+        # every degraded size < chunk is, being a power of two, already in
+        # the compiled remainder-shape set {2^i < chunk}: degradation
+        # never triggers a fresh prefill compile
+        assert d < chunk or chunk == 1
+
+
+def test_overload_controller_hysteresis():
+    ctl = OverloadController(HealthConfig(overload_queue=4))
+    assert ctl.update(queue_depth=4) is False  # at threshold: no breach
+    assert ctl.update(queue_depth=5) is True   # breach -> enter
+    assert ctl.update(queue_depth=4) is True   # 4 > 0.8*4: still in
+    assert ctl.update(queue_depth=3) is False  # under 80%: recover
+    assert ctl.entered == 1
+
+
+def test_staged_overload_degrades_and_recovers(smoke):
+    """Queue-depth overload shrinks the prefill chunk to a pre-compiled
+    power of two and forces decode-priority; everything still finishes."""
+    api, params = smoke
+    eng = StagedEngine(api, params, n_slots=2, max_len=32,
+                       sched=SchedulerConfig(prefill_chunk=8,
+                                             policy="prefill"),
+                       health=HealthConfig(overload_queue=2))
+    for i in range(8):
+        eng.submit(Request(uid=i, prompt=[1 + i, 2, 3], max_new_tokens=2))
+    eng.step()  # queue depth 7 > 2: overload latches before more dispatch
+    assert eng.overload
+    assert eng._effective_chunk() == degraded_chunk(8)
+    done = eng.run(max_ticks=4000)
+    assert len(done) == 8 and all(r.status == "finished" for r in done)
+    h = eng.stats()["health"]
+    assert h["overload_entered"] >= 1
+    assert not eng.overload  # drained queue: recovered
+
+
+# ---------------------------------------------------------------------------
+# artifact-load faults: transient flake retries, corruption fails closed
+# ---------------------------------------------------------------------------
+def test_io_flake_retried_transparently(tmp_path, monkeypatch):
+    import jax.numpy as jnp
+
+    tree = {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones((3,))}
+    ck.save(str(tmp_path), 1, tree)
+    monkeypatch.setattr(ck, "IO_BACKOFF_S", 0.001)  # fast test
+    flake = FlakyIO(n_failures=2)
+    with ck.io_fault_hook(flake):
+        step, got = ck.restore_latest(str(tmp_path),
+                                      jax.eval_shape(lambda: tree))
+    assert step == 1 and flake.raised == 2  # the flakes actually fired
+    assert np.array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+
+
+def test_io_flake_exhausts_budget_and_raises(tmp_path, monkeypatch):
+    import jax.numpy as jnp
+
+    tree = {"w": jnp.arange(4.0)}
+    ck.save(str(tmp_path), 1, tree)
+    monkeypatch.setattr(ck, "IO_BACKOFF_S", 0.001)
+    # more consecutive failures than the retry budget: fail loud, not hang
+    flake = FlakyIO(n_failures=10_000)
+    with ck.io_fault_hook(flake):
+        assert ck.latest_intact_step(str(tmp_path)) is None
+
+
+def test_corrupt_shard_fails_closed_never_retried(tmp_path):
+    """Integrity corruption is NOT transient: no retry can fix it, the step
+    must be rejected (fall back to an older intact step)."""
+    import jax.numpy as jnp
+
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck.save(str(tmp_path), 1, tree)
+    ck.save(str(tmp_path), 2, tree)
+    victim = corrupt_payload(str(tmp_path / "step_000000002"), seed=3)
+    assert os.path.exists(victim)
+    assert ck.latest_intact_step(str(tmp_path)) == 1
+    step, got = ck.restore_latest(str(tmp_path), jax.eval_shape(lambda: tree))
+    assert step == 1
+    assert np.array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+
+
+# ---------------------------------------------------------------------------
+# injector plumbing
+# ---------------------------------------------------------------------------
+def test_fault_injector_spec_roundtrip():
+    inj = FaultInjector.from_spec(
+        "rate=0.25,kinds=nan_logits|kv_corrupt,seed=9,stall=0.5")
+    assert inj.rate == 0.25 and inj.kinds == ("nan_logits", "kv_corrupt")
+    assert inj.stall_s == 0.5
+    with pytest.raises(ValueError, match="unknown --chaos key"):
+        FaultInjector.from_spec("rat=0.1")
+    with pytest.raises(ValueError, match="unknown tick fault kind"):
+        FaultInjector(kinds=("bitrot",))
+    with pytest.raises(ValueError, match="rate"):
+        FaultInjector(rate=1.5)
+
+
+def test_fault_injector_rate_targets_active_slots_only():
+    inj = FaultInjector(rate=1.0, kinds=("nan_logits",), seed=0)
+    assert inj.draw(0, []) is None  # nothing active: nothing to poison
+    ev = inj.draw(1, [2])
+    assert ev is not None and ev.slot == 2 and ev.tick == 1
+    assert np.isnan(ev.payload)
+    assert inj.summary() == {"injected": 1, "by_kind": {"nan_logits": 1}}

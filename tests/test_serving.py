@@ -106,17 +106,26 @@ def test_eos_stops_generation():
 
 
 def test_submit_rejects_overlong_prompt():
-    """A prompt that cannot fit max_len fails loudly at submit time instead
-    of silently finishing done=True with truncated/empty output."""
+    """A prompt that cannot fit max_len comes back ``rejected`` with a
+    reason (one bad client must not take the serve loop down), never queued
+    to silently finish done=True with truncated/empty output.
+    ``strict=True`` restores the loud raise-at-submit behavior."""
     cfg = configs.get_smoke("qwen3-8b")
     api = build_model(cfg)
     params = api.init(KEY)
     eng = ServingEngine(api, params, n_slots=1, max_len=8)
+    for uid, prompt in ((0, list(range(8))), (1, list(range(20)))):
+        r = eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=2))
+        assert r.status == "rejected" and "max_len" in r.reason
+        assert not r.done and len(eng.queue) == 0
+    r = eng.submit(Request(uid=2, prompt=[], max_new_tokens=2))
+    assert r.status == "rejected" and "empty" in r.reason
+    # strict mode: the original raise-on-malformed contract
     with pytest.raises(ValueError, match="max_len"):
-        eng.submit(Request(uid=0, prompt=list(range(8)), max_new_tokens=2))
-    with pytest.raises(ValueError, match="max_len"):
-        eng.submit(Request(uid=1, prompt=list(range(20)), max_new_tokens=2))
-    eng.submit(Request(uid=2, prompt=list(range(7)), max_new_tokens=1))  # fits
+        eng.submit(Request(uid=3, prompt=list(range(8)), max_new_tokens=2),
+                   strict=True)
+    assert eng.stats()["health"]["events"]["rejected"] == 3
+    eng.submit(Request(uid=4, prompt=list(range(7)), max_new_tokens=1))  # fits
     assert len(eng.run()) == 1
 
 
