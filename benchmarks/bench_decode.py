@@ -109,6 +109,46 @@ def count_hbm_passes(fn, *args, min_elems: int) -> int:
     return n
 
 
+def count_float_materializations(fn, *args, min_elems: int) -> int:
+    """Float tensors (incl. bf16) >= ``min_elems`` materialized ANYWHERE in
+    the jaxpr -- recursing into inner jaxprs (scan/cond/pjit and, in
+    interpret mode, pallas_call bodies), unlike ``count_hbm_passes`` which
+    sees only top-level kernel-boundary buffers.  This is the
+    cache-materialization detector: set ``min_elems`` to one full unpacked
+    cache leaf and the oracle read path counts its bf16/f32 casts while a
+    flash read path, whose in-VMEM tiles are block-sized, counts zero.
+    Reshapes/broadcasts are excluded (metadata-only)."""
+    closed = jax.make_jaxpr(fn)(*args)
+
+    def subs(v):
+        if hasattr(v, "eqns"):  # raw Jaxpr
+            yield v
+        elif hasattr(v, "jaxpr"):  # ClosedJaxpr
+            yield v.jaxpr
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                yield from subs(x)
+
+    def walk(jx):
+        n = 0
+        for eqn in jx.eqns:
+            if eqn.primitive.name not in ("reshape", "broadcast_in_dim"):
+                for v in eqn.outvars:
+                    dt = getattr(v.aval, "dtype", None)
+                    sh = getattr(v.aval, "shape", None)
+                    if (dt is not None and sh is not None
+                            and jnp.issubdtype(dt, jnp.floating)
+                            and int(np.prod(sh or (1,))) >= min_elems):
+                        n += 1
+                        break
+            for pv in eqn.params.values():
+                for sub in subs(pv):
+                    n += walk(sub)
+        return n
+
+    return walk(closed.jaxpr)
+
+
 def _bench_site(bits: int, fmt: str = None) -> Dict[str, int]:
     m, k, n, g = 8, 256, 256, 64
     x = jnp.ones((m, k), jnp.float32)
@@ -266,6 +306,125 @@ def _bench_kv_cache(reps: int, mesh=None, mesh_tag: str = "1") -> List[Dict]:
     return rows
 
 
+def _prefill_read_materializations(fmt: str) -> Dict[str, int]:
+    """Full-cache float materializations on the S>1 cache-attend READ path.
+
+    Isolates the two read formulations over one identical packed cache
+    (write path excluded -- kv_mx's running-max rescale materializes a
+    full buffer on WRITE in both paths, which is not the claim here):
+
+      * oracle -- ``attend_view`` + ``_attend_dense``: the integer/bf16
+        codes cast to a full (B,T,Kh,hd) float tensor per leaf,
+      * flash  -- ``flash_attend``: packed leaves stream through
+        block-sized VMEM tiles; nothing cache-sized is ever float.
+
+    The threshold is exactly one unpacked cache leaf, so flash == 0 IS the
+    one-HBM-pass / no-bf16-materialization acceptance claim."""
+    from repro.kernels.flash_prefill import flash_attend
+    from repro.models import attention as attn, kv_cache
+
+    b, t, kh, g, hd, s, start = 1, 256, 2, 2, 16, 8, 192
+
+    class _Cfg:
+        kv_bits = 16
+        n_kv_heads = kh
+        kv_fmt = fmt
+
+        @staticmethod
+        def hd():
+            return hd
+
+    rng = np.random.default_rng(0)
+    cache = kv_cache.init_cache(_Cfg, (b,), t)
+    hist = jnp.asarray(rng.normal(size=(b, start + s, kh, hd)), jnp.float32)
+    cache, valid = kv_cache.write(fmt, cache, hist, hist, jnp.int32(0))
+    q = jnp.asarray(rng.normal(size=(b, s, kh, g, hd)), jnp.float32)
+    q_pos = start + jnp.arange(s)
+
+    def oracle(c, qq):
+        ck, cv, ks, vs = kv_cache.attend_view(fmt, c)
+        bias = attn._mask_bias(
+            jnp.broadcast_to(q_pos, (b, s)), jnp.arange(t), True, None, valid
+        )
+        return attn._attend_dense(
+            qq, ck, cv, bias[:, None, None], kscale=ks, vscale=vs
+        )
+
+    def flash(c, qq):
+        return flash_attend(
+            qq, c["k"], c["v"], c.get("ke"), c.get("ve"),
+            jnp.full((b, 1), start, jnp.int32),
+            valid.astype(jnp.int32).reshape(b, 1),
+            jnp.full((1, 1), 2**30, jnp.int32), fmt=fmt, interpret=True,
+        )
+
+    min_elems = t * kh * hd  # one full unpacked cache leaf
+    return {
+        "oracle": count_float_materializations(
+            oracle, cache, q, min_elems=min_elems
+        ),
+        "flash": count_float_materializations(
+            flash, cache, q, min_elems=min_elems
+        ),
+    }
+
+
+def _bench_kv_prefill(reps: int, mesh_tag: str = "1") -> List[Dict]:
+    """Chunked-prefill-over-packed-cache cells at KV_BENCH_LEN.
+
+    One 64-token chunk dispatched mid-prompt (start = T/2) against a B=1
+    KV_BENCH_LEN cache, per kv format x {oracle, flash} -- the TTFT hot
+    path.  Columns mirror the decode kv cells: chunk tokens/sec plus the
+    cache bytes the dispatch streamed against the HBM roofline.  The flash
+    cells run the Pallas kernel (interpret mode off-TPU); the oracle cells
+    are the XLA fold-the-scales path.  Cells are keyed
+    (format, prefill_{oracle,flash}, mesh) in the --check gate."""
+    from repro.models import kv_cache
+    from repro.roofline.analysis import HBM_BW
+
+    chunk, reps = 64, max(3, reps // 3)
+    rows: List[Dict] = []
+    for fmt in KV_FORMATS:
+        for flash in (False, True):
+            cfg = tiny_lm(QuantConfig(w_bits=8, group_size=16, mode="ptq"))
+            cfg = dataclasses.replace(
+                cfg, kv_fmt=fmt, flash_prefill=flash
+            )
+            api = build_model(cfg)
+            params = api.init(jax.random.PRNGKey(0))
+            qparams, plan, qapi = quantize_and_plan(api, params)
+            cache = qapi.init_cache(1, KV_BENCH_LEN)
+            cbytes = kv_cache.cache_bytes(cache)
+            toks = jnp.zeros((1, chunk), jnp.int32)
+            step = jax.jit(
+                lambda p, tk, st, c, _api=qapi: _api.prefill_chunk(
+                    p, tk, st, c
+                ),
+                donate_argnums=(3,),
+            )
+            state = {"c": cache}
+
+            def tick():
+                lg, state["c"] = step(
+                    qparams, toks, jnp.int32(KV_BENCH_LEN // 2), state["c"]
+                )
+                return lg
+
+            prefill_s = _timed_steps(tick, reps)
+            rows.append({
+                "format": fmt,
+                "mode": "prefill_flash" if flash else "prefill_oracle",
+                "mesh": mesh_tag, "devices": 1,
+                "seq_len": KV_BENCH_LEN, "chunk": chunk,
+                "prefill_tok_per_s": chunk / prefill_s,
+                "prefill_chunk_us": prefill_s * 1e6,
+                "kv_cache_bytes": cbytes,
+                "achieved_gb_s_per_device": cbytes / prefill_s / 1e9,
+                "roofline_gb_s": HBM_BW / 1e9,
+            })
+    return rows
+
+
 def _ragged_recompiles() -> int:
     """Fused-path recompiles across ragged batch sizes after bucket warmup."""
     from repro.kernels.ternary_matmul import ternary_matmul_fused
@@ -320,6 +479,31 @@ def run(csv=print, *, slots: int = 4, seq: int = 16, reps: int = 15,
             f"achieved_gb_s_per_dev={r['achieved_gb_s_per_device']:.3f};"
             f"roofline_gb_s={r['roofline_gb_s']:.0f}"
         )
+    for r in _bench_kv_prefill(reps, mesh_tag=mesh_tag):
+        rows.append(r)
+        csv(
+            f"decode/{r['mode']}_{r['format']}_T{r['seq_len']},"
+            f"{r['prefill_chunk_us']:.1f},"
+            f"prefill_tok_s={r['prefill_tok_per_s']:.1f};"
+            f"chunk={r['chunk']};"
+            f"cache_mb={r['kv_cache_bytes'] / 1e6:.2f};"
+            f"achieved_gb_s_per_dev={r['achieved_gb_s_per_device']:.3f};"
+            f"roofline_gb_s={r['roofline_gb_s']:.0f}"
+        )
+    for fmt in KV_FORMATS:
+        m = _prefill_read_materializations(fmt)
+        csv(
+            f"decode/prefill_read_materializations_{fmt},{m['flash']:.0f},"
+            f"oracle={m['oracle']};"
+            f"flash_single_pass={str(m['flash'] == 0).lower()}"
+        )
+        rows.append({
+            "format": fmt, "mode": "prefill_read",
+            "mesh": mesh_tag,
+            "prefill_read_materializations_flash": m["flash"],
+            "prefill_read_materializations_oracle": m["oracle"],
+            "flash_single_pass": m["flash"] == 0,
+        })
     rc = _ragged_recompiles()
     csv(f"decode/ragged_recompiles_after_warmup,{rc:.0f},want=0")
     rows.append({"ragged_recompiles_after_warmup": rc, "mesh": mesh_tag})

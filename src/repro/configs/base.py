@@ -81,6 +81,9 @@ class ArchConfig:
     # kv_bits back-compat: 8 -> 'kv_int8', else 'kv_bf16'
     kv_fmt: Optional[str] = None
     flash_decode: bool = False  # fused Pallas flash-decode kernel for S==1
+    # fused Pallas flash kernel for S>1 cache-attends (chunked prefill) and
+    # the in-chunk self-attention tail; independent of flash_decode
+    flash_prefill: bool = False
     remat: bool = True
     norm_eps: float = 1e-6
     tie_embeddings: bool = False

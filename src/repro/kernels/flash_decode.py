@@ -1,135 +1,28 @@
-"""Pallas TPU kernel: flash-decode over a packed quantized KV cache.
+"""Flash-decode over a packed quantized KV cache: the S == 1 special case.
 
-One decode step attends S == 1 queries (all G heads of a KV group at once)
-against the whole cache.  Grid (B, Kh, T/bk) with the KV axis innermost
-("arbitrary"): each (batch, kv-head) revisits its output tile across KV
-tiles carrying running (m, l, acc) online-softmax statistics in VMEM
-scratch -- the (G, T) score row never exists, and the cache streams from
-HBM exactly once, *packed*:
+The kernel itself lives in ``kernels/flash_prefill.py`` as the unified
+``flash_attend`` (grid (B, Kh, S/bq, T/bk), online softmax, in-VMEM
+dequant of the packed kv_bf16 / kv_int8 / kv_mx leaves); a decode step is
+a one-row chunk whose start IS its query position.  This module keeps the
+original decode-shaped entry point -- (B, Kh, G, hd) queries, no S axis --
+so PR-7 call sites and the S == 1 parity matrix
+(``tests/test_flash_decode.py``) are untouched.
 
-  * kv_bf16  tiles load as bf16 and cast,
-  * kv_int8  tiles load int8 mantissas + a (bk, 1) exponent column and
-    dequantize in-VMEM via exact power-of-two scales (``dfp.exp2i``),
-  * kv_mx    tiles load nibble-packed int4 mantissas (bk, hd/2) + one
-    exponent per 32-token block (bk/32, 1), unpack and shift in-VMEM.
-
-So attention joins the dense sites in the 1-HBM-pass club: bytes/tick is
-the packed cache size (2x smaller for kv_int8, ~4x for kv_mx).
-
-Masking is positional per batch row: k_pos < valid[b] (cache fill level),
-k_pos <= q_pos[b] (causal), q_pos[b] - k_pos < window (sliding-window
-layers; pass 2**30 for global).  Fully-masked tiles still run (the grid is
-static) but contribute zero through the -inf bias.
-
-The XLA fold-the-scales path in ``models/attention.py::_attend_dense``
-stays as the oracle; ``tests/test_flash_decode.py`` holds the parity
-matrix across formats x write modes x attention flavours.
+Masking per batch row: k_pos < valid[b] (cache fill level), k_pos <=
+q_pos[b] (causal), q_pos[b] - k_pos < window (sliding-window layers; pass
+2**30 for global).  The XLA fold-the-scales path in
+``models/attention.py::_attend_dense`` stays as the oracle.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.core import dfp
-from repro.models.kv_cache import MX_KV_BLOCK
-
-try:  # class name moved across JAX versions (see kernels/_common.py)
-    from jax.experimental.pallas import tpu as pltpu
-
-    _CP_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
-    _COMPILER_PARAMS = _CP_CLS(
-        dimension_semantics=("parallel", "parallel", "arbitrary")
-    )
-except Exception:  # pragma: no cover
-    _COMPILER_PARAMS = None
-
-NEG_INF = -1e30
-
-
-def _dequant_tile(ref, eref, fmt: str, bk: int, hd: int) -> jax.Array:
-    """One (bk, hd) f32 KV tile from packed VMEM blocks."""
-    tile = ref[0, :, 0, :]
-    if fmt == "kv_bf16":
-        return tile.astype(jnp.float32)
-    if fmt == "kv_int8":
-        e = eref[0, :, 0, :]  # (bk, 1) int8
-        return tile.astype(jnp.float32) * dfp.exp2i(e)
-    # kv_mx: unpack nibble pairs along head_dim, one exponent per 32 tokens
-    b32 = tile.astype(jnp.int32)  # (bk, hd//2) uint8 widened
-    lo, hi = b32 & 0xF, (b32 >> 4) & 0xF
-    lo = jnp.where(lo >= 8, lo - 16, lo)
-    hi = jnp.where(hi >= 8, hi - 16, hi)
-    codes = jnp.stack([lo, hi], axis=-1).reshape(bk, hd).astype(jnp.float32)
-    e = eref[0, :, 0, :]  # (bk // 32, 1) int8
-    nb = bk // MX_KV_BLOCK
-    e_tok = jnp.broadcast_to(
-        e.reshape(nb, 1, 1), (nb, MX_KV_BLOCK, 1)
-    ).reshape(bk, 1)
-    return codes * dfp.exp2i(e_tok)
-
-
-def _kernel(*refs, fmt, bk, hd, scale):
-    if fmt == "kv_bf16":
-        (q_ref, k_ref, v_ref, qp_ref, vl_ref, win_ref,
-         o_ref, m_ref, l_ref, acc_ref) = refs
-        ke_ref = ve_ref = None
-    else:
-        (q_ref, k_ref, v_ref, ke_ref, ve_ref, qp_ref, vl_ref, win_ref,
-         o_ref, m_ref, l_ref, acc_ref) = refs
-    kv_idx = pl.program_id(2)
-
-    @pl.when(kv_idx == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, hd)
-    kf = _dequant_tile(k_ref, ke_ref, fmt, bk, hd)  # (bk, hd)
-    s = jax.lax.dot_general(
-        q, kf, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (G, bk)
-
-    k_pos = kv_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
-    q_pos, valid, win = qp_ref[0, 0], vl_ref[0, 0], win_ref[0, 0]
-    ok = (k_pos < valid) & (k_pos <= q_pos) & (q_pos - k_pos < win)
-    s = jnp.where(ok, s, NEG_INF)  # (1, bk) mask broadcasts over G
-
-    m_prev, l_prev = m_ref[...], l_ref[...]  # (G, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
-    vf = _dequant_tile(v_ref, ve_ref, fmt, bk, hd)  # (bk, hd)
-    pv = jax.lax.dot_general(
-        p, vf, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    acc_ref[...] = acc_ref[...] * corr + pv
-    m_ref[...] = m_new
-    l_ref[...] = l_new
-
-    @pl.when(kv_idx == pl.num_programs(2) - 1)
-    def _finalize():
-        o_ref[0, 0] = (
-            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
-        ).astype(o_ref.dtype)
-
-
-def pick_kv_block(t: int, fmt: str, want: int = 128) -> int:
-    """Largest divisor of T that is <= want; a 32-multiple for kv_mx."""
-    if fmt == "kv_mx":
-        nb = t // MX_KV_BLOCK
-        b = min(nb, max(1, want // MX_KV_BLOCK))
-        while nb % b:
-            b -= 1
-        return b * MX_KV_BLOCK
-    b = min(t, want)
-    while t % b:
-        b -= 1
-    return b
+from repro.kernels.flash_prefill import (  # noqa: F401  (re-exports)
+    NEG_INF,
+    _dequant_tile,
+    flash_attend,
+    pick_kv_block,
+)
 
 
 def flash_decode(
@@ -147,45 +40,8 @@ def flash_decode(
     interpret: bool | None = None,
 ) -> jax.Array:
     """Returns (B, Kh, G, hd) f32 attention output."""
-    b, kh, g, hd = q.shape
-    t = k.shape[1]
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    bk = pick_kv_block(t, fmt, block_k)
-    scale = hd**-0.5
-
-    kv_spec = pl.BlockSpec(
-        (1, bk, 1, k.shape[-1]), lambda bi, hi, ji: (bi, ji, hi, 0)
+    out = flash_attend(
+        q[:, None], k, v, ke, ve, q_pos, valid, window,
+        fmt=fmt, block_k=block_k, interpret=interpret,
     )
-    in_specs = [
-        pl.BlockSpec((1, 1, g, hd), lambda bi, hi, ji: (bi, hi, 0, 0)),
-        kv_spec,
-        kv_spec,
-    ]
-    args = [q, k, v]
-    if fmt != "kv_bf16":
-        eb = bk if fmt == "kv_int8" else bk // MX_KV_BLOCK
-        e_spec = pl.BlockSpec((1, eb, 1, 1), lambda bi, hi, ji: (bi, ji, hi, 0))
-        in_specs += [e_spec, e_spec]
-        args += [ke, ve]
-    scalar_spec = pl.BlockSpec((1, 1), lambda bi, hi, ji: (bi, 0))
-    bcast_spec = pl.BlockSpec((1, 1), lambda bi, hi, ji: (0, 0))
-    in_specs += [scalar_spec, scalar_spec, bcast_spec]
-    args += [q_pos, valid, window]
-
-    kern = functools.partial(_kernel, fmt=fmt, bk=bk, hd=hd, scale=scale)
-    return pl.pallas_call(
-        kern,
-        grid=(b, kh, t // bk),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bi, hi, ji: (bi, hi, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), jnp.float32),
-        scratch_shapes=[
-            # running max / denom / accumulator survive the kv axis
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, hd), jnp.float32),
-        ],
-        compiler_params=None if interpret else _COMPILER_PARAMS,
-        interpret=interpret,
-    )(*args)
+    return out[:, 0]

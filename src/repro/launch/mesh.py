@@ -58,6 +58,30 @@ def parse_mesh_spec(spec: str) -> jax.sharding.Mesh:
     )
 
 
+def enable_compile_cache(path: str | None) -> str | None:
+    """Point jax's persistent compilation cache at ``path``.
+
+    Cold-start compile time is a serving SLO: a staged engine compiles the
+    decode tick plus O(log chunk) prefill shapes on boot, all of which are
+    byte-stable for a fixed artifact + mesh, so a warm disk cache turns the
+    second boot's compiles into reads.  Env hygiene mirrors the XLA_FLAGS
+    convention above: an operator-set ``JAX_COMPILATION_CACHE_DIR`` wins
+    when no explicit path is given, and the chosen directory is exported
+    back into the environment so worker subprocesses inherit it.  Returns
+    the directory in use, or None when caching stays off."""
+    import os
+
+    path = path or os.environ.get("JAX_COMPILATION_CACHE_DIR")
+    if not path:
+        return None
+    os.makedirs(path, exist_ok=True)
+    from jax.experimental.compilation_cache import compilation_cache as cc
+
+    cc.set_cache_dir(path)
+    os.environ["JAX_COMPILATION_CACHE_DIR"] = path
+    return path
+
+
 def preinit_mesh_flag(argv) -> None:
     """Force the host-platform device count for a ``--mesh`` run.
 

@@ -144,8 +144,20 @@ def main():
                          "overrides the config (and its kv_bits back-compat)")
     ap.add_argument("--flash-decode", action="store_true",
                     help="route single-token decode through the fused "
-                         "Pallas flash-decode kernel (reads the packed "
-                         "cache; interpreted off-TPU)")
+                         "Pallas flash kernel (reads the packed cache; "
+                         "interpreted off-TPU); says nothing about "
+                         "prefill -- see --flash-prefill")
+    ap.add_argument("--flash-prefill", action="store_true",
+                    help="route chunked-prefill cache attends (and the "
+                         "in-chunk tail) through the fused Pallas flash "
+                         "kernel -- one pass over the packed cache per "
+                         "chunk, which is what moves TTFT; independent "
+                         "of --flash-decode")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent jax compilation cache: boot-time "
+                         "decode/prefill compiles become disk reads on "
+                         "the second boot (JAX_COMPILATION_CACHE_DIR is "
+                         "honored when the flag is absent)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
@@ -200,27 +212,39 @@ def main():
     if bool(args.artifact) == bool(args.arch):
         ap.error("exactly one of --arch or --artifact is required")
 
+    from repro.launch.mesh import enable_compile_cache
+
+    cache_dir = enable_compile_cache(args.compile_cache)
+    if cache_dir:
+        print(f"compile cache: {cache_dir} (persistent; cold-start "
+              "compiles replay from disk)")
     mesh = parse_mesh_spec(args.mesh) if args.mesh else None
     if args.artifact:
         api, qparams, plan = boot_from_artifact(args.artifact, mesh=mesh)
     else:
         api, qparams, plan = boot_quantize(args, mesh=mesh)
-    if args.kv_fmt or args.flash_decode:
+    if args.kv_fmt or args.flash_decode or args.flash_prefill:
         # rebind the api closures to the overridden cache config; weights
         # and the compiled plan are untouched (the KV format is a pure
-        # serving-time choice)
+        # serving-time choice).  --flash-decode and --flash-prefill are
+        # INDEPENDENT: one gates S == 1 ticks, the other chunked-prefill
+        # cache attends -- neither implies the other.
         import dataclasses
 
         cfg2 = dataclasses.replace(
             api.cfg,
             kv_fmt=args.kv_fmt or api.cfg.kv_fmt,
             flash_decode=args.flash_decode or api.cfg.flash_decode,
+            flash_prefill=args.flash_prefill or api.cfg.flash_prefill,
         )
         api = build_model(cfg2, api.ctx)
-        from repro.models import kv_cache as kv_fmt_lib
+    from repro.models import kv_cache as kv_fmt_lib
 
-        print(f"kv cache: fmt={kv_fmt_lib.resolve_kv_fmt(cfg2)} "
-              f"flash_decode={cfg2.flash_decode}")
+    # the startup banner always states both flash knobs: "on for decode,
+    # off for prefill" is a valid -- and previously invisible -- state
+    print(f"kv cache: fmt={kv_fmt_lib.resolve_kv_fmt(api.cfg)} "
+          f"flash_decode={api.cfg.flash_decode} "
+          f"flash_prefill={api.cfg.flash_prefill}")
     cfg = api.cfg
 
     faults = FaultInjector.from_spec(args.chaos) if args.chaos else None

@@ -13,9 +13,15 @@ kv_bf16 / kv_int8 / kv_mx) quantized on write.  Two read paths exist:
   * the XLA fold-the-scales path (``_attend_dense``): per-token power-of-two
     scales fold into the score/probability tensors, so the dequantized
     cache never materializes.  This is the oracle and the portable default.
-  * the Pallas flash-decode kernel (``kernels/flash_decode.py``, enabled by
-    ``cfg.flash_decode`` for S == 1 steps): loads the *packed* leaves and
-    dequantizes tile-by-tile in VMEM -- one HBM pass over the packed bytes.
+  * the Pallas flash kernel (``kernels/flash_prefill.py::flash_attend``):
+    loads the *packed* leaves and dequantizes tile-by-tile in VMEM -- one
+    HBM pass over the packed bytes.  ``cfg.flash_decode`` routes S == 1
+    steps; ``cfg.flash_prefill`` routes S > 1 cache-attends (chunked
+    prefill) and the in-chunk self-attention tail.  Both are serving-time
+    knobs (the kernel has no VJP) and fall back to the oracle whenever a
+    multi-device activation mesh is installed -- a pallas_call cannot read
+    a kv-head- or sequence-sharded (KV_SEQ_SHARD) cache correctly, so the
+    bypass is structural, not best-effort.
 """
 from __future__ import annotations
 
@@ -157,29 +163,73 @@ def _attend_chunked(q, k, v, q_pos, causal, window, chunk: int):
     return acc / denom
 
 
-def _flash_decode_path(q, cache, fmt, q_pos, valid, window, cfg):
-    """Route one S == 1 step through the packed-cache Pallas kernel."""
-    from repro.kernels.flash_decode import flash_decode
+def _flash_routable() -> bool:
+    """The flash kernels assume every packed cache leaf is whole per device.
 
-    b = q.shape[0]
+    Under a multi-device activation mesh the cache is kv-head-sharded --
+    or sequence-sharded when ``KV_SEQ_SHARD`` kicks in (GQA head counts
+    that do not divide the TP width) -- and a pallas_call is not
+    partitionable over either axis, so routing falls back to the XLA
+    oracle, which shards correctly.  Single-device (or no) mesh: route."""
+    from repro.parallel import sharding as _sh
+
+    mesh = _sh._ACT_MESH[0]
+    return mesh is None or mesh.size == 1
+
+
+def _win_arg(window) -> jax.Array:
+    return jnp.asarray(
+        2**30 if window is None else window, jnp.int32
+    ).reshape(1, 1)
+
+
+def _flash_cache_path(q, cache, fmt, q_pos, valid, window, cfg):
+    """Route an S >= 1 cache-attend through the packed-cache Pallas kernel.
+
+    S == 1 is the flash-decode step; S > 1 is a prefill chunk, whose rows
+    the kernel assumes CONTIGUOUS from q_pos's first entry -- exactly what
+    ``transformer.prefill_chunk`` traces (start + arange(S))."""
+    from repro.kernels.flash_prefill import flash_attend
+
+    b, s = q.shape[0], q.shape[1]
     hd = cfg.hd()
     kh = cfg.n_kv_heads
     g = cfg.n_heads // kh
-    qf = q[:, 0].reshape(b, kh, g, hd).astype(jnp.float32)
-    if q_pos.ndim == 2:
-        qp = q_pos[:, -1]
-    else:  # (1,) traced position shared by every row
-        qp = jnp.broadcast_to(q_pos.reshape(-1)[-1], (b,))
-    win = jnp.asarray(
-        2**30 if window is None else window, jnp.int32
-    ).reshape(1, 1)
-    out = flash_decode(
+    qf = q.reshape(b, s, kh, g, hd).astype(jnp.float32)
+    if q_pos.ndim == 2:  # (B, S) per-row positions
+        qs = q_pos[:, 0]
+    else:  # (S,) traced positions shared by every row
+        qs = jnp.broadcast_to(q_pos.reshape(-1)[0], (b,))
+    out = flash_attend(
         qf, cache["k"], cache["v"], cache.get("ke"), cache.get("ve"),
-        qp.astype(jnp.int32).reshape(b, 1),
+        qs.astype(jnp.int32).reshape(b, 1),
         valid.astype(jnp.int32).reshape(b, 1),
-        win, fmt=fmt,
+        _win_arg(window), fmt=fmt,
     )
-    return out.reshape(b, 1, cfg.n_heads * hd)
+    return out.reshape(b, s, cfg.n_heads * hd)
+
+
+def _flash_self_path(q, k, v, window, cfg):
+    """In-chunk self-attention tail through the flash kernel.
+
+    The chunk's own just-projected bf16 K/V stand in for a packed cache
+    (fmt="kv_bf16"): positions are chunk-relative (causality and window
+    distance are offset-invariant within one chunk), fill level is the
+    whole chunk."""
+    from repro.kernels.flash_prefill import flash_attend
+
+    b, s = q.shape[0], q.shape[1]
+    hd = cfg.hd()
+    kh = cfg.n_kv_heads
+    g = cfg.n_heads // kh
+    qf = q.reshape(b, s, kh, g, hd).astype(jnp.float32)
+    out = flash_attend(
+        qf, k, v, None, None,
+        jnp.zeros((b, 1), jnp.int32),
+        jnp.full((b, 1), k.shape[1], jnp.int32),
+        _win_arg(window), fmt="kv_bf16",
+    )
+    return out.reshape(b, s, cfg.n_heads * hd)
 
 
 def attention(
@@ -243,8 +293,18 @@ def attention(
         new_cache, valid = kv_cache.write(fmt, cache, k, v, cache_index)
 
     if decode:
-        if x.shape[1] == 1 and getattr(cfg, "flash_decode", False):
-            out = _flash_decode_path(
+        # flash routing: S == 1 under cfg.flash_decode, S > 1 cache-attends
+        # (chunked prefill) under cfg.flash_prefill -- independent knobs.
+        # Both require a whole-per-device cache (_flash_routable); S > 1
+        # additionally requires a causal layer (the kernel's masking
+        # contract), which every self-attention prefill chunk is.
+        flash = (
+            getattr(cfg, "flash_decode", False)
+            if x.shape[1] == 1
+            else getattr(cfg, "flash_prefill", False) and causal
+        )
+        if flash and _flash_routable():
+            out = _flash_cache_path(
                 q, new_cache, fmt, q_pos, valid, window, cfg
             )
         else:
@@ -262,6 +322,21 @@ def attention(
             out = _attend_dense(qh, ck, cv, bias, kscale=kscale, vscale=vscale)
             out = out.reshape(*x.shape[:2], cfg.n_heads * hd)
         out = out.astype(x.dtype)
+        return dense(p["wo"], out, f"{path}/wo", ctx), new_cache
+
+    # in-chunk self-attention tail: a full-prompt prefill (cache written,
+    # chunk attends only its own K/V) can run the flash kernel on the
+    # just-projected bf16 K/V instead of the chunked/dense XLA paths.
+    # `cache is not None` keeps training out (the kernel has no VJP).
+    if (
+        cache is not None
+        and x.shape[1] > 1
+        and causal
+        and kv_src is None
+        and getattr(cfg, "flash_prefill", False)
+        and _flash_routable()
+    ):
+        out = _flash_self_path(q, k, v, window, cfg).astype(x.dtype)
         return dense(p["wo"], out, f"{path}/wo", ctx), new_cache
 
     # training / prefill: repeat KV to full heads so the head axis shards
