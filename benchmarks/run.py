@@ -3,7 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
   * bench_quant_error   -> Fig. 1 + Sec. 3 accuracy claims (PTQ sweep)
   * bench_op_ratio      -> Sec. 3.3 performance model (85% / 98% numbers)
-  * bench_finetune      -> Fig. 2 + Sec. 4 (pre-initialized QAT recovery)
+  * bench_finetune      -> Fig. 2 + Sec. 4 (pre-initialized QAT recovery),
+                           extended to the stateful methods (ttq, inq) --
+                           ``--finetune-json`` writes the committed
+                           ``benchmarks/BENCH_finetune.json`` baseline
   * bench_cluster_hier  -> Sec. 3.1 hierarchical-search ablation
   * bench_kernels       -> kernel microbench + HBM compression (Sec. 3.3 /
                            DESIGN 2.1 TPU adaptation)
@@ -173,6 +176,10 @@ def main(argv=None) -> int:
                          "lockstep under Poisson load) and write its JSON "
                          "table -- how benchmarks/BENCH_serving.json is "
                          "made")
+    ap.add_argument("--finetune-json", default=None, metavar="PATH",
+                    help="run the fine-tune benchmark only (ptq/qat/ttq/inq "
+                         "accuracy trajectory) and write its JSON table -- "
+                         "how benchmarks/BENCH_finetune.json is made")
     args = ap.parse_args(argv)
 
     from benchmarks import (
@@ -190,6 +197,11 @@ def main(argv=None) -> int:
     if args.serving_json:
         print("name,us_per_call,derived")
         bench_serving.run(csv=print, json_path=args.serving_json)
+        return 0
+
+    if args.finetune_json:
+        print("name,us_per_call,derived")
+        bench_finetune.run(csv=print, json_path=args.finetune_json)
         return 0
 
     if args.json or args.check:

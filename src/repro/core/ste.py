@@ -56,20 +56,187 @@ def weights_ste(
 
 
 def ternary_weights_ste(
-    w: jax.Array, group_size: int, filter_size: int = 1, refit_scale: bool = False
+    w: jax.Array, group_size: int, filter_size: int = 1,
+    refit_scale: bool = False, fmt: str = None,
 ) -> jax.Array:
-    """Sec. 4 forward: Algorithm-1 ternarized weights, identity gradient."""
-    return weights_ste(w, 2, group_size, filter_size, refit_scale)
+    """Sec. 4 forward: Algorithm-1 ternarized weights, identity gradient.
+    ``fmt`` threads through to the registry exactly like ``weights_ste`` so a
+    registered ternary-width format trains on its own grid, not the default."""
+    return weights_ste(w, 2, group_size, filter_size, refit_scale, fmt=fmt)
 
 
-def act_ste(x: jax.Array, bits: int = 8, per_row: bool = False) -> jax.Array:
+@functools.lru_cache(maxsize=None)
+def _ttq_ste_fn(group_size: int, threshold: float):
+    @jax.custom_vjp
+    def fq(w, wpn):
+        wq, _ = _ttq_apply(w, wpn, group_size, threshold)
+        return wq
+
+    def fwd(w, wpn):
+        wq, res = _ttq_apply(w, wpn, group_size, threshold)
+        return wq, res
+
+    def bwd(res, g):
+        pos, neg, sq, sgn = res
+        k, n = g.shape
+        gb = g.reshape(k // group_size, group_size, n)
+        pb = pos.reshape(k // group_size, group_size, n)
+        nb = neg.reshape(k // group_size, group_size, n)
+        # TTQ rule (arxiv 1612.01064 eq. 5-6): scale grads are the partition
+        # sums; the latent-weight grad is scaled by the cluster magnitude on
+        # its partition and identity in the deadzone.
+        dwp = jnp.sum(gb * pb, axis=1)  # (G, N)
+        dwn = -jnp.sum(gb * nb, axis=1)
+        dwpn = jnp.stack([dwp, dwn], axis=0) * sgn  # chain through |wpn|
+        dw = gb * (pb * sq[0][:, None, :] + nb * sq[1][:, None, :]
+                   + (1.0 - pb - nb))
+        return dw.reshape(k, n), dwpn
+
+    fq.defvjp(fwd, bwd)
+    return fq
+
+
+def _ttq_apply(w, wpn, group_size, threshold):
+    """Shared forward: ternary codes from the master weights, cluster
+    magnitudes from the trained Wp/Wn — fake-quantized through the SAME DFP
+    scale-table path deployment uses, so the training grid is the serving
+    grid bit for bit."""
+    from repro.quant.formats import ttq_partition  # lazy: avoids cycle
+
+    k, n = w.shape
+    codes = jax.lax.stop_gradient(
+        ttq_partition(w, group_size, threshold).astype(jnp.float32)
+    )
+    cb = codes.reshape(k // group_size, group_size, n)
+    pos = (cb > 0).astype(jnp.float32)
+    neg = (cb < 0).astype(jnp.float32)
+    mag = jnp.abs(jax.lax.stop_gradient(wpn))  # (2, G, N)
+    sm, se = quantizer.quantize_scales(mag.reshape(-1, n))
+    sq = quantizer.dequantize_scales(sm, se).reshape(mag.shape)
+    wq = pos * sq[0][:, None, :] - neg * sq[1][:, None, :]
+    res = (pos.reshape(k, n), neg.reshape(k, n), sq,
+           jnp.sign(jax.lax.stop_gradient(wpn)))
+    return wq.reshape(k, n), res
+
+
+def ttq_ste(w: jax.Array, wpn: jax.Array, group_size: int,
+            threshold: float = None) -> jax.Array:
+    """Trained Ternary Quantization forward/backward (arxiv 1612.01064).
+
+    w   : (K, N) fp32 master weights — partitioned into {-1, 0, +1} codes
+          per cluster with the relative threshold.
+    wpn : (2, G, N) trained scale magnitudes — wpn[0] is Wp, wpn[1] is Wn.
+    Returns the fake-quantized (K, N) weights; gradients flow to BOTH inputs
+    under the sign-partitioned TTQ rule.
+    """
+    from repro.quant.formats import TTQ_THRESHOLD
+
+    t = TTQ_THRESHOLD if threshold is None else threshold
+    return _ttq_ste_fn(group_size, float(t))(w, wpn)
+
+
+def inq_freeze(w: jax.Array, mask: jax.Array,
+               live: jax.Array = None) -> jax.Array:
+    """INQ (arxiv 1702.03044), paper-original forward: frozen coordinates
+    (mask > 0) carry their already-quantized value with NO gradient; the rest
+    trains through ``live`` (defaults to the raw fp weights).  The QAT layer
+    path uses ``inq_ste`` instead -- the learned-grid variant below -- but
+    this primitive stays as the building block for the paper's recipe."""
+    live = w if live is None else live
+    return jnp.where(mask > 0, jax.lax.stop_gradient(w), live)
+
+
+@functools.lru_cache(maxsize=None)
+def _inq_ste_fn(bits: int, group_size: int, filter_size: int, refit: bool,
+                fmt):
+    from repro.quant.formats import dequantize_weights, quantize_weights
+
+    def apply(w, s):
+        """Fake-quantize ``w`` onto the externally-supplied cluster grid
+        ``s`` through the SAME registry path deployment uses
+        (``quantize_weights(scales=...)``), so codes and values match the
+        served artifact bit for bit."""
+        mag = jnp.abs(s)
+        qt = quantize_weights(
+            w, bits, group_size, filter_size, refit, fmt=fmt, scales=mag
+        )
+        deq = dequantize_weights(qt).astype(jnp.float32)
+        sq = quantizer.dequantize_scales(qt.scale_m, qt.scale_e)
+        safe = jnp.where(sq > 0, sq, 1.0)
+        k, n = w.shape
+        codes = (deq.reshape(k // group_size, group_size, n)
+                 / safe[:, None, :]).reshape(k, n)
+        return deq, codes
+
+    @jax.custom_vjp
+    def fq(w, mask, s):
+        deq, _ = apply(w, s)
+        return deq
+
+    def fwd(w, mask, s):
+        deq, codes = apply(w, s)
+        return deq, (mask, codes, jnp.sign(s))
+
+    def bwd(res, g):
+        mask, codes, sgn = res
+        k, n = g.shape
+        # live coords: identity STE to the master weights; frozen: zero
+        dw = g * (1.0 - (mask > 0).astype(jnp.float32))
+        # learned-grid rule (TTQ generalized to any code set): the scale
+        # gradient of each cluster is the code-weighted gradient sum over
+        # ALL its coordinates -- frozen codes keep steering the grid
+        ds = jnp.sum(
+            (g * codes).reshape(k // group_size, group_size, n), axis=1
+        ) * sgn  # chain through |s|
+        return dw, jnp.zeros_like(mask), ds
+
+    fq.defvjp(fwd, bwd)
+    return fq
+
+
+def inq_ste(w: jax.Array, mask: jax.Array, scales: jax.Array, bits: int,
+            group_size: int, filter_size: int = 1, refit_scale: bool = False,
+            fmt: str = None) -> jax.Array:
+    """Learned-grid INQ forward/backward (arxiv 1702.03044 + trained scales).
+
+    The whole tensor fake-quantizes onto the TRAINED cluster grid ``scales``
+    (codes re-derived from ``w / s`` every step, exactly how deployment
+    derives them), so the grid itself keeps adapting by gradient while INQ
+    events progressively stop ``w`` updates via ``mask``.  This is the
+    honest synthesis of the two papers this module implements: INQ freezes
+    codes, TTQ trains magnitudes -- a plain re-fit grid (QAT) gets neither.
+
+    w      : (K, N) fp32 master weights
+    mask   : (K, N) f32, 1.0 = frozen (no gradient to that coordinate)
+    scales : (G, N) f32 trainable cluster scales (``inq_mask``'s sibling
+             ``inq_scales`` leaf)
+    """
+    return _inq_ste_fn(bits, group_size, filter_size, refit_scale, fmt)(
+        w, mask, scales
+    )
+
+
+def act_ste(x: jax.Array, bits: int = 8, per_row: bool = False,
+            exponent: int = None) -> jax.Array:
     """8-bit DFP activation fake-quant with *clipped* STE: gradient is zero
     outside the representable range (the clip carries the gradient), identity
-    inside (rounding is straight-through)."""
+    inside (rounding is straight-through).
+
+    With the default dynamic exponent the clip never binds (the range is fit
+    to max|x| every call); pass a static ``exponent`` — e.g. a calibrated
+    per-site exponent from the deployment plan — to train against a FIXED
+    range whose clip gradient is real."""
     if bits >= 16:
         return x
-    max_abs = jnp.max(jnp.abs(jax.lax.stop_gradient(x)))
-    e = dfp.choose_exponent(max_abs, bits)
+    if exponent is None:
+        max_abs = jnp.max(jnp.abs(jax.lax.stop_gradient(x)))
+        e = dfp.choose_exponent(max_abs, bits)
+    else:
+        e = jnp.asarray(exponent, jnp.int32)
     r = dfp.qmax(bits) * dfp.exp2i(e)
     xc = jnp.clip(x, -r, r)
-    return ste(xc, calibration.fake_quantize_act(xc, bits, per_row))
+    if exponent is None:
+        q = calibration.fake_quantize_act(xc, bits, per_row)
+    else:
+        q = dfp.dequantize(dfp.quantize(xc, e, bits), e)
+    return ste(xc, q)

@@ -22,8 +22,11 @@ def qmatmul_ref(x_q: jax.Array, x_e: jax.Array, qt: QTensor) -> jax.Array:
     qt  : QTensor weights (K, N)
     Returns f32 (M, N).
     """
-    from repro.quant.formats import decode_codes  # lazy: avoids import cycle
+    from repro.quant.formats import decode_codes, format_of  # lazy: avoids import cycle
 
+    f = format_of(qt)
+    if f.ref_matmul is not None:  # non-standard scale layout (ttq: Wp/Wn)
+        return f.ref_matmul(x_q, x_e, qt)
     m, k = x_q.shape
     g = qt.group_size
     codes = decode_codes(qt)  # (K, N) int8

@@ -3,6 +3,18 @@
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
       --steps 20 --quant qat --w-bits 2 --group-size 16
 
+Stateful quantization methods (see docs/TRAINING.md):
+
+  --quant ttq   Trained Ternary Quantization: per-cluster Wp/Wn scale
+                magnitudes train by gradient (forces --fmt ttq, w_bits 2)
+  --quant inq   Incremental Network Quantization on a learned grid:
+                magnitude partitions freeze at --inq-fractions of the run
+                while the rest keeps training and the cluster grid itself
+                trains by gradient (any weight format)
+
+Both thread their learned state into ``--save-artifact DIR`` so the served
+model runs on exactly the grid training converged to.
+
 Full-config runs target the production mesh (see dryrun.py for the
 compile-only path used on this CPU container); --smoke runs the reduced
 config end-to-end on local devices with the same code path.
@@ -28,9 +40,17 @@ def main():
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
-    ap.add_argument("--quant", default="fp", choices=["fp", "qat"])
+    ap.add_argument("--quant", default="fp",
+                    choices=["fp", "qat", "ttq", "inq"])
     ap.add_argument("--w-bits", type=int, default=2)
     ap.add_argument("--group-size", type=int, default=16)
+    ap.add_argument("--fmt", default=None,
+                    help="named weight format (nf4, mx, ttq, ...)")
+    ap.add_argument("--inq-fractions", default="0.5,0.75,0.875,1.0",
+                    help="INQ accumulative freeze fractions (comma-separated)")
+    ap.add_argument("--save-artifact", default=None, metavar="DIR",
+                    help="after training, quantize on the learned grid and "
+                         "persist a serving artifact")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--opt-bits", type=int, default=32, choices=[8, 32])
@@ -38,13 +58,21 @@ def main():
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
-    qc = QuantConfig(w_bits=args.w_bits, group_size=args.group_size, mode=args.quant)
+    method = args.quant if args.quant in ("ttq", "inq") else None
+    fmt = args.fmt
+    w_bits = args.w_bits
+    if args.quant == "ttq":
+        fmt, w_bits = "ttq", 2  # ttq is a ternary-code format by definition
+    mode = "qat" if method else args.quant
+    qc = QuantConfig(w_bits=w_bits, group_size=args.group_size, mode=mode,
+                     fmt=fmt)
     cfg = (configs.get_smoke if args.smoke else configs.get_config)(args.arch, qc)
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params / 1e6:.1f}M quant={args.quant} "
-          f"w_bits={args.w_bits} N={args.group_size}")
+          f"w_bits={w_bits} N={args.group_size}"
+          + (f" fmt={fmt}" if fmt else ""))
 
     dcfg = DataConfig(batch=args.batch, seq=args.seq)
     tcfg = TrainConfig(
@@ -58,7 +86,19 @@ def main():
     # resolves precision by table lookup, and the plan rides in every
     # checkpoint so a restarted node resumes under the same precision table
     api = api.compiled(params)
-    tr = Trainer(api.train_loss, params, tcfg, plan=api.ctx.plan)
+    quant_state = None
+    if method is not None:
+        from repro.quant import init_quant_state
+
+        fractions = tuple(
+            float(f) for f in args.inq_fractions.split(",") if f
+        )
+        params, quant_state = init_quant_state(
+            params, api.ctx.plan, method,
+            fractions=fractions, total_steps=args.steps,
+        )
+    tr = Trainer(api.train_loss, params, tcfg, plan=api.ctx.plan,
+                 quant_state=quant_state)
     if args.resume and args.ckpt_dir:
         start = tr.maybe_restore()
         restored = tr.plan
@@ -75,6 +115,16 @@ def main():
     for i in range(0, len(hist["loss"]), max(1, len(hist["loss"]) // 10)):
         print(f"step {hist['step'][i]:5d}  loss {hist['loss'][i]:.4f}")
     print(f"final loss {hist['loss'][-1]:.4f}")
+
+    if args.save_artifact:
+        from repro.models import quantize_and_plan, save_servable
+
+        # the state-carrying tree threads the LEARNED scales into the
+        # artifact (quantize_params consumes ttq_scales / inq_scales --
+        # deployment never re-fits the grid)
+        qparams, plan, _ = quantize_and_plan(api, tr.params)
+        path = save_servable(args.save_artifact, api, qparams, plan)
+        print(f"saved serving artifact at {path}")
 
 
 if __name__ == "__main__":

@@ -62,14 +62,29 @@ def dense(
     if ctx.mode == "qat" and (ctx.plan is not None or ctx.policy is not None):
         prec = ctx.resolve(path)
         if prec is not None and prec.quantized:
-            wq = ste.weights_ste(
-                w.astype(jnp.float32),
-                prec.w_bits,
-                prec.group_size,
-                prec.filter_size,
-                prec.refit_scale,
-                fmt=prec.fmt,
-            ).astype(x.dtype)
+            wf = w.astype(jnp.float32)
+            if "inq_mask" in p:  # learned-grid INQ: the whole tensor
+                # fake-quantizes onto the TRAINED cluster grid (codes
+                # re-derived from w/s exactly as deployment derives them);
+                # events freeze w updates, the grid keeps training
+                wq = ste.inq_ste(
+                    wf, p["inq_mask"], p["inq_scales"], prec.w_bits,
+                    prec.group_size, prec.filter_size, prec.refit_scale,
+                    fmt=prec.fmt,
+                ).astype(x.dtype)
+            elif prec.fmt == "ttq" and "ttq_scales" in p:
+                wq = ste.ttq_ste(
+                    wf, p["ttq_scales"], prec.group_size
+                ).astype(x.dtype)
+            else:
+                wq = ste.weights_ste(
+                    wf,
+                    prec.w_bits,
+                    prec.group_size,
+                    prec.filter_size,
+                    prec.refit_scale,
+                    fmt=prec.fmt,
+                ).astype(x.dtype)
             xq = ste.act_ste(x.astype(jnp.float32), prec.act_bits).astype(x.dtype)
             y = xq @ wq
         else:

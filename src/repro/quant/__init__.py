@@ -80,4 +80,14 @@ from repro.quant.api import (
     quantize_params,
     save_artifact,
 )
+from repro.quant.state import (
+    STATE_KEYS,
+    QuantState,
+    advance_inq,
+    has_quant_state,
+    init_quant_state,
+    inq_event_steps,
+    strip_quant_state,
+)
+from repro.quant.formats import TTQ_THRESHOLD, ttq_partition
 from repro.core.policy import FULL_PRECISION, LayerPrecision, PrecisionPolicy

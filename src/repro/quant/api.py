@@ -118,20 +118,33 @@ def quantize_params(params, plan: QuantPlan):
     embedding table (a gather, not a GEMM) is snapped to the 8-bit DFP grid
     in place (values quantized, storage dtype unchanged).  Precision comes
     from the compiled plan table -- no per-leaf regex resolution.
+
+    Sites carrying trained quantization state (``repro.quant.state``) are
+    quantized on their *learned* grid: a ``ttq_scales`` leaf supplies the
+    trained Wp/Wn magnitudes and an ``inq_scales`` leaf the last INQ event's
+    scale table, threaded into ``quantize_weights(scales=...)`` so the
+    artifact is never re-fit from the master weights.  State leaves are
+    consumed here -- the output tree holds only servable parameters.
     """
     from repro.core import calibration
+    from repro.quant.state import STATE_KEYS
 
-    def quant_w(w, prec):
-        def q2(m):
+    def quant_w(w, prec, scales=None):
+        def q2(m, sc=None):
             return quantize_weights(
                 m, prec.w_bits, prec.group_size, prec.filter_size,
-                prec.refit_scale, fmt=prec.fmt,
+                prec.refit_scale, fmt=prec.fmt, scales=sc,
             )
 
+        if scales is None:
+            fn = lambda m: q2(m)
+            for _ in range(w.ndim - 2):
+                fn = jax.vmap(fn)
+            return fn(w.astype(jnp.float32))
         fn = q2
         for _ in range(w.ndim - 2):
             fn = jax.vmap(fn)
-        return fn(w.astype(jnp.float32))
+        return fn(w.astype(jnp.float32), scales.astype(jnp.float32))
 
     def walk(node, path):
         if isinstance(node, dict):
@@ -141,9 +154,19 @@ def quantize_params(params, plan: QuantPlan):
                 if is_projection_site(key, val):
                     prec = plan.resolve(path)
                     if _quantizable(prec, val.shape[-2]):
-                        out[key] = quant_w(val, prec)
+                        if prec.fmt == "ttq" and "ttq_scales" in node:
+                            sc = node["ttq_scales"]
+                        else:
+                            # |s|: the trained grid is a magnitude (the STE
+                            # chains gradients through sign, training may
+                            # cross zero) -- same fold as ste.inq_ste
+                            sc = node.get("inq_scales")
+                            sc = None if sc is None else jnp.abs(sc)
+                        out[key] = quant_w(val, prec, scales=sc)
                     else:
                         out[key] = val
+                elif key in STATE_KEYS:
+                    continue  # consumed above; not a servable parameter
                 elif key == "table" and hasattr(val, "ndim"):
                     out[key] = calibration.fake_quantize_act(
                         val.astype(jnp.float32), 8, per_row=True

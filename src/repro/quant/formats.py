@@ -57,6 +57,12 @@ from repro.kernels.ternary_matmul import ternary_matmul, ternary_matmul_fused
 
 # weight_codes: (w f32 (K, N), group_size, filter_size, refit_scale)
 #   -> (codes int8 (K, N), scale_m int8 (K/g, N), scale_e int32 scalar)
+# Implementations MAY additionally accept a ``scales=`` keyword (f32 cluster
+# scales supplied externally -- e.g. TTQ-trained Wp/Wn magnitudes or the
+# INQ freeze-event grid) in which case the scale table is built from the
+# given values instead of being re-fit from ``w``.  ``quantize_weights``
+# only forwards the keyword when the caller passes one, so formats
+# registered before this hook keep working unchanged.
 WeightCodesFn = Callable[..., Tuple[jax.Array, jax.Array, jax.Array]]
 
 
@@ -79,6 +85,13 @@ class QuantFormat:
     # shared exponent) pin it here; quantize_weights then overrides the
     # caller's group_size so the QTensor metadata always matches the scales
     block_size: Optional[int] = None
+    # formats whose scale table is NOT one value per cluster (ttq carries a
+    # (2*groups, N) Wp/Wn pair table) override the generic reconstruction
+    # here: (qt) -> f32 (K, N)
+    dequantize: Optional[Callable[[QTensor], jax.Array]] = None
+    # matching override for the integer oracle (kernels/ref.qmatmul_ref
+    # dispatches through this): (x_q int8 (M, K), x_e, qt) -> f32 (M, N)
+    ref_matmul: Optional[Callable] = None
 
 
 _FORMATS: Dict[str, QuantFormat] = {}
@@ -95,6 +108,8 @@ def register_format(
     kernel: Optional[Callable] = None,
     fused_kernel: Optional[Callable] = None,
     block_size: Optional[int] = None,
+    dequantize: Optional[Callable] = None,
+    ref_matmul: Optional[Callable] = None,
     overwrite: bool = False,
 ) -> QuantFormat:
     """Register a weight format under ``name`` (and as default for ``bits``
@@ -130,7 +145,7 @@ def register_format(
                 del _BY_BITS[old_bits]  # fail closed: no compatible claimant
     fmt = QuantFormat(
         name, bits, encode, decode, weight_codes, kernel, fused_kernel,
-        block_size,
+        block_size, dequantize, ref_matmul,
     )
     _FORMATS[name] = fmt
     # claim the bits default only if unclaimed or already owned by this name:
@@ -171,18 +186,32 @@ def format_names() -> Tuple[str, ...]:
 # ---------------------------------------------------------------------------
 # Built-in formats (the paper's 2t / 4 / 8-bit cluster schemes).
 # ---------------------------------------------------------------------------
-def _ternary_weight_codes(w, group_size, filter_size, refit_scale):
+def _ternary_weight_codes(w, group_size, filter_size, refit_scale, scales=None):
+    if scales is not None:
+        # externally-supplied grid (INQ freeze events deploy the trained
+        # grid, never a re-fit): mantissas snap to the GIVEN per-cluster
+        # alpha; weights already on that grid reconstruct exactly
+        scale_m, scale_e = quantize_scales(scales)
+        k, n = w.shape
+        scale = dequantize_scales(scale_m, scale_e)[:, None, :]
+        safe = jnp.where(scale > 0, scale, 1.0)
+        blocks = w.reshape(k // group_size, group_size, n)
+        q = jnp.clip(jnp.round(blocks / safe), -1, 1)
+        return q.astype(jnp.int8).reshape(k, n), scale_m, scale_e
     codes, alpha = ternary.ternarize_matrix(w, group_size, filter_size, refit_scale)
     scale_m, scale_e = quantize_scales(alpha)
     return codes, scale_m, scale_e
 
 
 def _dfp_weight_codes(bits: int) -> WeightCodesFn:
-    def weight_codes(w, group_size, filter_size, refit_scale):
+    def weight_codes(w, group_size, filter_size, refit_scale, scales=None):
         k, n = w.shape
         blocks = w.reshape(k // group_size, group_size, n)
-        max_abs = jnp.max(jnp.abs(blocks), axis=1)  # (groups, N)
-        alpha = max_abs / dfp.qmax(bits)
+        if scales is None:
+            max_abs = jnp.max(jnp.abs(blocks), axis=1)  # (groups, N)
+            alpha = max_abs / dfp.qmax(bits)
+        else:
+            alpha = scales  # externally-supplied cluster scales (no re-fit)
         scale_m, scale_e = quantize_scales(alpha)
         # mantissas are chosen against the *re-quantized* scales so the
         # stored (codes, scale table) pair is self-consistent
@@ -229,7 +258,7 @@ register_format(
 # bits defaults (4 -> int4, 8 -> int8) that legacy empty-fmt artifacts
 # resolve through stay untouched.
 # ---------------------------------------------------------------------------
-def _nf4_weight_codes(w, group_size, filter_size, refit_scale):
+def _nf4_weight_codes(w, group_size, filter_size, refit_scale, scales=None):
     """Nearest-NF4-quantile codes against a per-cluster absmax scale.
 
     The cluster scale is absmax / 127 (so code 15 -- LUT value +127 --
@@ -237,13 +266,18 @@ def _nf4_weight_codes(w, group_size, filter_size, refit_scale):
     every other format's scale table.  Codes are chosen against the
     *re-quantized* scale so (codes, scale table) stay self-consistent.
     ``filter_size``/``refit_scale`` are Algorithm-2 knobs with no analogue
-    in a quantile LUT; they are accepted and ignored.
+    in a quantile LUT; they are accepted and ignored.  ``scales`` supplies
+    an external per-cluster alpha table (trained grid) instead of the
+    absmax fit.
     """
     del filter_size, refit_scale
     k, n = w.shape
     blocks = w.reshape(k // group_size, group_size, n)
-    max_abs = jnp.max(jnp.abs(blocks), axis=1)  # (groups, N)
-    alpha = max_abs / float(NF4_LUT_I8[-1])  # int8-grid LUT: value 127 = max
+    if scales is None:
+        max_abs = jnp.max(jnp.abs(blocks), axis=1)  # (groups, N)
+        alpha = max_abs / float(NF4_LUT_I8[-1])  # int8-grid LUT: 127 = max
+    else:
+        alpha = scales
     scale_m, scale_e = quantize_scales(alpha)
     scale = dequantize_scales(scale_m, scale_e)[:, None, :]
     safe = jnp.where(scale > 0, scale, 1.0)
@@ -266,7 +300,7 @@ def _nf4_decode(packed, k):
 _MX_SCALE_BITS = 6  # scale_m spans 2**0 .. 2**6 (64 <= int8 max)
 
 
-def _mx_weight_codes(w, group_size, filter_size, refit_scale):
+def _mx_weight_codes(w, group_size, filter_size, refit_scale, scales=None):
     """int8 mantissas with one power-of-two exponent per 32-element block.
 
     Per block b: e_b = choose_exponent(absmax_b, 8).  The shared QTensor base
@@ -285,8 +319,20 @@ def _mx_weight_codes(w, group_size, filter_size, refit_scale):
     )
     k, n = w.shape
     blocks = w.reshape(k // MX_BLOCK, MX_BLOCK, n)
-    max_abs = jnp.max(jnp.abs(blocks), axis=1)  # (K/32, N)
-    e_b = dfp.choose_exponent(max_abs, bits=8)  # per-block int32
+    if scales is not None:
+        # external grid: the given per-block scales are (by the format's own
+        # construction) exact powers of two -- recover the block exponents
+        # and rebuild the shared base from them instead of re-fitting
+        e_b = jnp.where(
+            scales > 0,
+            jnp.round(jnp.log2(jnp.maximum(scales, jnp.finfo(jnp.float32).tiny))
+                      ).astype(jnp.int32),
+            jnp.zeros(scales.shape, jnp.int32),
+        )
+        max_abs = scales  # live-block detection below: scale > 0 iff live
+    else:
+        max_abs = jnp.max(jnp.abs(blocks), axis=1)  # (K/32, N)
+        e_b = dfp.choose_exponent(max_abs, bits=8)  # per-block int32
     # the shared base is the loudest LIVE block: choose_exponent maps an
     # all-zero block to e=0, far above real weight-block exponents (~-16),
     # and letting a dead block (zero padding, pruned channel) into the max
@@ -327,6 +373,90 @@ register_format(
 
 
 # ---------------------------------------------------------------------------
+# ttq: Trained Ternary Quantization (arxiv 1612.01064).  Ternary codes like
+# the paper's Algorithm 1, but the positive and negative cluster magnitudes
+# (Wp, Wn) are independent *trained parameters* (see repro.quant.state /
+# core.ste.ttq_ste for the training side).  The scale table therefore holds
+# TWO rows per cluster -- scale_m is (2*groups, N): Wp mantissas in the
+# first half, Wn mantissas in the second, one shared exponent -- which is
+# why the format overrides ``dequantize`` and ``ref_matmul`` instead of
+# flowing through the one-scale-per-cluster generic paths.  Deployment
+# stays all-integer: per cluster the oracle takes TWO ternary-accumulated
+# partials (positive and negative codes) and applies one mantissa multiply
+# each, so the paper's multiply-elimination claim degrades from 1 to 2
+# multiplies per cluster, not to dense.
+# ---------------------------------------------------------------------------
+TTQ_THRESHOLD = 0.05  # Delta = t * max|w| per cluster (paper's t)
+
+
+def ttq_partition(w, group_size: int, threshold: float = TTQ_THRESHOLD):
+    """Sign partition: codes {-1, 0, +1} via the per-cluster threshold
+    Delta = t * max|w|.  Shared by the QAT forward (core.ste.ttq_ste) and
+    deployment (``_ttq_weight_codes``) so they can never disagree."""
+    k, n = w.shape
+    blocks = w.reshape(k // group_size, group_size, n)
+    delta = threshold * jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    c = jnp.where(blocks > delta, 1, jnp.where(blocks < -delta, -1, 0))
+    return c.astype(jnp.int8).reshape(k, n)
+
+
+def _ttq_weight_codes(w, group_size, filter_size, refit_scale, scales=None):
+    """``scales`` is the trained (2, groups, N) [or (2*groups, N)] f32
+    Wp/Wn magnitude table; without one (PTQ cold start) both magnitudes
+    initialize symmetrically from the Algorithm-1 alpha fit."""
+    k, n = w.shape
+    g = k // group_size
+    if scales is None:
+        _, alpha = ternary.ternarize_matrix(w, group_size, filter_size, refit_scale)
+        wpn = jnp.concatenate([alpha, alpha], axis=0)  # (2g, N) symmetric
+    else:
+        wpn = jnp.abs(scales.reshape(2 * g, n))
+    scale_m, scale_e = quantize_scales(wpn)
+    return ttq_partition(w, group_size), scale_m, scale_e
+
+
+def _ttq_dequantize(qt: QTensor) -> jax.Array:
+    codes = unpack2(qt.packed, qt.k).astype(jnp.float32)  # (K, N)
+    g = qt.n_groups
+    sc = dequantize_scales(qt.scale_m, qt.scale_e)  # (2g, N)
+    wp, wn = sc[:g][:, None, :], sc[g:][:, None, :]
+    c = codes.reshape(g, qt.group_size, qt.n)
+    return jnp.where(c > 0, c * wp, c * wn).reshape(qt.k, qt.n)
+
+
+def _ttq_ref_matmul(x_q: jax.Array, x_e: jax.Array, qt: QTensor) -> jax.Array:
+    """Integer oracle: two ternary accumulations per cluster (positive and
+    negative code masks), one mantissa multiply each, shared exponents."""
+    m, k = x_q.shape
+    g = qt.group_size
+    codes = unpack2(qt.packed, qt.k).astype(jnp.int32)
+    xg = x_q.astype(jnp.int32).reshape(m, k // g, g)
+    wg = codes.reshape(k // g, g, qt.n)
+    part_p = jnp.einsum("mkg,kgn->kmn", xg, jnp.maximum(wg, 0))  # int32
+    part_n = jnp.einsum("mkg,kgn->kmn", xg, jnp.minimum(wg, 0))
+    ng = qt.n_groups
+    smp = qt.scale_m[:ng].astype(jnp.float32)[:, None, :]
+    smn = qt.scale_m[ng:].astype(jnp.float32)[:, None, :]
+    out = (part_p.astype(jnp.float32) * smp
+           + part_n.astype(jnp.float32) * smn).sum(axis=0)
+    scale = dfp.exp2i(qt.scale_e + jnp.asarray(x_e, jnp.int32))
+    return out * (jnp.broadcast_to(scale, (m, 1)) if scale.ndim else scale)
+
+
+register_format(
+    "ttq",
+    bits=2,
+    encode=pack2,
+    decode=unpack2,
+    weight_codes=_ttq_weight_codes,
+    kernel=None,  # Pallas path would need the two-row scale layout in VMEM
+    fused_kernel=None,
+    dequantize=_ttq_dequantize,
+    ref_matmul=_ttq_ref_matmul,
+)
+
+
+# ---------------------------------------------------------------------------
 # Generic weight quantization entry points (format-registry driven).
 # ---------------------------------------------------------------------------
 def quantize_weights(
@@ -336,6 +466,7 @@ def quantize_weights(
     filter_size: int = 1,
     refit_scale: bool = False,
     fmt: Optional[str] = None,
+    scales: Optional[jax.Array] = None,
 ) -> QTensor:
     """Quantize a (K, N) projection with the paper's cluster scheme.
 
@@ -352,13 +483,28 @@ def quantize_weights(
     of quantize time.  ``format_of`` still accepts legacy empty-fmt
     QTensors (pre-fix checkpoints) via the bits default, which registration
     keeps pointed at the built-ins.
+
+    ``scales`` supplies an external f32 cluster-scale table (trained state:
+    TTQ's learned Wp/Wn, an INQ freeze-event grid) -- the format builds its
+    scale table from the GIVEN values instead of re-fitting from ``w``, so
+    the deployed artifact runs on exactly the grid training converged to.
+    Only forwarded when present, so formats registered without the keyword
+    keep working.
     """
     k, n = w.shape
     w = w.astype(jnp.float32)
     f = get_format(fmt) if fmt else format_for_bits(bits)
     if f.block_size is not None:
         group_size = f.block_size  # format-fixed cluster length (mx: 32)
-    codes, scale_m, scale_e = f.weight_codes(w, group_size, filter_size, refit_scale)
+    if scales is not None:
+        codes, scale_m, scale_e = f.weight_codes(
+            w, group_size, filter_size, refit_scale,
+            scales=scales.astype(jnp.float32),
+        )
+    else:
+        codes, scale_m, scale_e = f.weight_codes(
+            w, group_size, filter_size, refit_scale
+        )
     return QTensor(
         f.encode(codes), scale_m, scale_e, f.bits, group_size, (k, n),
         fmt=f.name,
@@ -372,6 +518,9 @@ def decode_codes(qt: QTensor) -> jax.Array:
 
 def dequantize_weights(qt: QTensor) -> jax.Array:
     """f32 (K, N) reconstruction."""
+    f = format_of(qt)
+    if f.dequantize is not None:  # non-standard scale layout (ttq: Wp/Wn)
+        return f.dequantize(qt)
     codes = decode_codes(qt).astype(jnp.float32)
     scale = dequantize_scales(qt.scale_m, qt.scale_e)  # (groups, N)
     c = codes.reshape(qt.n_groups, qt.group_size, qt.n)

@@ -1,0 +1,268 @@
+"""Trainable quantization state: TTQ learned scales + INQ freeze masks.
+
+The QAT stack was stateless -- ``core/ste.py`` re-fit scales from the master
+weights on every forward and the backward was identity-only, so a learned
+scale (TTQ, arxiv 1612.01064) or a progressive freeze mask (INQ, arxiv
+1702.03044) had nowhere to live, train, checkpoint, or reach the deployed
+plan.  This module gives that state a home.
+
+State leaves live *inside* the param tree at the projection-site dict nodes,
+next to the ``w`` they govern:
+
+  ``ttq_scales`` : (..., 2, G, N) f32 -- trained Wp/Wn cluster magnitudes
+                   (trainable; the optimizer excludes them from weight decay
+                   and keeps f32 moments even under DFP-8 moment state)
+  ``inq_mask``   : (..., K, N) f32, 1.0 = frozen -- INQ accumulative
+                   partition mask (non-trainable)
+  ``inq_scales`` : (..., G, N) f32 -- the learned cluster grid the whole
+                   tensor fake-quantizes onto (trainable, same optimizer
+                   treatment as ``ttq_scales``; INQ events snap newly
+                   frozen coordinates onto it, they never re-fit it)
+
+Living in the tree means ``lax.scan`` over stacked blocks slices them per
+layer automatically, the checkpoint codec persists them with no special
+casing, and sharding rules see ordinary float leaves.  The *schedule* --
+method, partition fractions, position -- is the small static ``QuantState``
+record persisted in the checkpoint manifest so a mid-schedule resume is
+bit-faithful.
+
+``quantize_and_plan``-time consumption: ``api.quantize_params`` passes the
+learned ``ttq_scales`` / ``inq_scales`` to ``quantize_weights(scales=...)``
+so the served artifact runs on exactly the grid training converged to --
+scales are never re-fit.  (``core.quantizer.quantize_scales`` round-trips
+its own dequantization bit-exactly, which is what makes storing the f32
+dequantized table sufficient.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.api import _quantizable
+from repro.quant.formats import dequantize_weights, quantize_weights
+from repro.quant.plan import QuantPlan, is_projection_site, site_subpath
+
+# Every key this module may add to a site node.  Anything walking the tree
+# for "real" params (artifact export, sharding) strips or skips these.
+STATE_KEYS = ("ttq_scales", "inq_mask", "inq_scales")
+
+DEFAULT_INQ_FRACTIONS = (0.5, 0.75, 0.875, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantState:
+    """Static schedule record for a stateful-quantization run.
+
+    method      : 'ttq' | 'inq'
+    fractions   : INQ accumulative partition fractions (portion of weights
+                  frozen after each event); unused for ttq
+    pos         : number of INQ events already applied (resume cursor)
+    total_steps : planned training length the event steps are derived from
+    """
+
+    method: str
+    fractions: Tuple[float, ...] = DEFAULT_INQ_FRACTIONS
+    pos: int = 0
+    total_steps: int = 0
+
+    def to_meta(self) -> Dict[str, Any]:
+        return {
+            "method": self.method,
+            "fractions": list(self.fractions),
+            "pos": int(self.pos),
+            "total_steps": int(self.total_steps),
+        }
+
+    @classmethod
+    def from_meta(cls, meta: Dict[str, Any]) -> "QuantState":
+        return cls(
+            method=meta["method"],
+            fractions=tuple(float(f) for f in meta["fractions"]),
+            pos=int(meta["pos"]),
+            total_steps=int(meta["total_steps"]),
+        )
+
+
+def inq_event_steps(total_steps: int, fractions: Sequence[float]) -> Tuple[int, ...]:
+    """Step indices the INQ events fire at: freezing fraction ``f`` of the
+    weights lands at fraction ``f`` of the run (one self-describing knob),
+    so the first half of a default schedule is unconstrained (QAT-style)
+    adaptation, each freeze acts on already-adapted weights, and most of
+    the tensor commits only near the end.  The final (100%) event is
+    clamped to the last step -- training ends with the whole tensor exactly
+    on-grid, so deployment shifts nothing."""
+    last = max(total_steps - 1, 0)
+    return tuple(
+        min(math.floor(total_steps * f), last) for f in fractions
+    )
+
+
+def _map_site(fn, *arrays):
+    """vmap ``fn`` over any stacked leading axes (layers / experts)."""
+    f = fn
+    for _ in range(arrays[0].ndim - 2):
+        f = jax.vmap(f)
+    return f(*arrays)
+
+
+def init_quant_state(
+    params,
+    plan: QuantPlan,
+    method: str,
+    *,
+    fractions: Sequence[float] = DEFAULT_INQ_FRACTIONS,
+    total_steps: int = 0,
+) -> Tuple[Any, QuantState]:
+    """Inject state leaves at every quantizable projection site.
+
+    ttq: ``ttq_scales`` initialized symmetrically from the Algorithm-1 fit
+    (Wp = Wn = alpha), so step 0 of TTQ training reproduces plain ternary
+    PTQ exactly and the scales then diverge by gradient.
+
+    inq: ``inq_mask`` all-zero (nothing frozen yet) + ``inq_scales`` from the
+    initial full-tensor fit -- the grid then trains by gradient
+    (``core.ste.inq_ste``) and is never re-fit.
+
+    Returns ``(params_with_state, QuantState)``.
+    """
+    from repro.core import ternary
+
+    if method not in ("ttq", "inq"):
+        raise ValueError(f"unknown stateful quant method: {method!r}")
+
+    def walk(node, path):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for key, val in node.items():
+            if is_projection_site(key, val):
+                out[key] = val
+                prec = plan.resolve(path)
+                if not _quantizable(prec, val.shape[-2]):
+                    continue
+                w = val.astype(jnp.float32)
+                if method == "ttq":
+                    if prec.fmt != "ttq":
+                        continue
+
+                    def init_one(m, p=prec):
+                        # L2-optimal scales GIVEN the ttq threshold codes:
+                        # per-cluster mean |w| over each sign partition (the
+                        # best starting point for the gradient to refine;
+                        # empty partitions fall back to the Algorithm-1 fit)
+                        from repro.quant.formats import ttq_partition
+
+                        g = p.group_size
+                        k, n = m.shape
+                        cb = ttq_partition(m, g).reshape(k // g, g, n)
+                        mb = jnp.abs(m).reshape(k // g, g, n)
+                        _, alpha = ternary.ternarize_matrix(
+                            m, g, p.filter_size, p.refit_scale
+                        )
+                        scales = []
+                        for sign in (1, -1):
+                            part = (cb == sign).astype(jnp.float32)
+                            cnt = part.sum(axis=1)
+                            s = (mb * part).sum(axis=1) / jnp.maximum(cnt, 1.0)
+                            scales.append(jnp.where(cnt > 0, s, alpha))
+                        return jnp.stack(scales, axis=0)  # (2, G, N)
+
+                    out["ttq_scales"] = _map_site(init_one, w)
+                else:  # inq
+                    out["inq_mask"] = jnp.zeros(w.shape, jnp.float32)
+
+                    def init_one(m, p=prec):
+                        qt = quantize_weights(
+                            m, p.w_bits, p.group_size, p.filter_size,
+                            p.refit_scale, fmt=p.fmt,
+                        )
+                        from repro.core.quantizer import dequantize_scales
+
+                        return dequantize_scales(qt.scale_m, qt.scale_e)
+
+                    out["inq_scales"] = _map_site(init_one, w)
+            elif key in STATE_KEYS:
+                out[key] = val  # already initialized (idempotent re-walk)
+            else:
+                out[key] = walk(val, site_subpath(path, key))
+        return out
+
+    qs = QuantState(
+        method=method, fractions=tuple(float(f) for f in fractions),
+        pos=0, total_steps=int(total_steps),
+    )
+    return walk(params, ""), qs
+
+
+def strip_quant_state(params):
+    """Drop every state leaf, returning the pure parameter tree."""
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        return {k: walk(v) for k, v in node.items() if k not in STATE_KEYS}
+
+    return walk(params)
+
+
+def has_quant_state(params) -> bool:
+    def walk(node):
+        if not isinstance(node, dict):
+            return False
+        return any(
+            k in STATE_KEYS or walk(v) for k, v in node.items()
+        )
+
+    return walk(params)
+
+
+def advance_inq(params, plan: QuantPlan, fraction: float):
+    """Apply one INQ event: per site, grow the frozen set to the smallest
+    ``fraction`` of coordinates by magnitude and snap the frozen set's
+    master weights onto the CURRENT learned grid (``inq_scales``, which
+    trains by gradient between events -- see ``core.ste.inq_ste``).  The
+    mask is accumulative (union with the previous events'); the grid is
+    never re-fit, so event-time snapping, the training forward, and the
+    deployed artifact all derive codes from the same ``(w, s)`` pair."""
+
+    def walk(node, path):
+        if not isinstance(node, dict):
+            return node
+        out = dict(node)
+        if "inq_mask" in node and "w" in node:
+            prec = plan.resolve(path)
+            w = node["w"].astype(jnp.float32)
+
+            def adv_one(m, mask, sc, p=prec):
+                flat = jnp.abs(m).reshape(-1)
+                # freeze the SMALLEST `fraction` of coords first.  The INQ
+                # paper freezes largest-first at 5 bits, where their
+                # quantization error is small; at ternary/int4 widths the
+                # largest weights carry the highest grid error, so locking
+                # them first forfeits exactly the adaptation they need most.
+                # Smallest-first snaps near-zero weights to the zero code
+                # (negligible error) and keeps the accuracy-critical large
+                # weights live until the final event.
+                thr = jnp.quantile(flat, fraction)
+                cand = (jnp.abs(m) <= thr).astype(jnp.float32)
+                new_mask = jnp.maximum(mask, cand)
+                qt = quantize_weights(
+                    m, p.w_bits, p.group_size, p.filter_size,
+                    p.refit_scale, fmt=p.fmt, scales=jnp.abs(sc),
+                )
+                deq = dequantize_weights(qt)
+                new_w = jnp.where(new_mask > 0, deq, m)
+                return new_w, new_mask
+
+            new_w, new_mask = _map_site(
+                adv_one, w, node["inq_mask"], node["inq_scales"]
+            )
+            out["w"] = new_w.astype(node["w"].dtype)
+            out["inq_mask"] = new_mask
+            return out
+        return {k: walk(v, site_subpath(path, k)) for k, v in node.items()}
+
+    return walk(params, "")

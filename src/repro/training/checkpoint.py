@@ -360,6 +360,7 @@ def save(
     extra: Optional[Dict] = None,
     plan: Any = None,
     shardings: Any = None,
+    quant_state: Optional[Dict] = None,
 ) -> str:
     """Atomically persist ``tree`` at ``step``. Returns the final directory.
 
@@ -367,7 +368,11 @@ def save(
     by a registered codec (QTensors) go to ``nodes`` as payload files plus
     static metadata.  ``plan`` (a ``repro.quant.QuantPlan`` or its JSON
     string) is written to ``quant_plan.json`` and checksummed under the
-    manifest's ``quant_plan`` section.  ``shardings`` (a matching pytree of
+    manifest's ``quant_plan`` section.  ``quant_state`` (a JSON-serializable
+    schedule record, e.g. ``repro.quant.QuantState.to_meta()``) rides in the
+    manifest's ``quant_state`` section so a mid-schedule TTQ/INQ resume is
+    bit-faithful -- the state *arrays* live inside ``tree`` like any other
+    leaf.  ``shardings`` (a matching pytree of
     NamedSharding; codec leaves may carry per-field shardings, e.g. a
     QTensor of shardings from ``repro.parallel.qtensor_shardings``) switches
     split payloads to the per-shard layout (module docstring).
@@ -384,6 +389,7 @@ def save(
         "arrays": {},
         "nodes": {},
         "quant_plan": None,
+        "quant_state": quant_state,
         "extra": extra or {},
     }
     shard_by_name: Dict[str, Any] = (
@@ -723,6 +729,17 @@ def load_plan(d: str, manifest: Optional[Dict] = None):
 
     with open(os.path.join(d, qp["file"])) as f:
         return QuantPlan.from_json(f.read())
+
+
+def load_quant_state(d: str, manifest: Optional[Dict] = None) -> Optional[Dict]:
+    """The checkpoint's quantization-schedule record (``quant_state``
+    manifest section; None if it carries none).  Returns the raw meta dict
+    -- rebuild with ``repro.quant.QuantState.from_meta``."""
+    if manifest is None:
+        manifest = _verify(d)
+    if manifest is None:
+        raise IOError(f"checkpoint {d} missing or corrupt")
+    return manifest.get("quant_state")
 
 
 def load_manifest(d: str) -> Dict[str, Any]:

@@ -12,6 +12,17 @@ domain both mantissas are proportional to |g|, so whenever sqrt(v) rounds
 to zero the matching m does too and the update stays bounded.
 
 QTensor (PTQ) leaves and integer leaves are not trainable and are skipped.
+
+Quantization-state leaves (repro.quant.state) get special treatment by leaf
+name: ``ttq_scales`` / ``inq_scales`` are trainable grids excluded from
+weight decay (decay would shrink the learned grid toward zero) that keep
+f32 moments even under ``state_bits=8`` (a per-site scale table is tiny --
+DFP-8 moments would save nothing and cost precision on exactly the most
+sensitive parameters); ``inq_mask`` is frozen bookkeeping (no moments, no
+update); and a ``w`` whose site carries an ``inq_mask`` has the masked
+coordinates pinned inside ``apply_updates`` -- weight decay and moment
+debiasing cannot move a frozen coordinate even though its gradient is
+already zeroed by the STE.
 """
 from __future__ import annotations
 
@@ -50,6 +61,22 @@ def _trainable(leaf) -> bool:
     return hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating)
 
 
+# Quantization-state leaf names (see repro/quant/state.py).  Matched by leaf
+# key so the optimizer needs no plan or registry access.
+SCALE_KEYS = ("ttq_scales", "inq_scales")  # trainable grids: no weight
+# decay, f32 moments even under state_bits=8
+FROZEN_KEYS = ("inq_mask",)  # never updated
+MASK_KEY = "inq_mask"  # pins its sibling "w"'s frozen coordinates
+
+
+def _leaf_name(path) -> str:
+    """Last dict key on a tree_util key path ('' for non-dict entries)."""
+    if not path:
+        return ""
+    last = path[-1]
+    return str(getattr(last, "key", ""))
+
+
 def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Per-row 8-bit DFP (exponent shared over the last axis)."""
     axis = (x.ndim - 1,) if x.ndim else None
@@ -71,19 +98,21 @@ def _dq8_sqrt(q: jax.Array, e: jax.Array) -> jax.Array:
 
 
 def init_state(params: Any, cfg: OptConfig) -> Dict[str, Any]:
-    def zero_moment(leaf):
-        if not _trainable(leaf):
+    def zero_moment(path, leaf):
+        name = _leaf_name(path)
+        if not _trainable(leaf) or name in FROZEN_KEYS:
             return None
         z = jnp.zeros(leaf.shape, jnp.float32)
-        if cfg.state_bits == 8:
+        if cfg.state_bits == 8 and name not in SCALE_KEYS:
             q, e = _q8(z)
             return {"q": q, "e": e}
         return z
 
+    zm = jax.tree_util.tree_map_with_path(zero_moment, params)
     return {
         "step": jnp.zeros((), jnp.int32),
-        "m": jax.tree.map(zero_moment, params),
-        "v": jax.tree.map(zero_moment, params),  # sqrt-domain when 8-bit
+        "m": zm,
+        "v": jax.tree_util.tree_map_with_path(zero_moment, params),
     }
 
 
@@ -104,29 +133,48 @@ def apply_updates(
 
     is_entry = lambda n: isinstance(n, dict) and set(n) == {"q", "e"}
 
-    def upd(p, g, m, v):
-        if not _trainable(p) or g is None:
+    def upd(name, p, g, m, v, mask):
+        if not _trainable(p) or g is None or m is None:
             return p, m, v
         g = g.astype(jnp.float32) * clip
-        mf = _dq8(m["q"], m["e"]) if cfg.state_bits == 8 else m
-        vf = _dq8_sqrt(v["q"], v["e"]) if cfg.state_bits == 8 else v
+        q8 = is_entry(m)  # scale leaves keep f32 moments under state_bits=8
+        mf = _dq8(m["q"], m["e"]) if q8 else m
+        vf = _dq8_sqrt(v["q"], v["e"]) if q8 else v
         mf = cfg.b1 * mf + (1 - cfg.b1) * g
         vf = cfg.b2 * vf + (1 - cfg.b2) * jnp.square(g)
         mh = mf / b1c
         vh = vf / b2c
         pf = p.astype(jnp.float32)
-        new_p = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * pf)
-        if cfg.state_bits == 8:
+        wd = 0.0 if name in SCALE_KEYS else cfg.weight_decay
+        new_p = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + wd * pf)
+        if mask is not None:  # INQ: frozen coordinates do not move, ever
+            new_p = jnp.where(mask > 0, pf, new_p)
+        if q8:
             mq, me = _q8(mf)
             vq, ve = _q8_sqrt(vf)
             return new_p.astype(p.dtype), {"q": mq, "e": me}, {"q": vq, "e": ve}
         return new_p.astype(p.dtype), mf, vf
 
-    flat_p, treedef = jax.tree.flatten(params)
+    flat_pp, treedef = jax.tree_util.tree_flatten_with_path(params)
+    paths = [kp for kp, _ in flat_pp]
+    flat_p = [leaf for _, leaf in flat_pp]
+    names = [_leaf_name(kp) for kp in paths]
+    # site-level mask lookup: a "w" whose parent node carries an inq_mask
+    masks = {
+        kp[:-1]: leaf for kp, leaf, nm in zip(paths, flat_p, names)
+        if nm == MASK_KEY
+    }
+    mask_for = [
+        masks.get(kp[:-1]) if nm == "w" else None
+        for kp, nm in zip(paths, names)
+    ]
     flat_g = jax.tree.leaves(grads)
     flat_m = jax.tree.flatten(state["m"], is_leaf=lambda n: n is None or is_entry(n))[0]
     flat_v = jax.tree.flatten(state["v"], is_leaf=lambda n: n is None or is_entry(n))[0]
-    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    out = [
+        upd(nm, p, g, m, v, mk)
+        for nm, p, g, m, v, mk in zip(names, flat_p, flat_g, flat_m, flat_v, mask_for)
+    ]
     new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
     new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
     new_v = jax.tree.unflatten(treedef, [o[2] for o in out])

@@ -94,24 +94,49 @@ class Trainer:
         param_shardings=None,
         batch_shardings_fn: Optional[Callable] = None,
         plan=None,  # compiled repro.quant.QuantPlan (QAT runs under one)
+        quant_state=None,  # repro.quant.QuantState (TTQ/INQ schedule record)
     ):
         self.tcfg = tcfg
         self.mesh = mesh
         self.plan = plan
+        self.quant_state = quant_state
         # own the param buffers: the jitted step donates its inputs, so a
         # caller-shared pytree must not be destroyed under the caller
         self.params = jax.tree.map(jnp.array, params)
         self.opt_state = opt_lib.init_state(params, tcfg.opt)
         self.step_count = 0
-        step = make_train_step(loss_fn, tcfg)
+        self.sync_count = 0  # host syncs issued by train() (metrics flushes)
+        self._param_shardings = param_shardings
         if mesh is not None and param_shardings is not None:
-            opt_sh = jax.tree.map(
-                lambda _: None, self.opt_state
-            )  # let XLA choose consistent opt shardings
-            self._step = jax.jit(step, donate_argnums=(0, 1))
+            # place the params per the declared shardings and pin them as
+            # the step's in/out shardings; opt state and metrics are left
+            # for XLA to lay out consistently with the params it sees
+            full_sh = self._aligned_shardings()
+            self.params = jax.device_put(self.params, full_sh)
+            self._jit_kwargs = dict(
+                donate_argnums=(0, 1),
+                in_shardings=(full_sh, None, None),
+                out_shardings=(full_sh, None, None),
+            )
         else:
-            self._step = jax.jit(step, donate_argnums=(0, 1))
+            self._jit_kwargs = dict(donate_argnums=(0, 1))
+        self._step = jax.jit(make_train_step(loss_fn, tcfg), **self._jit_kwargs)
         self._batch_shardings_fn = batch_shardings_fn
+
+    def _aligned_shardings(self):
+        """``param_shardings`` aligned leaf-by-leaf to ``self.params``: any
+        leaf the caller's sharding tree does not cover (e.g. injected
+        quantization-state leaves) is replicated."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        flat = jax.tree_util.tree_flatten_with_path(self._param_shardings)[0]
+        by_path = {kp: s for kp, s in flat}
+        rep = NamedSharding(self.mesh, PartitionSpec())
+
+        def pick(kp, leaf):
+            return by_path.get(kp, rep)
+
+        return jax.tree_util.tree_map_with_path(pick, self.params)
 
     def maybe_restore(self) -> int:
         """Resume from the newest intact checkpoint, plan included.
@@ -137,40 +162,91 @@ class Trainer:
             )
             if restored_plan is not None:
                 self.plan = restored_plan
+            qs_meta = ckpt_lib.load_quant_state(
+                ckpt_lib.step_dir(self.tcfg.ckpt_dir, step), manifest=manifest
+            )
+            if qs_meta is not None:
+                from repro.quant.state import QuantState
+
+                self.quant_state = QuantState.from_meta(qs_meta)
         return self.step_count
 
     def rebind_loss(self, loss_fn: Callable) -> None:
         """Rebuild the jitted step around a new loss closure (e.g. one bound
         to the plan ``maybe_restore`` recovered from the checkpoint)."""
         self._step = jax.jit(
-            make_train_step(loss_fn, self.tcfg), donate_argnums=(0, 1)
+            make_train_step(loss_fn, self.tcfg), **self._jit_kwargs
         )
+
+    def _maybe_advance_quant(self, i: int) -> None:
+        """Fire any INQ schedule events due at step ``i`` (before the step
+        runs): grow the frozen partition, snap it onto the current learned
+        grid, and advance the resume cursor.  TTQ needs no schedule -- its
+        scales train every step."""
+        qs = self.quant_state
+        if qs is None or qs.method != "inq" or self.plan is None:
+            return
+        from repro.quant import state as state_lib
+
+        events = state_lib.inq_event_steps(qs.total_steps, qs.fractions)
+        pos = qs.pos
+        while pos < len(events) and i >= events[pos]:
+            self.params = state_lib.advance_inq(
+                self.params, self.plan, qs.fractions[pos]
+            )
+            pos += 1
+        if pos != qs.pos:
+            self.quant_state = dataclasses.replace(qs, pos=pos)
+
+    def _save_ckpt(self, step: int) -> None:
+        ckpt_lib.save(
+            self.tcfg.ckpt_dir,
+            step,
+            {"params": self.params, "opt": self.opt_state},
+            plan=self.plan,
+            quant_state=(
+                self.quant_state.to_meta() if self.quant_state is not None
+                else None
+            ),
+        )
+        ckpt_lib.retain(self.tcfg.ckpt_dir, self.tcfg.keep)
 
     def train(
         self, batch_fn: Callable[[int], Any], num_steps: int
     ) -> Dict[str, list]:
         history: Dict[str, list] = {"loss": [], "step": [], "wall": []}
         t0 = time.time()
+        pending: list = []  # (step idx, on-device metrics) awaiting one sync
+
+        def flush():
+            # ONE host transfer for the whole pending window -- the loop
+            # itself never blocks on a per-step float() materialization
+            if not pending:
+                return
+            vals = jax.device_get([m for _, m in pending])
+            self.sync_count += 1
+            wall = time.time() - t0
+            for (idx, _), m in zip(pending, vals):
+                history["loss"].append(float(m["loss"]))
+                history["step"].append(idx)
+                history["wall"].append(wall)
+            pending.clear()
+
         for i in range(self.step_count, self.step_count + num_steps):
+            self._maybe_advance_quant(i)
             batch = batch_fn(i)
             if self._batch_shardings_fn is not None:
                 batch = jax.device_put(batch, self._batch_shardings_fn(batch))
             self.params, self.opt_state, metrics = self._step(
                 self.params, self.opt_state, batch
             )
-            history["loss"].append(float(metrics["loss"]))
-            history["step"].append(i)
-            history["wall"].append(time.time() - t0)
+            pending.append((i, metrics))
             if (
                 self.tcfg.ckpt_dir
                 and (i + 1) % self.tcfg.ckpt_every == 0
             ):
-                ckpt_lib.save(
-                    self.tcfg.ckpt_dir,
-                    i + 1,
-                    {"params": self.params, "opt": self.opt_state},
-                    plan=self.plan,
-                )
-                ckpt_lib.retain(self.tcfg.ckpt_dir, self.tcfg.keep)
+                flush()
+                self._save_ckpt(i + 1)
+        flush()
         self.step_count += num_steps
         return history

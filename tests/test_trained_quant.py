@@ -1,0 +1,411 @@
+"""Trainable quantization state: STE gradients (act clip, TTQ, learned-grid
+INQ), optimizer special-casing, mid-schedule resume, and the learned-grid
+end-to-end deployment parity proofs (docs/TRAINING.md)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import QuantConfig
+from repro.core import ste
+from repro.models import build_model, quantize_and_plan, save_servable
+from repro.quant import (
+    QTensor,
+    QuantState,
+    dequantize_scales,
+    dequantize_weights,
+    init_quant_state,
+    inq_event_steps,
+    quantize_scales,
+    quantize_weights,
+    ttq_partition,
+)
+from repro.serving import Request, ServingEngine
+from repro.training import OptConfig, TrainConfig, Trainer, init_state
+from repro.training import optimizer as opt_lib
+from repro.training.data import DataConfig, make_batch
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -- act_ste -----------------------------------------------------------------
+def test_act_ste_static_exponent_clips_gradient():
+    """With a calibrated static exponent the clip is real: identity gradient
+    inside the representable range, zero outside."""
+    from repro.core import dfp
+
+    e = -4
+    r = float(dfp.qmax(8) * dfp.exp2i(jnp.asarray(e)))
+    x = jnp.asarray([-2 * r, -0.5 * r, 0.0, 0.5 * r, 2 * r], jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(ste.act_ste(x, 8, exponent=e)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+    # dynamic exponent: the range is fit to max|x| every call, so interior
+    # values never see the clip
+    x2 = jnp.asarray([-1.0, -0.3, 0.0, 0.3, 1.0], jnp.float32)
+    gd = jax.grad(lambda x: jnp.sum(ste.act_ste(x, 8)))(x2)
+    np.testing.assert_array_equal(np.asarray(gd), np.ones(5))
+
+
+# -- ternary fmt threading ---------------------------------------------------
+def test_ternary_weights_ste_threads_fmt():
+    """``fmt`` reaches the registry: the ttq format's threshold-partition
+    codes differ from Algorithm-1 codes, and the fake-quant forward must
+    match the PTQ grid of the SAME format."""
+    w = jax.random.normal(KEY, (32, 8)) * 0.1
+    default = ste.ternary_weights_ste(w, 16)
+    via_fmt = ste.ternary_weights_ste(w, 16, fmt="ttq")
+    assert not np.allclose(np.asarray(default), np.asarray(via_fmt))
+    ptq = dequantize_weights(quantize_weights(w, 2, 16, 1, False, fmt="ttq"))
+    np.testing.assert_array_equal(np.asarray(via_fmt), np.asarray(ptq))
+
+
+# -- TTQ STE -----------------------------------------------------------------
+def test_ttq_ste_backward_matches_analytic_rule():
+    """dWp = sum of output grads over the positive partition, dWn = -sum
+    over the negative partition (chained through sign); latent grads are
+    scale-amplified on the partitions and identity in the deadzone."""
+    g_size = 8
+    w = jax.random.normal(KEY, (16, 4)) * 0.1
+    wpn = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (2, 2, 4))) + 0.1
+    u = jax.random.normal(jax.random.PRNGKey(2), (16, 4))
+
+    dw, dwpn = jax.grad(
+        lambda w, s: jnp.sum(ste.ttq_ste(w, s, g_size) * u), argnums=(0, 1)
+    )(w, wpn)
+
+    codes = np.asarray(ttq_partition(w, g_size), np.float32)
+    pos, neg = (codes > 0), (codes < 0)
+    ub = np.asarray(u).reshape(2, g_size, 4)
+    dwp_ref = np.sum(ub * pos.reshape(2, g_size, 4), axis=1)
+    dwn_ref = -np.sum(ub * neg.reshape(2, g_size, 4), axis=1)
+    np.testing.assert_allclose(np.asarray(dwpn[0]), dwp_ref, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(dwpn[1]), dwn_ref, atol=1e-6)
+    # deadzone latent grad is identity
+    dead = ~(pos | neg)
+    np.testing.assert_allclose(
+        np.asarray(dw)[dead], np.asarray(u)[dead], atol=1e-6
+    )
+
+
+# -- learned-grid INQ STE ----------------------------------------------------
+def _grid_from_fit(w, bits, g):
+    qt = quantize_weights(w, bits, g, 1, False)
+    return dequantize_scales(qt.scale_m, qt.scale_e)
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_inq_ste_matches_deployment_grid(bits):
+    """Forward == quantize-then-dequantize on the |s| grid, for the exact
+    path ``quantize_params`` deploys through."""
+    w = jax.random.normal(KEY, (32, 8)) * 0.1
+    s = _grid_from_fit(w, bits, 16) * 1.07  # drift off the fit
+    mask = (jnp.abs(w) < 0.03).astype(jnp.float32)
+    wq = ste.inq_ste(w, mask, s, bits, 16)
+    deq = dequantize_weights(
+        quantize_weights(w, bits, 16, 1, False, scales=jnp.abs(s))
+    )
+    np.testing.assert_array_equal(np.asarray(wq), np.asarray(deq))
+
+
+def test_inq_ste_gradients():
+    """Frozen coords get zero weight grad, live get identity; the scale
+    grad is the code-weighted gradient sum over ALL cluster coords."""
+    g_size = 8
+    w = jax.random.normal(KEY, (16, 4)) * 0.1
+    s = _grid_from_fit(w, 2, g_size)
+    mask = (jnp.abs(w) < 0.05).astype(jnp.float32)
+    u = jax.random.normal(jax.random.PRNGKey(3), (16, 4))
+
+    dw, dm, ds = jax.grad(
+        lambda w, m, s: jnp.sum(ste.inq_ste(w, m, s, 2, g_size) * u),
+        argnums=(0, 1, 2),
+    )(w, mask, s)
+
+    np.testing.assert_array_equal(np.asarray(dw * mask), np.zeros((16, 4)))
+    np.testing.assert_allclose(
+        np.asarray(dw), np.asarray(u * (1 - mask)), atol=1e-6
+    )
+    np.testing.assert_array_equal(np.asarray(dm), np.zeros((16, 4)))
+    sq = dequantize_scales(*quantize_scales(jnp.abs(s)))
+    codes = np.asarray(ste.inq_ste(w, mask, s, 2, g_size)).reshape(
+        2, g_size, 4
+    ) / np.where(np.asarray(sq) > 0, np.asarray(sq), 1.0)[:, None, :]
+    ds_ref = np.sum(np.asarray(u).reshape(2, g_size, 4) * codes, axis=1)
+    np.testing.assert_allclose(np.asarray(ds), ds_ref, atol=1e-5)
+
+
+# -- optimizer special-casing ------------------------------------------------
+def test_scale_leaves_f32_moments_and_no_decay():
+    """ttq_scales / inq_scales keep f32 moments under state_bits=8 and are
+    excluded from weight decay; inq_mask gets no moments at all."""
+    params = {
+        "a": {"w": jnp.ones((8, 4)), "ttq_scales": jnp.ones((2, 1, 4))},
+        "b": {"w": jnp.ones((8, 4)), "inq_mask": jnp.zeros((8, 4)),
+              "inq_scales": jnp.ones((1, 4))},
+    }
+    cfg = OptConfig(lr=0.0, warmup_steps=0, weight_decay=0.1, state_bits=8)
+    state = init_state(params, cfg)
+    assert isinstance(state["m"]["a"]["w"], dict)  # DFP-8 entry
+    assert isinstance(state["m"]["a"]["ttq_scales"], jnp.ndarray)  # f32
+    assert isinstance(state["m"]["b"]["inq_scales"], jnp.ndarray)  # f32
+    assert state["m"]["b"]["inq_mask"] is None  # not trainable
+
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    cfg_lr = dataclasses.replace(cfg, lr=0.5)
+    new_p, _, _ = opt_lib.apply_updates(params, zero_g, state, cfg_lr)
+    # decay moved the weights but not the scale leaves or the mask
+    assert float(jnp.max(jnp.abs(new_p["a"]["w"] - 1.0))) > 0
+    np.testing.assert_array_equal(np.asarray(new_p["a"]["ttq_scales"]),
+                                  np.ones((2, 1, 4)))
+    np.testing.assert_array_equal(np.asarray(new_p["b"]["inq_scales"]),
+                                  np.ones((1, 4)))
+    np.testing.assert_array_equal(np.asarray(new_p["b"]["inq_mask"]),
+                                  np.zeros((8, 4)))
+
+
+@pytest.mark.parametrize("state_bits", [32, 8])
+def test_inq_frozen_coords_pinned_through_updates(state_bits):
+    """Frozen coordinates are BIT-identical after an optimizer step with
+    nonzero gradients AND nonzero weight decay -- neither decay nor moment
+    debiasing (nor DFP-8 moment noise) can move them."""
+    w = jax.random.normal(KEY, (16, 4))
+    mask = (jnp.abs(w) < 0.5).astype(jnp.float32)
+    assert 0 < float(mask.sum()) < mask.size
+    params = {"site": {"w": w, "inq_mask": mask, "inq_scales": jnp.ones((2, 4))}}
+    grads = {
+        "site": {
+            "w": jnp.ones_like(w),  # nonzero even on frozen coords
+            "inq_mask": jnp.zeros_like(mask),
+            "inq_scales": jnp.full((2, 4), 0.1),
+        }
+    }
+    cfg = OptConfig(lr=0.1, warmup_steps=0, weight_decay=0.1,
+                    state_bits=state_bits)
+    state = init_state(params, cfg)
+    new_p, _, _ = opt_lib.apply_updates(params, grads, state, cfg)
+    frozen = np.asarray(mask) > 0
+    np.testing.assert_array_equal(
+        np.asarray(new_p["site"]["w"])[frozen], np.asarray(w)[frozen]
+    )
+    live = ~frozen
+    assert np.all(np.asarray(new_p["site"]["w"])[live] != np.asarray(w)[live])
+    # the trainable grid moved too
+    assert np.all(np.asarray(new_p["site"]["inq_scales"]) != 1.0)
+
+
+# -- schedule ----------------------------------------------------------------
+def test_inq_event_steps_fraction_matched_and_clamped():
+    assert inq_event_steps(120, (0.5, 0.75, 0.875, 1.0)) == (60, 90, 105, 119)
+    assert inq_event_steps(8, (0.5, 1.0)) == (4, 7)
+    assert inq_event_steps(0, (1.0,)) == (0,)
+
+
+# -- trainer: host syncs, sharding, mid-schedule resume ----------------------
+def _tiny_qat(arch="phi4-mini-3.8b", method=None, steps=8, fractions=None):
+    qc = QuantConfig(w_bits=2, group_size=16, mode="qat",
+                     fmt="ttq" if method == "ttq" else None)
+    cfg = configs.get_smoke(arch, qc)
+    api = build_model(cfg)
+    params = api.init(KEY)
+    api = api.compiled(params)
+    qs = None
+    if method is not None:
+        kw = {"fractions": fractions} if fractions else {}
+        params, qs = init_quant_state(
+            params, api.ctx.plan, method, total_steps=steps, **kw
+        )
+    return cfg, api, params, qs
+
+
+def test_train_defers_host_syncs():
+    """The loop never materializes per-step metrics: one flush (one host
+    sync) for an uncheckpointed run, one per checkpoint interval else."""
+    cfg, api, params, _ = _tiny_qat()
+    d = DataConfig(batch=2, seq=16)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-4, warmup_steps=0))
+    tr = Trainer(api.train_loss, params, tcfg)
+    hist = tr.train(lambda i: make_batch(cfg, d, i), 5)
+    assert tr.sync_count == 1
+    assert len(hist["loss"]) == 5 and hist["step"] == list(range(5))
+
+    tr2 = Trainer(api.train_loss, params, tcfg)
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        tr2.tcfg = dataclasses.replace(tcfg, ckpt_dir=ckdir, ckpt_every=2)
+        hist2 = tr2.train(lambda i: make_batch(cfg, d, i), 4)
+    assert tr2.sync_count == 2  # one per checkpoint; final flush is empty
+    assert len(hist2["loss"]) == 4
+
+
+def test_trainer_honors_param_shardings_with_state_leaves():
+    """Caller shardings cover the plain params; injected state leaves fall
+    back to replicated -- the step still compiles and runs."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+    cfg, api, params, qs = _tiny_qat(method="inq", steps=4,
+                                     fractions=(0.5, 1.0))
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("dp",))
+    rep = NamedSharding(mesh, PartitionSpec())
+    from repro.quant import strip_quant_state
+
+    shardings = jax.tree.map(lambda _: rep, strip_quant_state(params))
+    tr = Trainer(api.train_loss, params, TrainConfig(
+        opt=OptConfig(lr=1e-4, warmup_steps=0)),
+        mesh=mesh, param_shardings=shardings, plan=api.ctx.plan,
+        quant_state=qs)
+    for leaf in jax.tree.leaves(tr.params):
+        assert isinstance(leaf.sharding, NamedSharding)
+    hist = tr.train(lambda i: make_batch(cfg, DataConfig(batch=2, seq=16), i), 4)
+    assert len(hist["loss"]) == 4 and np.isfinite(hist["loss"]).all()
+
+
+def test_inq_mid_schedule_resume_bit_identical(tmp_path):
+    """Crash between INQ events, restore, finish == uninterrupted run, bit
+    for bit (params, masks, learned grid, and the schedule cursor)."""
+    steps, fr = 8, (0.5, 1.0)  # events at 4 and 7
+    cfg, api, params, qs = _tiny_qat(method="inq", steps=steps, fractions=fr)
+    d = DataConfig(batch=2, seq=16)
+    batch_fn = lambda i: make_batch(cfg, d, i)
+
+    def tcfg(ckdir):
+        return TrainConfig(opt=OptConfig(lr=1e-4, warmup_steps=0),
+                           ckpt_dir=str(ckdir), ckpt_every=4)
+
+    d1, d2 = tmp_path / "straight", tmp_path / "interrupted"
+    t_s = Trainer(api.train_loss, params, tcfg(d1), plan=api.ctx.plan,
+                  quant_state=qs)
+    h1 = t_s.train(batch_fn, steps)
+    assert t_s.quant_state.pos == len(fr)  # both events fired
+
+    t_a = Trainer(api.train_loss, params, tcfg(d2), plan=api.ctx.plan,
+                  quant_state=qs)
+    t_a.train(batch_fn, 4)  # checkpoint lands at step 4, BEFORE event 1
+    t_b = Trainer(api.train_loss, params, tcfg(d2), plan=api.ctx.plan)
+    assert t_b.maybe_restore() == 4
+    assert t_b.quant_state == QuantState("inq", fr, 0, steps)
+    h2 = t_b.train(batch_fn, 4)
+
+    np.testing.assert_array_equal(h1["loss"][4:], h2["loss"])
+    fa = jax.tree_util.tree_flatten_with_path(t_s.params)[0]
+    fb = jax.tree_util.tree_flatten_with_path(t_b.params)[0]
+    assert [p for p, _ in fa] == [p for p, _ in fb]
+    for (path, la), (_, lb) in zip(fa, fb):
+        assert np.array_equal(np.asarray(la), np.asarray(lb)), path
+
+
+# -- end-to-end deployment parity --------------------------------------------
+def _find_state_sites(params, qparams, state_key):
+    """(path, state_leaf, master_w, QTensor) tuples at matching paths."""
+    out = []
+
+    def walk(a, b, path):
+        if isinstance(a, dict):
+            if state_key in a and isinstance(b.get("w"), QTensor):
+                out.append((path, a[state_key], a["w"], b["w"]))
+            for k in a:
+                if k in (b or {}):
+                    walk(a[k], b[k], f"{path}/{k}" if path else k)
+
+    walk(params, qparams, "")
+    assert out, f"no {state_key} site found"
+    return out
+
+
+def _deq_stacked(qt, extra_axes):
+    f = dequantize_weights
+    for _ in range(extra_axes):
+        f = jax.vmap(f)
+    return f(qt)
+
+
+def test_ttq_artifact_deploys_learned_scales_never_refit(tmp_path):
+    """The artifact's scale table is quantize_scales(|wpn|) -- the trained
+    magnitudes, NOT an Algorithm-1 re-fit -- and its dequantized weights
+    equal the last training forward (ttq_ste) bit for bit; a cold-started
+    engine serves the same tokens as the in-memory tree."""
+    cfg, api, params, _qs = _tiny_qat(arch="qwen3-8b", method="ttq")
+
+    # drift the scales off their init so a silent re-fit cannot pass
+    def drift(node):
+        if isinstance(node, dict):
+            return {k: drift(v) if k != "ttq_scales" else v * 1.1
+                    for k, v in node.items()}
+        return node
+
+    params = drift(params)
+    qparams, plan, qapi = quantize_and_plan(api, params)
+
+    for _path, wpn, w, qt in _find_state_sites(params, qparams, "ttq_scales"):
+        wpn2, w2, qt_sm = (np.asarray(wpn), np.asarray(w),
+                           np.asarray(qt.scale_m))
+        if wpn2.ndim == 4:  # stacked blocks: check layer 0
+            wpn2, w2, qt_sm = wpn2[0], w2[0], qt_sm[0]
+        g2, n = wpn2.shape[1], wpn2.shape[2]
+        oracle_m, _ = quantize_scales(
+            jnp.abs(jnp.asarray(wpn2)).reshape(2 * g2, n)
+        )
+        np.testing.assert_array_equal(qt_sm, np.asarray(oracle_m))
+        refit = quantize_weights(
+            jnp.asarray(w2, jnp.float32), 2, w2.shape[0] // g2, 1, False,
+            fmt="ttq",
+        )
+        assert not np.array_equal(qt_sm, np.asarray(refit.scale_m))
+
+    # dequantized artifact weights == the ttq_ste training forward
+    _path, wpn, w, qt = _find_state_sites(params, qparams, "ttq_scales")[0]
+    g_size = w.shape[-2] // wpn.shape[-2]
+    fwd = ste.ttq_ste
+    for _ in range(w.ndim - 2):
+        fwd = jax.vmap(fwd, in_axes=(0, 0, None))
+    np.testing.assert_array_equal(
+        np.asarray(_deq_stacked(qt, w.ndim - 2)),
+        np.asarray(fwd(w.astype(jnp.float32), wpn, g_size)),
+    )
+
+    save_servable(str(tmp_path), qapi, qparams, plan)
+
+    def tokens(eng):
+        eng.submit(Request(uid=0, prompt=[5, 9, 2], max_new_tokens=4))
+        return eng.run()[0].output
+
+    warm = tokens(ServingEngine(qapi, qparams, n_slots=2, max_len=16))
+    cold = tokens(ServingEngine.from_artifact(str(tmp_path), n_slots=2,
+                                              max_len=16))
+    assert warm == cold
+
+
+def test_inq_artifact_matches_training_forward():
+    """After events + scale drift, quantize_params deploys on the learned
+    grid: dequantized artifact weights == the inq_ste training forward."""
+    from repro.quant import advance_inq
+
+    cfg, api, params, qs = _tiny_qat(arch="qwen3-8b", method="inq", steps=4,
+                                     fractions=(0.5, 1.0))
+    params = advance_inq(params, api.ctx.plan, 0.5)
+
+    def drift(node):
+        if isinstance(node, dict):
+            return {k: drift(v) if k != "inq_scales" else v * 1.05
+                    for k, v in node.items()}
+        return node
+
+    params = drift(params)
+    qparams, plan, _qapi = quantize_and_plan(api, params)
+    for path, s, w, qt in _find_state_sites(params, qparams, "inq_scales"):
+        prec = plan.resolve(path)  # paper overrides keep some sites at 8b
+        mask = jnp.zeros(w.shape, jnp.float32)  # mask is forward-irrelevant
+        fwd = ste.inq_ste
+        for _ in range(w.ndim - 2):
+            fwd = jax.vmap(fwd, in_axes=(0, 0, 0, None, None))
+        np.testing.assert_array_equal(
+            np.asarray(_deq_stacked(qt, w.ndim - 2)),
+            np.asarray(
+                fwd(w.astype(jnp.float32), mask, s, prec.w_bits,
+                    prec.group_size)
+            ),
+            err_msg=path,
+        )
